@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks.
+
+On CPU the Pallas kernels run in interpret mode (not representative of TPU),
+so the timed numbers here are for the XLA reference implementations — the
+derived column carries the kernel's roofline-relevant counters (bytes moved,
+FLOPs, arithmetic intensity) that transfer to TPU.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, repeats=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> List[dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    n, d = 4096, 1024
+    x = jax.random.normal(key, (n, d), jnp.bfloat16)
+    xp = jax.random.normal(jax.random.fold_in(key, 1), (n, d), jnp.bfloat16)
+    f = jax.jit(ref.saliency_delta)
+    dt = _time(f, x, xp)
+    bytes_moved = 2 * n * d * 2
+    rows.append({"name": "kernel/saliency_delta(4096x1024)",
+                 "us_per_call": dt * 1e6,
+                 "derived": f"bytes={bytes_moved} fused_passes=1_of_3"})
+
+    m, dd, ff = 2048, 1024, 1024
+    xx = jax.random.normal(key, (m, dd), jnp.bfloat16)
+    w = jax.random.normal(key, (dd, ff), jnp.bfloat16) * 0.02
+    b = jnp.zeros((ff,), jnp.bfloat16)
+    prev = jax.random.normal(key, (m, ff), jnp.bfloat16)
+    f = jax.jit(lambda *a: ref.linear_blend(*a, 0.5))
+    dt = _time(f, xx, w, b, prev)
+    flops = 2 * m * dd * ff
+    rows.append({"name": "kernel/linear_blend(2048x1024x1024)",
+                 "us_per_call": dt * 1e6,
+                 "derived": f"flops={flops} intensity="
+                            f"{flops/(2*(m*dd+dd*ff+2*m*ff)):.1f}"})
+
+    bb, h, kvh, s, dh = 1, 8, 2, 2048, 64
+    q = jax.random.normal(key, (bb, h, s, dh), jnp.bfloat16)
+    k = jax.random.normal(key, (bb, kvh, s, dh), jnp.bfloat16)
+    v = jax.random.normal(key, (bb, kvh, s, dh), jnp.bfloat16)
+    f = jax.jit(lambda *a: ref.flash_attention(*a, causal=True))
+    dt = _time(f, q, k, v)
+    flops = 4 * bb * h * s * s * dh // 2
+    rows.append({"name": "kernel/flash_attention(8hx2048x64,causal)",
+                 "us_per_call": dt * 1e6,
+                 "derived": f"useful_flops={flops}"})
+
+    hwin = jax.random.normal(key, (64, 16, 256), jnp.bfloat16)
+    f = jax.jit(lambda a: ref.knn_density(a, 5))
+    dt = _time(f, hwin)
+    rows.append({"name": "kernel/knn_density(64x16x256,K=5)",
+                 "us_per_call": dt * 1e6,
+                 "derived": "window=16 local_ctm_stage=1"})
+    return rows

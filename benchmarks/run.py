@@ -1,0 +1,57 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout) — reduced-scale CPU
+measurements for the paper's tables plus the roofline report derived from the
+production-mesh dry-run artifacts (experiments/dryrun/).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = {
+    "table1": ("benchmarks.table1_policies", "Table 1/12: policy comparison"),
+    "table2": ("benchmarks.table2_ablation", "Table 2/9: STR/SC/MB ablation"),
+    "table5": ("benchmarks.table5_static_ratio",
+               "Table 5/Fig 1: static-ratio under motion"),
+    "table6": ("benchmarks.table6_thresholds",
+               "Table 6/Fig 3: threshold robustness"),
+    "table15": ("benchmarks.table15_knn", "Table 15: token-merge kNN K"),
+    "decode_gate": ("benchmarks.decode_gate",
+                    "Beyond-paper: AR-decode statistical gate"),
+    "kernels": ("benchmarks.kernels_bench", "Kernel microbenchmarks"),
+    "roofline": ("benchmarks.roofline", "Roofline from dry-run artifacts"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite names (default: all)")
+    args = ap.parse_args()
+    picked = [s.strip() for s in args.only.split(",") if s.strip()] \
+        or list(SUITES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in picked:
+        mod_name, desc = SUITES[name]
+        print(f"# {name}: {desc}", file=sys.stderr, flush=True)
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            for row in mod.run():
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      f"\"{row['derived']}\"", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,\"ERROR: {type(e).__name__}: {e}\"", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Table 1 / Table 12: cache-policy comparison across DiT variants.
+
+Per (DiT variant x policy): sampling wall-time, per-step latency, block cache
+ratio, steps reused, and quality proxies vs the exact sampler.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import FastCacheConfig
+
+from benchmarks.common import (build_dit, frechet_proxy, rel_err,
+                               timed_sample)
+
+POLICIES = ("nocache", "teacache", "adacache", "fora", "fbcache",
+            "fastcache")
+
+
+def run(models=("dit-b2", "dit-xl2"), steps: int = 12) -> List[dict]:
+    rows = []
+    fc = FastCacheConfig()
+    for name in models:
+        cfg, model, params = build_dit(name)
+        ref, _ = timed_sample(model, params, fc, "nocache", steps=steps,
+                              repeats=1)
+        for policy in POLICIES:
+            x, st = timed_sample(model, params, fc, policy, steps=steps)
+            rows.append({
+                "name": f"table1/{name}/{policy}",
+                "us_per_call": st["us_per_step"],
+                "derived": (f"cache_ratio={st['block_cache_ratio']:.3f}"
+                            f" steps_reused={st['steps_reused']:.0f}"
+                            f" rel_err={rel_err(x, ref):.4f}"
+                            f" fid_proxy={frechet_proxy(x, ref):.4f}"),
+            })
+    return rows

@@ -1,0 +1,38 @@
+"""Paper Table 2 / Table 9: module ablation — STR (spatial token reduction),
+SC (statistical caching), MB (motion-aware blending)."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import FastCacheConfig
+
+from benchmarks.common import build_dit, frechet_proxy, rel_err, timed_sample
+
+COMBOS = [  # (STR, SC, MB) — same rows as the paper's Table 2
+    (False, False, False),
+    (True, False, True),
+    (False, True, True),
+    (True, True, False),
+    (True, True, True),
+]
+
+
+def run(model_name: str = "dit-l2", steps: int = 12) -> List[dict]:
+    cfg, model, params = build_dit(model_name)
+    ref, _ = timed_sample(model, params, FastCacheConfig(), "nocache",
+                          steps=steps, repeats=1)
+    rows = []
+    for use_str, use_sc, use_mb in COMBOS:
+        fc = FastCacheConfig(use_str=use_str, use_sc=use_sc, use_mb=use_mb)
+        policy = "fastcache" if (use_str or use_sc or use_mb) else "nocache"
+        x, st = timed_sample(model, params, fc, policy, steps=steps)
+        tag = "".join("SX"[not b] for b in (use_str, use_sc, use_mb))
+        rows.append({
+            "name": f"table2/{model_name}/STR={int(use_str)}"
+                    f"_SC={int(use_sc)}_MB={int(use_mb)}",
+            "us_per_call": st["us_per_step"],
+            "derived": (f"cache_ratio={st['block_cache_ratio']:.3f}"
+                        f" motion_frac={st['mean_motion_fraction']:.3f}"
+                        f" rel_err={rel_err(x, ref):.4f}"),
+        })
+    return rows

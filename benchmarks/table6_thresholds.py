@@ -1,0 +1,38 @@
+"""Paper Table 6 + Figure 3: threshold robustness — the alpha significance
+level (statistical gate) and tau_s (motion threshold) sweeps.  The paper's
+claim: cache ratio grows as alpha shrinks, FID degrades gracefully over
+alpha in [0.01, 0.1]."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import FastCacheConfig
+
+from benchmarks.common import build_dit, frechet_proxy, rel_err, timed_sample
+
+
+def run(model_name: str = "dit-b2", steps: int = 12) -> List[dict]:
+    cfg, model, params = build_dit(model_name)
+    ref, _ = timed_sample(model, params, FastCacheConfig(), "nocache",
+                          steps=steps, repeats=1)
+    rows = []
+    for alpha in (0.01, 0.05, 0.1, 0.3):
+        fc = FastCacheConfig(alpha=alpha)
+        x, st = timed_sample(model, params, fc, "fastcache", steps=steps)
+        rows.append({
+            "name": f"fig3/{model_name}/alpha={alpha}",
+            "us_per_call": st["us_per_step"],
+            "derived": (f"cache_ratio={st['block_cache_ratio']:.3f}"
+                        f" rel_err={rel_err(x, ref):.4f}"),
+        })
+    for tau in (0.02, 0.05, 0.1, 0.5):
+        fc = FastCacheConfig(motion_threshold=tau)
+        x, st = timed_sample(model, params, fc, "fastcache", steps=steps)
+        rows.append({
+            "name": f"table6/{model_name}/tau_s={tau}",
+            "us_per_call": st["us_per_step"],
+            "derived": (f"motion_frac={st['mean_motion_fraction']:.3f}"
+                        f" cache_ratio={st['block_cache_ratio']:.3f}"
+                        f" rel_err={rel_err(x, ref):.4f}"),
+        })
+    return rows

@@ -1,0 +1,54 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_reduced(arch_id)``.
+
+``--arch`` ids use dashes (as assigned); module names use underscores.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict
+
+from repro.configs.base import (DiTConfig, FastCacheConfig, InputShape,
+                                ModelConfig, MoEConfig, SSMConfig)
+from repro.configs.shapes import SHAPES
+
+_MODULES: Dict[str, str] = {
+    "hubert-xlarge": "hubert_xlarge",
+    "qwen3-0.6b": "qwen3_0p6b",
+    "stablelm-3b": "stablelm_3b",
+    "arctic-480b": "arctic_480b",
+    "xlstm-1.3b": "xlstm_1p3b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t",
+    "qwen3-14b": "qwen3_14b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "jamba-v0.1-52b": "jamba_52b",
+    "yi-9b": "yi_9b",
+}
+
+ASSIGNED_ARCHS = tuple(_MODULES)
+
+_DIT_IDS = ("dit-s2", "dit-b2", "dit-l2", "dit-xl2")
+ALL_ARCHS = ASSIGNED_ARCHS + _DIT_IDS
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch in _DIT_IDS:
+        mod = importlib.import_module("repro.configs.dit")
+        return getattr(mod, arch.replace("-", "_").upper())
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ALL_ARCHS)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}").CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    if arch in _DIT_IDS:
+        return importlib.import_module("repro.configs.dit").reduced()
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}").reduced()
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "DiTConfig", "InputShape",
+    "FastCacheConfig", "SHAPES", "ASSIGNED_ARCHS", "ALL_ARCHS",
+    "get_config", "get_reduced",
+]

@@ -1,0 +1,29 @@
+"""hubert-xlarge [audio] — encoder-only transformer backbone of HuBERT X-Large
+(same architecture family as wav2vec 2.0) [arXiv:2106.07447].
+
+48L, d_model=1280, 16 heads (kv=16, i.e. MHA), d_ff=5120, vocab=504 (k-means
+target codebook). The mel-spectrogram + conv feature extractor frontend is a
+STUB per the brief: ``input_specs`` provides precomputed frame embeddings of
+shape (B, S, frontend_dim=512).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    rope_kind="none",
+    is_encoder=True,
+    frontend_dim=512,
+    norm_eps=1e-5,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(name="hubert-xlarge-smoke", num_layers=2, d_model=256,
+                          num_heads=4, num_kv_heads=4, d_ff=512, frontend_dim=64)

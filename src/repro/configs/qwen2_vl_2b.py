@@ -1,0 +1,32 @@
+"""qwen2-vl-2b [vlm] — 28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936,
+M-RoPE, dynamic resolution [arXiv:2409.12191].
+
+The ViT vision encoder + projector frontend is a STUB per the brief:
+``input_specs`` provides ``vision_embeds`` (B, vision_tokens, d_model) already
+projected into the LM embedding space, scattered into the token stream at the
+positions flagged by ``vision_mask``. The language backbone (this config) is
+fully implemented, including 3-axis M-RoPE over (t, h, w) position ids.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151_936,
+    rope_kind="mrope",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    vision_tokens=256,
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(name="qwen2-vl-2b-smoke", num_layers=2, d_model=256,
+                          num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=512,
+                          mrope_sections=(8, 12, 12), vision_tokens=16)

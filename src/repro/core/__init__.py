@@ -1,0 +1,14 @@
+"""FastCache core — the paper's primary contribution.
+
+saliency.py      spatial-temporal token saliency + static/motion partition
+statcache.py     chi^2 statistical cache gate (Eqs. 4-9)
+linear_approx.py learnable linear approximators + least-squares calibration
+token_merge.py   local-clustering token merge (CTM, Eqs. 10-13 / Alg. 2)
+runner.py        CachedDiT — Alg. 1 around a DiT stack + baseline policies
+decode_runner.py CachedDecoder — the gate applied to AR decode (beyond-paper)
+chi2.py          host-side chi-square quantiles
+"""
+from repro.core.chi2 import cache_threshold, chi2_ppf, error_bound  # noqa
+from repro.core.decode_runner import CachedDecoder  # noqa: F401
+from repro.core.runner import (CachedDiT, POLICIES,  # noqa: F401
+                               l2c_mask_from_deltas, summarize_stats)

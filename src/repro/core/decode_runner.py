@@ -1,0 +1,136 @@
+"""CachedDecoder — FastCache's statistical block gate applied to
+autoregressive LLM decode steps (beyond-paper; DESIGN.md §4/§7).
+
+The iterative axis is the decode step: adjacent tokens' residual-stream
+hiddens are highly correlated, so the chi^2 gate (Eq. 7) on the per-layer
+block input decides whether to replace the block with its learnable linear
+approximation (Eq. 6).  KV-cache consistency: on a skipped block we still
+compute and write that position's K/V from the (normalized) block input, so
+future tokens attend to an approximated-but-present entry; the mixer-state
+desync problem that forbids this for SSM layers (DESIGN.md §4) does not
+arise.  Supported: period-1 attention stacks (dense / moe / vlm families).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FastCacheConfig
+from repro.core import linear_approx, statcache
+from repro.models import common
+from repro.models.transformer import TransformerModel
+
+F32 = jnp.float32
+
+
+class CachedDecoder:
+    def __init__(self, model: TransformerModel, fc: FastCacheConfig,
+                 fc_params: Optional[Dict] = None):
+        assert model.period == 1 and model.kinds == ("attn",), (
+            "CachedDecoder supports period-1 attention stacks; "
+            f"got {model.kinds}")
+        self.model = model
+        self.fc = fc
+        self.L = model.cfg.num_layers
+        d = model.cfg.d_model
+        self.fc_params = fc_params or linear_approx.init_linear_params(
+            self.L, d)
+
+    def init_state(self, batch: int) -> Dict:
+        d = self.model.cfg.d_model
+        return {
+            "prev_hidden": jnp.zeros((self.L + 1, batch, d),
+                                     jnp.dtype(self.model.cfg.dtype)),
+            "gate": statcache.init_gate_state(self.L),
+            "have_cache": jnp.zeros((), bool),
+            "stats": {"blocks_computed": jnp.zeros((), F32),
+                      "blocks_skipped": jnp.zeros((), F32),
+                      "steps": jnp.zeros((), F32)},
+        }
+
+    def _kv_write(self, p_attn, x, cache, decode_pos):
+        """Write this position's K/V from block input x (B,1,D) on skip."""
+        cfg = self.model.cfg
+        h_in = common.rms_norm(x, p_attn["norm"], cfg.norm_eps)
+        k = common.feinsum("bsd,dhk->bshk", h_in, p_attn["wk"])
+        v = common.feinsum("bsd,dhk->bshk", h_in, p_attn["wv"])
+        if cfg.qk_norm:
+            k = common.rms_norm(k, p_attn["k_norm"], cfg.norm_eps)
+        k = common.rope_dispatch(k, decode_pos[:, None], cfg.rope_kind,
+                                 cfg.rope_theta, cfg.mrope_sections)
+        w = cache["k"].shape[1]
+        slot = decode_pos % w
+        bidx = jnp.arange(x.shape[0])
+        return {
+            "k": cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype)),
+            "v": cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype)),
+            "pos": cache["pos"].at[bidx, slot].set(decode_pos),
+        }
+
+    def decode_step(self, params, tokens: jax.Array, cache, state):
+        """tokens (B,). Returns (logits, cache, state)."""
+        m = self.model
+        cfg = m.cfg
+        fc = self.fc
+        fcp = self.fc_params
+        step = cache["step"]
+        x = m.embed(params, {"tokens": tokens[:, None]})    # (B,1,D)
+        positions = step[:, None]
+        nd = int(x.size)
+        threshold = statcache.make_threshold(fc.alpha, nd)
+        gate = state["gate"]
+
+        def body(carry, xs):
+            x, sig, ini, comp, skip = carry
+            bps, blk_cache, w_l, b_l, prev_in, lidx = xs
+            diff, prevsq = statcache.delta_stats(x[:, 0], prev_in)
+            do_cache = (statcache.gate_decision(diff, prevsq, sig[lidx], nd,
+                                                threshold)
+                        & ini[lidx] & state["have_cache"]
+                        & jnp.asarray(fc.use_sc))
+
+            def skip_fn(op):
+                xx, bc = op
+                new_cache = self._kv_write(bps["attn"], xx, bc, step)
+                return linear_approx.apply_linear(w_l, b_l, xx), new_cache
+
+            def comp_fn(op):
+                xx, bc = op
+                x_new, c, _ = m.block_apply(0, bps, xx, positions=positions,
+                                            cache=bc, decode_pos=step,
+                                            decode=True)
+                return x_new, c
+
+            x_new, new_cache = jax.lax.cond(do_cache, skip_fn, comp_fn,
+                                            (x, blk_cache))
+            new_sig, _ = statcache.update_sigma(sig[lidx], ini[lidx], diff,
+                                                nd, fc.background_momentum)
+            sig = sig.at[lidx].set(jnp.where(do_cache, sig[lidx], new_sig))
+            ini = ini.at[lidx].set(True)
+            comp = comp + jnp.where(do_cache, 0.0, 1.0)
+            skip = skip + jnp.where(do_cache, 1.0, 0.0)
+            return (x_new, sig, ini, comp, skip), (new_cache, x[:, 0])
+
+        lidx = jnp.arange(self.L)
+        carry0 = (x, gate.sigma2, gate.initialized, jnp.zeros((), F32),
+                  jnp.zeros((), F32))
+        (x, sig, ini, comp, skip), (new_blocks, inputs) = jax.lax.scan(
+            body, carry0,
+            (params["blocks"]["pos0"], cache["blocks"]["pos0"],
+             fcp["W_l"], fcp["b_l"], state["prev_hidden"][:-1], lidx))
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = m.unembed(params, x[:, 0])
+
+        new_cache = {"blocks": {"pos0": new_blocks}, "step": step + 1}
+        st = dict(state)
+        st["prev_hidden"] = jnp.concatenate([inputs, x[:, 0][None]], 0)
+        st["gate"] = statcache.GateState(sigma2=sig, initialized=ini)
+        st["have_cache"] = jnp.ones((), bool)
+        stats = dict(st["stats"])
+        stats["blocks_computed"] = stats["blocks_computed"] + comp
+        stats["blocks_skipped"] = stats["blocks_skipped"] + skip
+        stats["steps"] = stats["steps"] + 1.0
+        st["stats"] = stats
+        return logits, new_cache, st

@@ -1,0 +1,96 @@
+"""Learnable linear approximators (Eqs. 3, 6) + least-squares calibration.
+
+Two approximator families:
+  * token bypass:  H^s = W_c X^s + b_c           (one global map, Eq. 3)
+  * block cache:   H_l = W_l H_{l-1} + b_l       (one map per block, Eq. 6)
+
+Initialization is the identity map — skipping block l with the identity is
+exactly "reuse the residual-stream input", the degenerate cache of prior
+work; calibration (``fit_linear`` / ``calibrate_dit``) then learns the
+first-order correction that gives FastCache its quality edge (paper §2
+"Zero-Shot Redundancy Reduction").
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def init_linear_params(num_blocks: int, d_model: int,
+                       dtype: str = "float32") -> Dict[str, jax.Array]:
+    eye = jnp.eye(d_model, dtype=jnp.dtype(dtype))
+    return {
+        "W_c": eye,
+        "b_c": jnp.zeros((d_model,), jnp.dtype(dtype)),
+        "W_l": jnp.broadcast_to(eye, (num_blocks, d_model, d_model)).copy(),
+        "b_l": jnp.zeros((num_blocks, d_model), jnp.dtype(dtype)),
+    }
+
+
+def apply_linear(w: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    return (jnp.matmul(x.astype(F32), w.astype(F32))
+            + b.astype(F32)).astype(x.dtype)
+
+
+def blend(approx: jax.Array, prev_out: jax.Array, gamma: float) -> jax.Array:
+    """Motion-aware blending (MB): gamma * linear-approx + (1-gamma) * cached
+    previous-step output of the same block."""
+    return (gamma * approx.astype(F32)
+            + (1.0 - gamma) * prev_out.astype(F32)).astype(approx.dtype)
+
+
+def fit_linear(x: jax.Array, y: jax.Array,
+               ridge: float = 1e-4) -> Tuple[jax.Array, jax.Array]:
+    """Ridge least-squares fit of y ~ x W + b.  x, y: (samples, D)."""
+    x = x.astype(F32)
+    y = y.astype(F32)
+    mu_x = x.mean(0)
+    mu_y = y.mean(0)
+    xc = x - mu_x
+    yc = y - mu_y
+    d = x.shape[1]
+    g = xc.T @ xc + ridge * x.shape[0] * jnp.eye(d, dtype=F32)
+    w = jnp.linalg.solve(g, xc.T @ yc)                     # (D, D)
+    b = mu_y - mu_x @ w
+    return w, b
+
+
+def calibrate_dit(model, params, fc_params, sample_batches,
+                  ridge: float = 1e-4) -> Dict[str, jax.Array]:
+    """Fit per-block linear maps from (block input, block output) pairs
+    collected over calibration batches (each: latents, t, labels).
+
+    Returns a new fc_params dict; also fits the token-bypass map W_c from
+    (token embedding, final hidden) pairs — the bypass must approximate the
+    whole stack for static tokens (Eq. 3).
+    """
+    n_blocks = model.cfg.num_layers
+    xs = [[] for _ in range(n_blocks)]
+    ys = [[] for _ in range(n_blocks)]
+    xs_c, ys_c = [], []
+
+    for batch in sample_batches:
+        x = model.tokens_in(params, batch["latents"])
+        c = model.conditioning(params, batch["t"], batch["labels"])
+        xs_c.append(x.reshape(-1, x.shape[-1]))
+        for l in range(n_blocks):
+            bp = jax.tree.map(lambda a: a[l], params["blocks"])
+            y = model.block_apply(bp, x, c)
+            xs[l].append(x.reshape(-1, x.shape[-1]))
+            ys[l].append(y.reshape(-1, y.shape[-1]))
+            x = y
+        ys_c.append(x.reshape(-1, x.shape[-1]))
+
+    w_l, b_l = [], []
+    for l in range(n_blocks):
+        w, b = fit_linear(jnp.concatenate(xs[l]), jnp.concatenate(ys[l]),
+                          ridge)
+        w_l.append(w)
+        b_l.append(b)
+    w_c, b_c = fit_linear(jnp.concatenate(xs_c), jnp.concatenate(ys_c), ridge)
+    return {"W_c": w_c, "b_c": b_c, "W_l": jnp.stack(w_l),
+            "b_l": jnp.stack(b_l)}

@@ -1,0 +1,378 @@
+"""CachedDiT: the FastCache execution engine around a DiT block stack, plus
+the baseline cache policies the paper compares against (Table 1/12).
+
+Policies (all jit-compatible; data-dependent decisions via lax.cond):
+
+  nocache    full compute every step (reference)
+  fora       static-interval layer cache: recompute every N-th step, else
+             reuse the previous step's model output (FORA, Lindsay-style)
+  teacache   accumulated input-change gate: skip whole steps while the
+             accumulated relative change stays under a threshold (TeaCache)
+  adacache   content-adaptive step-skip schedule from the input distance
+             (AdaCache)
+  fbcache    first-block gate: run block 0; if its output moved less than
+             `rdt`, reuse the previous step's output (FBCache/ParaAttention)
+  l2c        learned static layer subset replaced by linear approximations
+             (Learning-to-Cache, offline-calibrated mask)
+  fastcache  the paper: STR token partition + per-block chi^2 statistical
+             gate + learnable linear approximation + motion-aware blending
+
+The FastCache state carries the previous step's per-block input hiddens
+(H_{t-1,l-1} in Eq. 4), the previous token embeddings (Eq. 1) and the
+previous model output (for step-level baselines and MB blending).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FastCacheConfig
+from repro.core import linear_approx, saliency, statcache, token_merge
+from repro.models.dit import DiTModel
+
+F32 = jnp.float32
+
+POLICIES = ("nocache", "fora", "teacache", "adacache", "fbcache", "l2c",
+            "fastcache")
+
+
+class CachedDiT:
+    def __init__(self, model: DiTModel, fc: FastCacheConfig,
+                 policy: str = "fastcache",
+                 fc_params: Optional[Dict] = None,
+                 fora_interval: int = 3,
+                 tea_threshold: float = 0.15,
+                 ada_thresholds: Tuple[float, float] = (0.05, 0.15),
+                 fb_rdt: float = 0.08,
+                 l2c_mask: Optional[jax.Array] = None):
+        assert policy in POLICIES, policy
+        self.model = model
+        self.fc = fc
+        self.policy = policy
+        self.L = model.cfg.num_layers
+        d = model.cfg.d_model
+        self.fc_params = fc_params or linear_approx.init_linear_params(
+            self.L, d)
+        self.fora_interval = fora_interval
+        self.tea_threshold = tea_threshold
+        self.ada_thresholds = ada_thresholds
+        self.fb_rdt = fb_rdt
+        self.l2c_mask = (l2c_mask if l2c_mask is not None
+                         else jnp.zeros((self.L,), bool))
+        n = model.num_tokens
+        self.gate_nd = n * d  # ND of Eq. 5 (full token grid)
+        self.threshold = statcache.make_threshold(fc.alpha, self.gate_nd)
+        self.capacity = max(1, int(round(fc.motion_capacity * n)))
+
+    # ------------------------------------------------------------------
+
+    def init_state(self, batch: int) -> Dict:
+        m = self.model
+        cfg = m.cfg
+        n, d = m.num_tokens, cfg.d_model
+        dt = jnp.dtype(cfg.dtype)
+        img = cfg.dit.image_size
+        return {
+            "prev_tokens_in": jnp.zeros((batch, n, d), dt),
+            "prev_hidden": jnp.zeros((self.L + 1, batch, n, d), dt),
+            "prev_eps": jnp.zeros((batch, img, img, cfg.dit.in_channels), dt),
+            "gate": statcache.init_gate_state(self.L),
+            "step_count": jnp.zeros((), jnp.int32),
+            "have_cache": jnp.zeros((), bool),
+            "tea_acc": jnp.zeros((), F32),
+            "ada_skip_left": jnp.zeros((), jnp.int32),
+            "stats": {
+                "blocks_computed": jnp.zeros((), F32),
+                "blocks_skipped": jnp.zeros((), F32),
+                "steps_reused": jnp.zeros((), F32),
+                "motion_frac_sum": jnp.zeros((), F32),
+                "steps": jnp.zeros((), F32),
+            },
+        }
+
+    # ------------------------------------------------------------------
+    # Full forward that records per-block inputs (the cache payload)
+    # ------------------------------------------------------------------
+
+    def _full_forward(self, params, x, c):
+        def body(x, bp):
+            return self.model.block_apply(bp, x, c), x
+
+        x_out, inputs = jax.lax.scan(body, x, params["blocks"])
+        hidden = jnp.concatenate([inputs, x_out[None]], axis=0)  # (L+1,B,N,D)
+        return x_out, hidden
+
+    def _eps(self, params, hidden_final, c, latents_shape):
+        out = self.model.final_layer(params, hidden_final, c)
+        p = self.model.cfg.dit.patch_size
+        from repro.models.common import unpatchify
+        return unpatchify(out[..., :self.model.patch_dim], p, self.model.grid)
+
+    # ------------------------------------------------------------------
+
+    def step(self, params, state, latents, t, labels):
+        """One denoising-model evaluation under the cache policy.
+        Returns (eps, new_state)."""
+        m = self.model
+        x_in = m.tokens_in(params, latents)
+        c = m.conditioning(params, t, labels)
+
+        def compute_full(state):
+            x_out, hidden = self._full_forward(params, x_in, c)
+            eps = self._eps(params, x_out, c, latents.shape)
+            st = dict(state)
+            st["prev_tokens_in"] = x_in
+            st["prev_hidden"] = hidden
+            st["prev_eps"] = eps.astype(state["prev_eps"].dtype)
+            st["have_cache"] = jnp.ones((), bool)
+            stats = dict(st["stats"])
+            stats["blocks_computed"] = stats["blocks_computed"] + self.L
+            stats["motion_frac_sum"] = stats["motion_frac_sum"] + 1.0
+            st["stats"] = stats
+            return eps, st
+
+        def reuse_step(state):
+            st = dict(state)
+            stats = dict(st["stats"])
+            stats["steps_reused"] = stats["steps_reused"] + 1.0
+            stats["blocks_skipped"] = stats["blocks_skipped"] + self.L
+            st["stats"] = stats
+            return st["prev_eps"].astype(F32).astype(x_in.dtype), st
+
+        p = self.policy
+        if p == "nocache":
+            eps, state = compute_full(state)
+        elif p == "fora":
+            compute = (state["step_count"] % self.fora_interval == 0) | (
+                ~state["have_cache"])
+            eps, state = jax.lax.cond(compute, compute_full, reuse_step, state)
+        elif p == "teacache":
+            diff, prev = statcache.delta_stats(x_in, state["prev_tokens_in"])
+            rel = jnp.sqrt(diff / jnp.maximum(prev, 1e-12))
+            acc = state["tea_acc"] + rel
+            skip = (acc < self.tea_threshold) & state["have_cache"]
+
+            def sk(s):
+                eps, s = reuse_step(s)
+                s = dict(s)
+                s["tea_acc"] = acc
+                return eps, s
+
+            def co(s):
+                eps, s = compute_full(s)
+                s = dict(s)
+                s["tea_acc"] = jnp.zeros((), F32)
+                return eps, s
+
+            eps, state = jax.lax.cond(skip, sk, co, state)
+        elif p == "adacache":
+            diff, prev = statcache.delta_stats(x_in, state["prev_tokens_in"])
+            rel = jnp.sqrt(diff / jnp.maximum(prev, 1e-12))
+            lo, hi = self.ada_thresholds
+            budget = jnp.where(rel < lo, 3, jnp.where(rel < hi, 1, 0))
+            skip = (state["ada_skip_left"] > 0) & state["have_cache"]
+
+            def sk(s):
+                eps, s = reuse_step(s)
+                s = dict(s)
+                s["ada_skip_left"] = s["ada_skip_left"] - 1
+                return eps, s
+
+            def co(s):
+                eps, s = compute_full(s)
+                s = dict(s)
+                s["ada_skip_left"] = budget.astype(jnp.int32)
+                return eps, s
+
+            eps, state = jax.lax.cond(skip, sk, co, state)
+        elif p == "fbcache":
+            bp0 = jax.tree.map(lambda a: a[0], params["blocks"])
+            h1 = m.block_apply(bp0, x_in, c)
+            diff, prev = statcache.delta_stats(h1, state["prev_hidden"][1])
+            rel = jnp.sqrt(diff / jnp.maximum(prev, 1e-12))
+            skip = (rel < self.fb_rdt) & state["have_cache"]
+
+            def sk(s):
+                eps, s = reuse_step(s)
+                s = dict(s)
+                stats = dict(s["stats"])
+                stats["blocks_computed"] = stats["blocks_computed"] + 1.0
+                stats["blocks_skipped"] = stats["blocks_skipped"] - 1.0
+                s["stats"] = stats
+                return eps, s
+
+            eps, state = jax.lax.cond(skip, sk,
+                                      lambda s: compute_full(s), state)
+        elif p == "l2c":
+            eps, state = self._layerwise_step(
+                params, state, x_in, c,
+                forced_mask=self.l2c_mask, use_gate=False, use_str=False)
+        else:  # fastcache
+            def first(s):
+                return compute_full(s)
+
+            def cached(s):
+                return self._fastcache_step(params, s, x_in, c)
+
+            eps, state = jax.lax.cond(state["have_cache"], cached, first,
+                                      state)
+        state = dict(state)
+        state["step_count"] = state["step_count"] + 1
+        stats = dict(state["stats"])
+        stats["steps"] = stats["steps"] + 1.0
+        state["stats"] = stats
+        return eps, state
+
+    # ------------------------------------------------------------------
+    # FastCache proper (Alg. 1)
+    # ------------------------------------------------------------------
+
+    def _fastcache_step(self, params, state, x_in, c):
+        fc = self.fc
+        fcp = self.fc_params
+        b, n, d = x_in.shape
+
+        # ---- STR: token partition (Eqs. 1-2)
+        if fc.use_str:
+            sal = saliency.token_saliency(x_in, state["prev_tokens_in"])
+            part = saliency.partition_tokens(sal, fc.motion_threshold,
+                                             self.capacity)
+        else:
+            sal = jnp.full((b, n), jnp.inf, F32)
+            part = saliency.partition_tokens(sal, -1.0, n)
+        mfrac = saliency.motion_fraction(part)
+
+        # ---- static bypass (Eq. 3) + MB blend with previous final hidden
+        h_static = linear_approx.apply_linear(fcp["W_c"], fcp["b_c"], x_in)
+        if fc.use_mb:
+            h_static = linear_approx.blend(h_static, state["prev_hidden"][-1],
+                                           fc.blend_gamma)
+
+        # ---- motion stream through gated blocks
+        xm = saliency.gather_motion(x_in, part)              # (B,C,D)
+        gate = state["gate"]
+        # df of the chi^2 statistic = number of observed elements (static at
+        # trace time; the paper's ND with the motion capacity applied)
+        nd = int(xm.size)
+        threshold = statcache.make_threshold(fc.alpha, nd)
+
+        def body(carry, xs):
+            xm, sig, ini, comp, skip = carry
+            bp, w_l, b_l, prev_in, prev_out, lidx = xs
+            prev_m = saliency.gather_motion(prev_in, part)
+            diff, prevsq = statcache.delta_stats(xm, prev_m)
+            do_cache = statcache.gate_decision(
+                diff, prevsq, sig[lidx], nd, threshold) & ini[lidx]
+            do_cache = do_cache & jnp.asarray(fc.use_sc)
+
+            def skip_fn(xm):
+                approx = linear_approx.apply_linear(w_l, b_l, xm)
+                if fc.use_mb:
+                    approx = linear_approx.blend(
+                        approx, saliency.gather_motion(prev_out, part),
+                        fc.blend_gamma)
+                return approx
+
+            def comp_fn(xm):
+                return self.model.block_apply(bp, xm, c)
+
+            xm_new = jax.lax.cond(do_cache, skip_fn, comp_fn, xm)
+            # sliding-window variance tracker updates on recompute
+            new_sig_l, _ = statcache.update_sigma(
+                sig[lidx], ini[lidx], diff, nd, fc.background_momentum)
+            sig = sig.at[lidx].set(jnp.where(do_cache, sig[lidx], new_sig_l))
+            ini = ini.at[lidx].set(True)
+            comp = comp + jnp.where(do_cache, 0.0, 1.0)
+            skip = skip + jnp.where(do_cache, 1.0, 0.0)
+            # cache payload: this block's input scattered over prev full grid
+            new_prev_in = saliency.scatter_motion(prev_in, xm, part)
+            return (xm_new, sig, ini, comp, skip), new_prev_in
+
+        lidx = jnp.arange(self.L)
+        prev_in_stack = state["prev_hidden"][:-1]            # (L,B,N,D)
+        prev_out_stack = state["prev_hidden"][1:]            # (L,B,N,D)
+        carry0 = (xm, gate.sigma2, gate.initialized,
+                  jnp.zeros((), F32), jnp.zeros((), F32))
+        (xm, sig, ini, comp, skip), new_prev_in = jax.lax.scan(
+            body, carry0,
+            (params["blocks"], fcp["W_l"], fcp["b_l"], prev_in_stack,
+             prev_out_stack, lidx))
+
+        # ---- reassemble full grid (concat of Eq. 2 sets)
+        h_final = saliency.scatter_motion(h_static, xm, part)
+        eps = self._eps(params, h_final, c, None)
+
+        st = dict(state)
+        st["prev_tokens_in"] = x_in
+        st["prev_hidden"] = jnp.concatenate([new_prev_in, h_final[None]], 0)
+        st["prev_eps"] = eps.astype(state["prev_eps"].dtype)
+        st["gate"] = statcache.GateState(sigma2=sig, initialized=ini)
+        stats = dict(st["stats"])
+        stats["blocks_computed"] = stats["blocks_computed"] + comp
+        stats["blocks_skipped"] = stats["blocks_skipped"] + skip
+        stats["motion_frac_sum"] = stats["motion_frac_sum"] + mfrac
+        st["stats"] = stats
+        return eps, st
+
+    # ------------------------------------------------------------------
+    # Layerwise forced-mask path (L2C)
+    # ------------------------------------------------------------------
+
+    def _layerwise_step(self, params, state, x_in, c, forced_mask,
+                        use_gate: bool, use_str: bool):
+        fcp = self.fc_params
+
+        def body(carry, xs):
+            x, comp, skip = carry
+            bp, w_l, b_l, masked = xs
+
+            x_new = jax.lax.cond(
+                masked,
+                lambda x: linear_approx.apply_linear(w_l, b_l, x),
+                lambda x: self.model.block_apply(bp, x, c), x)
+            comp = comp + jnp.where(masked, 0.0, 1.0)
+            skip = skip + jnp.where(masked, 1.0, 0.0)
+            return (x_new, comp, skip), x
+
+        (x_out, comp, skip), inputs = jax.lax.scan(
+            body, (x_in, jnp.zeros((), F32), jnp.zeros((), F32)),
+            (params["blocks"], fcp["W_l"], fcp["b_l"], forced_mask))
+        eps = self._eps(params, x_out, c, None)
+        st = dict(state)
+        st["prev_tokens_in"] = x_in
+        st["prev_hidden"] = jnp.concatenate([inputs, x_out[None]], 0)
+        st["prev_eps"] = eps.astype(state["prev_eps"].dtype)
+        st["have_cache"] = jnp.ones((), bool)
+        stats = dict(st["stats"])
+        stats["blocks_computed"] = stats["blocks_computed"] + comp
+        stats["blocks_skipped"] = stats["blocks_skipped"] + skip
+        stats["motion_frac_sum"] = stats["motion_frac_sum"] + 1.0
+        st["stats"] = stats
+        return eps, st
+
+
+def summarize_stats(state) -> Dict[str, float]:
+    s = state["stats"]
+    total = float(s["blocks_computed"]) + float(s["blocks_skipped"])
+    return {
+        "steps": float(s["steps"]),
+        "steps_reused": float(s["steps_reused"]),
+        "blocks_computed": float(s["blocks_computed"]),
+        "blocks_skipped": float(s["blocks_skipped"]),
+        "block_cache_ratio": (float(s["blocks_skipped"]) / total
+                              if total else 0.0),
+        "mean_motion_fraction": (float(s["motion_frac_sum"])
+                                 / max(1.0, float(s["steps"])
+                                       - float(s["steps_reused"]))),
+    }
+
+
+def l2c_mask_from_deltas(deltas: jax.Array, n_skip: int) -> jax.Array:
+    """Learning-to-Cache proxy: skip the n layers whose outputs move the
+    residual stream least (offline calibration)."""
+    order = jnp.argsort(deltas)
+    mask = jnp.zeros(deltas.shape, bool)
+    return mask.at[order[:n_skip]].set(True)

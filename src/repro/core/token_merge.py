@@ -1,0 +1,99 @@
+"""Spatial-temporal token merging — Local Clustering Token Merge (Eqs. 10-13,
+Alg. 2) with static shapes.
+
+TPU adaptation (DESIGN.md §3): the paper's global kNN density is O(N^2); here
+tokens are processed in fixed windows of `w`, the kNN density rho_sp uses the
+K nearest neighbours *within the window* (a (w, w) distance matrix — VMEM
+tile-sized; Pallas kernel `knn_density` is the TPU hot path), and each window
+keeps a static number of cluster centers M = ceil(r * w).  Every token is
+assigned to its nearest kept center; merged tokens are the importance-weighted
+cluster means (Eq. 13); ``unmerge`` restores resolution via the stored
+assignment (Alg. 2's M mapping).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def knn_density(h: jax.Array, k: int) -> jax.Array:
+    """Eq. 10 within windows. h: (..., w, D) -> rho_sp (..., w)."""
+    hf = h.astype(F32)
+    sq = jnp.sum(hf * hf, axis=-1)
+    dist = (sq[..., :, None] + sq[..., None, :]
+            - 2.0 * jnp.einsum("...id,...jd->...ij", hf, hf))
+    dist = jnp.maximum(dist, 0.0)
+    w = h.shape[-2]
+    # exclude self-distance (0) by pushing the diagonal to +inf
+    eye = jnp.eye(w, dtype=bool)
+    dist = jnp.where(eye, jnp.inf, dist)
+    k = min(k, w - 1)
+    neg_topk, _ = jax.lax.top_k(-dist, k)                  # k smallest
+    mean_knn = jnp.mean(-neg_topk, axis=-1)
+    # normalize by feature dim: Eq. 10's exp(-dist) underflows for D >> 1
+    # (pairwise sq-dist ~ 2D for unit-variance tokens); per-dim distance
+    # keeps rho_sp scale-invariant across model widths
+    return jnp.exp(-mean_knn / h.shape[-1])
+
+
+def importance(h_t: jax.Array, h_prev: jax.Array, k: int,
+               lam: float) -> jax.Array:
+    """Eq. 12: S_i = rho_sp * (1 + lambda * rho_tm). (..., w, D) -> (..., w)."""
+    rho_sp = knn_density(h_t, k)
+    rho_tm = jnp.linalg.norm(h_t.astype(F32) - h_prev.astype(F32), axis=-1)
+    return rho_sp * (1.0 + lam * rho_tm)
+
+
+class MergeMap(NamedTuple):
+    assign: jax.Array     # (B, n_win, w) int32 — cluster id of each token
+    centers: jax.Array    # (B, n_win, M) int32 — window-local center indices
+    scores: jax.Array     # (B, n_win, w) importance
+
+
+def merge_tokens(h_t: jax.Array, h_prev: jax.Array, *, window: int,
+                 keep_ratio: float, k: int, lam: float):
+    """(B, N, D) -> merged (B, N_keep, D), MergeMap.  N % window == 0."""
+    b, n, d = h_t.shape
+    assert n % window == 0, (n, window)
+    n_win = n // window
+    m = max(1, int(round(keep_ratio * window)))
+    hw = h_t.reshape(b, n_win, window, d)
+    pw = h_prev.reshape(b, n_win, window, d)
+    s = importance(hw, pw, k, lam)                         # (B,n_win,w)
+    # normalize scores per window: the weighted mean (Eq. 13) is invariant
+    # to per-window scaling and this avoids denominator underflow
+    s = s / jnp.maximum(jnp.max(s, axis=-1, keepdims=True), 1e-30)
+
+    _, centers = jax.lax.top_k(s, m)                       # (B,n_win,M)
+    ch = jnp.take_along_axis(hw, centers[..., None], axis=2)  # (B,n_win,M,D)
+
+    # assign every token to its nearest center (L2)
+    d2 = (jnp.sum(jnp.square(hw.astype(F32)), -1)[..., :, None]
+          + jnp.sum(jnp.square(ch.astype(F32)), -1)[..., None, :]
+          - 2.0 * jnp.einsum("bwid,bwjd->bwij", hw.astype(F32),
+                             ch.astype(F32)))              # (B,n_win,w,M)
+    assign = jnp.argmin(d2, axis=-1).astype(jnp.int32)     # (B,n_win,w)
+
+    # merged token = importance-weighted mean of its cluster (Eq. 13)
+    onehot = jax.nn.one_hot(assign, m, dtype=F32)          # (B,n_win,w,M)
+    wgt = onehot * s[..., None]
+    num = jnp.einsum("bwim,bwid->bwmd", wgt, hw.astype(F32))
+    den = jnp.maximum(jnp.sum(wgt, axis=2), 1e-9)          # (B,n_win,M)
+    merged = (num / den[..., None]).astype(h_t.dtype)      # (B,n_win,M,D)
+    merged = merged.reshape(b, n_win * m, d)
+    return merged, MergeMap(assign=assign, centers=centers, scores=s)
+
+
+def unmerge_tokens(merged: jax.Array, mm: MergeMap, *, window: int,
+                   n_tokens: int) -> jax.Array:
+    """Restore (B, N, D): each token takes its cluster representative."""
+    b, nk, d = merged.shape
+    n_win = n_tokens // window
+    m = nk // n_win
+    mw = merged.reshape(b, n_win, m, d)
+    out = jnp.take_along_axis(mw, mm.assign[..., None], axis=2)
+    return out.reshape(b, n_tokens, d)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (audio_stream, latent_stream,  # noqa: F401
+                                  token_stream, video_latents)

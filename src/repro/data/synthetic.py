@@ -1,0 +1,111 @@
+"""Deterministic synthetic data pipelines.
+
+Offline container: no datasets ship with it, so training/serving examples run
+on seeded synthetic streams with enough structure to be learnable:
+
+* ``token_stream`` — Zipf-ish unigram mixture with a first-order Markov
+  kicker: next-token distribution depends on the previous token's residue
+  class, so a real LM can beat the unigram entropy floor (tests check this).
+* ``latent_stream`` — class-conditioned Gaussian blobs with per-class spatial
+  frequency patterns in (H, W, C) latent space (DiT training).
+* ``video_latents`` — temporally-correlated latent sequences with a moving
+  foreground and a static background: the workload FastCache's saliency
+  split is designed for (used by benchmarks to reproduce Fig. 1/Table 5
+  static-ratio behaviour).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+def token_stream(vocab: int, batch: int, seq: int, *, seed: int = 0,
+                 num_classes: int = 8) -> Iterator[Dict]:
+    rng = np.random.default_rng(seed)
+    # class-conditional unigram tables (Zipf base re-shuffled per class)
+    base = 1.0 / (np.arange(1, vocab + 1) ** 1.1)
+    tables = np.stack([rng.permutation(base) for _ in range(num_classes)])
+    tables /= tables.sum(-1, keepdims=True)
+    while True:
+        out = np.empty((batch, seq), np.int32)
+        prev = rng.integers(0, vocab, size=batch)
+        for t in range(seq):
+            cls = prev % num_classes
+            # vectorized per-class sampling
+            u = rng.random(batch)
+            cdf = np.cumsum(tables[cls], axis=-1)
+            nxt = (u[:, None] < cdf).argmax(-1)
+            out[:, t] = nxt
+            prev = nxt
+        yield {"tokens": jnp.asarray(out)}
+
+
+def latent_stream(batch: int, image_size: int, channels: int, *,
+                  num_classes: int = 10, seed: int = 0,
+                  num_train_steps: int = 1000) -> Iterator[Dict]:
+    """DiT training batches: (x_t, t, labels, noise) per DDPM forward."""
+    from repro.diffusion.schedule import add_noise, linear_schedule
+    rng = np.random.default_rng(seed)
+    sched = linear_schedule(num_train_steps)
+    yy, xx = np.meshgrid(np.arange(image_size), np.arange(image_size),
+                         indexing="ij")
+    while True:
+        labels = rng.integers(0, num_classes, size=batch)
+        freq = (labels % 4 + 1)[:, None, None, None]
+        phase = (labels // 4)[:, None, None, None] * 0.7
+        grid = np.sin(2 * np.pi * freq * xx[None, ..., None]
+                      / image_size + phase) \
+            * np.cos(2 * np.pi * freq * yy[None, ..., None] / image_size)
+        x0 = grid + 0.1 * rng.standard_normal(
+            (batch, image_size, image_size, channels))
+        t = rng.integers(0, num_train_steps, size=batch)
+        noise = rng.standard_normal(x0.shape)
+        x_t = add_noise(sched, jnp.asarray(x0, F32), jnp.asarray(noise, F32),
+                        jnp.asarray(t))
+        yield {"latents": x_t, "t": jnp.asarray(t, jnp.int32),
+               "labels": jnp.asarray(labels, jnp.int32),
+               "noise": jnp.asarray(noise, F32)}
+
+
+def video_latents(batch: int, frames: int, image_size: int, channels: int,
+                  *, motion_amplitude: float = 1.0, seed: int = 0
+                  ) -> jnp.ndarray:
+    """(B, T, H, W, C) latents: static textured background + a small moving
+    square whose speed scales with motion_amplitude."""
+    rng = np.random.default_rng(seed)
+    bg = rng.standard_normal((batch, 1, image_size, image_size, channels))
+    out = np.repeat(bg, frames, axis=1).astype(np.float32)
+    sq = max(2, image_size // 4)
+    for b in range(batch):
+        cx = rng.integers(0, image_size - sq)
+        cy = rng.integers(0, image_size - sq)
+        vx = motion_amplitude * rng.uniform(0.5, 1.5)
+        vy = motion_amplitude * rng.uniform(-1.0, 1.0)
+        patch = 2.0 * rng.standard_normal((sq, sq, channels))
+        for t in range(frames):
+            x0 = int(cx + vx * t) % (image_size - sq + 1)
+            y0 = int(cy + vy * t) % (image_size - sq + 1)
+            out[b, t, y0:y0 + sq, x0:x0 + sq] = patch
+    return jnp.asarray(out)
+
+
+def audio_stream(batch: int, seq: int, frontend_dim: int, vocab: int, *,
+                 seed: int = 0, mask_prob: float = 0.2) -> Iterator[Dict]:
+    """HuBERT-style masked-prediction batches over stub conv features."""
+    rng = np.random.default_rng(seed)
+    proto = rng.standard_normal((vocab, frontend_dim)).astype(np.float32)
+    while True:
+        targets = rng.integers(0, vocab, size=(batch, seq))
+        feats = proto[targets] + 0.3 * rng.standard_normal(
+            (batch, seq, frontend_dim)).astype(np.float32)
+        mask = rng.random((batch, seq)) < mask_prob
+        feats = np.where(mask[..., None], 0.0, feats)
+        yield {"features": jnp.asarray(feats),
+               "targets": jnp.asarray(targets, jnp.int32),
+               "mask_indices": jnp.asarray(mask)}

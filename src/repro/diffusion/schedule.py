@@ -1,0 +1,49 @@
+"""DDPM noise schedule + DDIM step math (the paper's inference setting:
+50 DDIM steps, classifier-free guidance)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class Schedule(NamedTuple):
+    betas: jax.Array          # (T,)
+    alphas_cum: jax.Array     # (T,) cumulative prod of (1 - beta)
+
+
+def linear_schedule(num_train_steps: int = 1000, beta_start: float = 1e-4,
+                    beta_end: float = 0.02) -> Schedule:
+    betas = jnp.linspace(beta_start, beta_end, num_train_steps, dtype=F32)
+    return Schedule(betas=betas, alphas_cum=jnp.cumprod(1.0 - betas))
+
+
+def add_noise(sched: Schedule, x0: jax.Array, noise: jax.Array,
+              t: jax.Array) -> jax.Array:
+    """q(x_t | x_0): (B,...) with per-sample integer timesteps t."""
+    ac = sched.alphas_cum[t]
+    shape = (-1,) + (1,) * (x0.ndim - 1)
+    return (jnp.sqrt(ac).reshape(shape) * x0.astype(F32)
+            + jnp.sqrt(1.0 - ac).reshape(shape) * noise.astype(F32))
+
+
+def ddim_timesteps(num_train_steps: int, num_inference_steps: int
+                   ) -> jax.Array:
+    """Descending evenly-spaced timesteps (50-step default)."""
+    step = num_train_steps // num_inference_steps
+    return jnp.arange(num_train_steps - 1, -1, -step, dtype=jnp.int32)
+
+
+def ddim_step(sched: Schedule, x_t: jax.Array, eps: jax.Array, t: jax.Array,
+              t_prev: jax.Array, eta: float = 0.0) -> jax.Array:
+    """Deterministic DDIM update x_t -> x_{t_prev} (eta=0)."""
+    ac_t = sched.alphas_cum[t]
+    ac_p = jnp.where(t_prev >= 0, sched.alphas_cum[jnp.maximum(t_prev, 0)],
+                     jnp.ones_like(ac_t))
+    x_t = x_t.astype(F32)
+    eps = eps.astype(F32)
+    x0 = (x_t - jnp.sqrt(1.0 - ac_t) * eps) / jnp.sqrt(ac_t)
+    return jnp.sqrt(ac_p) * x0 + jnp.sqrt(1.0 - ac_p) * eps

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingCtx, constrain, current_ctx, make_rules, param_shardings,
+    spec_for, use_sharding,
+)

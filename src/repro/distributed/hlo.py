@@ -1,0 +1,126 @@
+"""Extract collective-communication bytes from compiled HLO text.
+
+``cost_analysis`` has FLOPs and HBM bytes but not collective traffic, so the
+roofline's third term is parsed from ``compiled.as_text()``: sum the result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.  Ops inside while-loop bodies (scan-over-layers) are
+multiplied by the loop trip count, recovered from the loop condition's
+compare-against-constant; if that fails, ``default_trip`` (the model's scan
+length) is used.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_WHILE_RE = re.compile(r"while\(")
+_BODY_RE = re.compile(r"body=\s*%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=\s*%?([\w.\-]+)")
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(text: str) -> Dict[str, str]:
+    """Top-level HLO computations: a header is an unindented line starting
+    with ``ENTRY`` or ``%name (...)`` and ending with '{'; the body runs to
+    the matching unindented '}'. (Op lines contain balanced braces like
+    ``{1,0}`` / ``dimensions={0}`` so brace-depth tracking stays correct.)"""
+    comps: Dict[str, list] = {}
+    cur = None
+    depth = 0
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if not line or line[0].isspace():
+                continue
+            if not stripped.endswith("{"):
+                continue
+            if not (stripped.startswith("%") or stripped.startswith("ENTRY")
+                    or stripped.startswith("HloModule")):
+                continue
+            if stripped.startswith("HloModule"):
+                continue
+            name = stripped.split()[0].lstrip("%")
+            if name == "ENTRY":
+                name = stripped.split()[1].lstrip("%")
+            cur = name
+            comps[cur] = [line]
+            depth = line.count("{") - line.count("}")
+            if depth <= 0:
+                cur = None
+        else:
+            comps[cur].append(line)
+            depth += line.count("{") - line.count("}")
+            if depth <= 0:
+                cur = None
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def _trip_count(cond_text: str) -> int | None:
+    # loop bound usually appears as a compare against an s32/u32 constant
+    consts = [int(c) for c in
+              re.findall(r"[su]\d+\[\]\s+constant\((\d+)\)", cond_text)]
+    if consts:
+        return max(consts)
+    return None
+
+
+def collective_bytes(hlo_text: str, default_trip: int = 1
+                     ) -> Tuple[Dict[str, float], Dict[str, float]]:
+    """Returns (per-op-kind bytes, diagnostics).  Bytes are trip-count
+    weighted; `static` in diagnostics is the unweighted sum."""
+    comps = _split_computations(hlo_text)
+
+    # map body computation -> trip count
+    trips: Dict[str, int] = {}
+    for name, body in comps.items():
+        for line in body.splitlines():
+            if _WHILE_RE.search(line):
+                bm = _BODY_RE.search(line)
+                cm = _COND_RE.search(line)
+                if bm:
+                    t = None
+                    if cm and cm.group(1) in comps:
+                        t = _trip_count(comps[cm.group(1)])
+                    trips[bm.group(1)] = t if t else default_trip
+
+    out: Dict[str, float] = {}
+    static: Dict[str, float] = {}
+    for name, body in comps.items():
+        mult = trips.get(name, 1)
+        # nested whiles: multiply through (rare; one level handled)
+        for line in body.splitlines():
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            if "-done(" in line:
+                continue  # avoid double counting async start/done pairs
+            b = shape_bytes(m.group(1))
+            kind = m.group(2)
+            out[kind] = out.get(kind, 0.0) + b * mult
+            static[kind] = static.get(kind, 0.0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    static["total"] = sum(v for k, v in static.items() if k != "total")
+    return out, {"static": static, "trip_counts": trips}

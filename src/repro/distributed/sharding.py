@@ -1,0 +1,178 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Models annotate every parameter dim and key activations with *logical* axis
+names.  A rule table maps logical names to mesh axes; ``spec_for`` drops a mesh
+axis when the dim size is not divisible by the mesh-axis extent (e.g. hubert's
+vocab=504 on a 16-way axis) or when the axis is already consumed by another
+dim of the same array.
+
+Rule tables are built per (step kind, shape) by ``make_rules`` — e.g.
+``long_500k`` moves the ``data`` axis from batch (which is 1) to the KV-cache
+sequence dim.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+# --------------------------------------------------------------------------
+# Rule tables
+# --------------------------------------------------------------------------
+
+def make_rules(kind: str = "train", *, long_context: bool = False,
+               seq_shard: bool = False,
+               attn_seq_shard: bool = False) -> Dict[str, Axes]:
+    """Logical-axis -> mesh-axes mapping.
+
+    Weight dims:  embed / ffn / heads / vocab / expert / expert_embed ...
+    Activations:  act_batch / act_seq / act_kv_seq / act_embed / act_vocab ...
+    """
+    rules: Dict[str, Axes] = {
+        # ---- weights: FSDP over `data`, tensor/expert-parallel over `model`
+        "embed": ("data",),
+        "ffn": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": None,
+        "vocab": ("model",),
+        "expert": ("model",),
+        "expert_embed": ("data",),
+        "inner": ("model",),        # SSM inner/channel dims
+        "state": None,
+        "layers": None,
+        "null": None,
+        # ---- activations
+        "act_batch": ("pod", "data"),
+        "act_seq": None,
+        "act_kv_seq": None,
+        "act_embed": None,
+        "act_heads": ("model",),
+        "act_ffn": ("model",),
+        "act_inner": ("model",),
+        "act_vocab": ("model",),
+        "act_expert": ("model",),
+        # perf knob: shard attention internals (q/logits) over `model` on
+        # the query-seq dim — bounds per-chip logits when heads don't divide
+        # the model axis (e.g. qwen3-14b's 40 heads on a 16-way axis)
+        "act_attn_seq": ("model",) if attn_seq_shard else None,
+    }
+    if seq_shard:
+        # sequence parallelism on the residual stream (perf knob)
+        rules["act_seq"] = ("model",)
+        rules["act_ffn"] = None
+    if kind == "decode":
+        # batch shards over data; spread the KV cache over `model` so the
+        # per-device cache fits HBM (attention reductions over the sharded
+        # seq dim lower to all-reduces)
+        rules["act_kv_seq"] = ("model",)
+    if long_context:
+        # batch==1: move `data` (and `model`) onto the KV/sequence dim
+        rules["act_batch"] = ("pod",)
+        rules["act_kv_seq"] = ("data", "model")
+        if kind != "decode":
+            rules["act_seq"] = ("data",)
+    return rules
+
+
+# --------------------------------------------------------------------------
+# Context
+# --------------------------------------------------------------------------
+
+class ShardingCtx:
+    def __init__(self, mesh: Mesh, rules: Dict[str, Axes]):
+        self.mesh = mesh
+        self.rules = rules
+
+
+_TLS = threading.local()
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: Dict[str, Axes]):
+    prev = current_ctx()
+    _TLS.ctx = ShardingCtx(mesh, rules)
+    try:
+        yield _TLS.ctx
+    finally:
+        _TLS.ctx = prev
+
+
+# --------------------------------------------------------------------------
+# Spec construction
+# --------------------------------------------------------------------------
+
+def _as_tuple(a: Axes) -> Tuple[str, ...]:
+    if a is None:
+        return ()
+    if isinstance(a, str):
+        return (a,)
+    return tuple(a)
+
+
+def spec_for(shape: Sequence[int], logical_axes: Sequence[Optional[str]],
+             ctx: Optional[ShardingCtx] = None) -> P:
+    """PartitionSpec for `shape` given per-dim logical axis names.
+
+    Drops mesh axes that (a) don't exist in the mesh, (b) don't divide the dim
+    size, or (c) were already used by an earlier dim.
+    """
+    ctx = ctx or current_ctx()
+    if ctx is None:
+        return P(*([None] * len(shape)))
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    mesh_shape = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    used: set = set()
+    out = []
+    for size, name in zip(shape, logical_axes):
+        mesh_axes = _as_tuple(ctx.rules.get(name)) if name else ()
+        mesh_axes = tuple(a for a in mesh_axes
+                          if a in mesh_shape and a not in used)
+        # all-or-nothing per requested group, trimmed greedily
+        picked: Tuple[str, ...] = ()
+        extent = 1
+        for a in mesh_axes:
+            if size % (extent * mesh_shape[a]) == 0:
+                picked += (a,)
+                extent *= mesh_shape[a]
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(picked)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside a ctx."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = spec_for(x.shape, logical_axes, ctx)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def param_shardings(defs, ctx: Optional[ShardingCtx] = None):
+    """Pytree of NamedShardings matching a pytree of ParamDef."""
+    from repro.models.params import ParamDef  # local to avoid cycle
+    ctx = ctx or current_ctx()
+    assert ctx is not None, "param_shardings requires an active sharding ctx"
+
+    def one(d: ParamDef):
+        return NamedSharding(ctx.mesh, spec_for(d.shape, d.axes, ctx))
+
+    return jax.tree.map(one, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))

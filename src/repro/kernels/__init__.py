@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for FastCache hot spots.
+
+<name>.py  pl.pallas_call + BlockSpec kernels (TPU target; interpret-mode
+           validated on CPU)
+ops.py     jitted wrappers with backend-auto interpret
+ref.py     pure-jnp oracles (the allclose ground truth for tests)
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,53 @@
+"""Local-window kNN token density Pallas kernel (Eq. 10; CTM stage 1).
+
+Each grid step loads one window of w tokens into VMEM, forms the (w, w)
+pairwise squared-distance matrix (one MXU (w,D)x(D,w) matmul + rank-1 terms),
+then extracts the K smallest off-diagonal distances per row by K rounds of
+masked-min (K <= 10, unrolled) — no sort, no gather.  rho_sp = exp(-mean_K).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+INF = jnp.inf
+
+
+def _kernel(h_ref, out_ref, *, k: int, w: int, d: int):
+    h = h_ref[0].astype(F32)                               # (w, D)
+    sq = jnp.sum(h * h, axis=1)
+    dist = (sq[:, None] + sq[None, :]
+            - 2.0 * jax.lax.dot_general(h, h, (((1,), (1,)), ((), ()))))
+    dist = jnp.maximum(dist, 0.0)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (w, w), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (w, w), 1)
+    dist = jnp.where(ii == jj, INF, dist)
+    acc = jnp.zeros((w,), F32)
+    for _ in range(k):                                     # unrolled K-min
+        mn = jnp.min(dist, axis=1)                         # (w,)
+        acc = acc + mn
+        # mask exactly one argmin occurrence per row
+        is_min = dist == mn[:, None]
+        first = jnp.cumsum(is_min.astype(jnp.int32), axis=1) == 1
+        dist = jnp.where(is_min & first, INF, dist)
+    out_ref[0] = jnp.exp(-acc / (k * d))   # per-dim normalized (see ref.py)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def knn_density(h: jax.Array, *, k: int = 5,
+                interpret: bool = True) -> jax.Array:
+    """h: (n_windows, w, D) -> rho_sp (n_windows, w)."""
+    nw, w, d = h.shape
+    k = min(k, w - 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, w=w, d=d),
+        grid=(nw,),
+        in_specs=[pl.BlockSpec((1, w, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nw, w), F32),
+        interpret=interpret,
+    )(h)

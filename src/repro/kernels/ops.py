@@ -1,0 +1,47 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto: compiled Mosaic on TPU, the Pallas
+interpreter elsewhere (CPU CI / this container).  The interpreter executes
+the same kernel bodies, so correctness tests here transfer to TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import knn_density as _knn
+from repro.kernels import linear_blend as _lb
+from repro.kernels import saliency_delta as _sd
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def saliency_delta(x, x_prev, *, bn: int = 128, bd: int = 512,
+                   interpret=None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _sd.saliency_delta(x, x_prev, bn=bn, bd=bd, interpret=interpret)
+
+
+def linear_blend(x, w, b, prev, *, gamma: float = 0.5, bm: int = 128,
+                 bf: int = 256, bk: int = 256, interpret=None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _lb.linear_blend(x, w, b, prev, gamma=gamma, bm=bm, bf=bf, bk=bk,
+                            interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret=None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _fa.flash_attention(q, k, v, causal=causal, window=window, bq=bq,
+                               bk=bk, interpret=interpret)
+
+
+def knn_density(h, *, k: int = 5, interpret=None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _knn.knn_density(h, k=k, interpret=interpret)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def saliency_delta(x: jax.Array, x_prev: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x, x_prev: (N, D). Returns (per-token saliency (N,), ||dX||_F^2,
+    ||X_prev||_F^2) — the fused quantities of Eqs. 1 and 4."""
+    d = x.astype(F32) - x_prev.astype(F32)
+    sal = jnp.sum(d * d, axis=-1)
+    return sal, jnp.sum(sal), jnp.sum(jnp.square(x_prev.astype(F32)))
+
+
+def linear_blend(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array, gamma: float) -> jax.Array:
+    """out = gamma * (x @ w + b) + (1-gamma) * prev.  x: (M, D); w: (D, F)."""
+    y = jnp.matmul(x.astype(F32), w.astype(F32)) + b.astype(F32)
+    return (gamma * y + (1.0 - gamma) * prev.astype(F32)).astype(x.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, window: int = 0) -> jax.Array:
+    """q: (B, H, Sq, dh); k, v: (B, KVH, Skv, dh); GQA by head grouping.
+    Positions are aligned to the sequence end (prefill: Sq == Skv)."""
+    b, h, sq, dh = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, sq, dh)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(F32), k.astype(F32))
+    s = s * dh ** -0.5
+    qpos = jnp.arange(sq) + (skv - sq)
+    kpos = jnp.arange(skv)
+    m = jnp.ones((sq, skv), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(F32))
+    return o.reshape(b, h, sq, dh).astype(q.dtype)
+
+
+def knn_density(h: jax.Array, k: int) -> jax.Array:
+    """h: (W, w, D) windowed tokens -> rho_sp (W, w) (Eq. 10)."""
+    hf = h.astype(F32)
+    sq = jnp.sum(hf * hf, axis=-1)
+    dist = (sq[..., :, None] + sq[..., None, :]
+            - 2.0 * jnp.einsum("wid,wjd->wij", hf, hf))
+    dist = jnp.maximum(dist, 0.0)
+    w = h.shape[-2]
+    dist = jnp.where(jnp.eye(w, dtype=bool), jnp.inf, dist)
+    neg_topk, _ = jax.lax.top_k(-dist, min(k, w - 1))
+    return jnp.exp(-jnp.mean(-neg_topk, axis=-1) / h.shape[-1])

@@ -1,0 +1,279 @@
+"""Bundles for the dry-run and launchers: per (arch x input-shape) the step
+function, abstract inputs (ShapeDtypeStruct — no allocation), and explicit
+in/out shardings.
+
+Shape -> step mapping (brief §MULTI-POD DRY-RUN):
+  train_4k     train_step  (loss + grad + optimizer update)
+  prefill_32k  prefill (decoders) / encode (encoder-only archs)
+  decode_32k   serve_step: ONE new token against a seq_len KV cache
+  long_500k    serve_step; sub-quadratic only (SWA window for dense/moe/vlm,
+               native state for ssm/hybrid) — see DESIGN.md §6
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import InputShape, ModelConfig
+from repro.configs.shapes import SHAPES
+from repro.distributed.sharding import (ShardingCtx, make_rules,
+                                        param_shardings, spec_for,
+                                        use_sharding)
+from repro.models import build_model
+from repro.models.params import ParamDef, abstract_params, count_params
+from repro.training.loop import make_train_step
+from repro.training.optimizer import (AdamW, Adafactor, cosine_schedule,
+                                      make_optimizer)
+
+SWA_WINDOW = 8192  # sliding window substituting full attention at 500k
+
+
+class Bundle(NamedTuple):
+    step_fn: Any
+    args: Tuple                     # ShapeDtypeStructs
+    in_shardings: Tuple
+    out_shardings: Any
+    meta: Dict
+
+
+def skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    cfg = get_config(arch)
+    if cfg.is_encoder and shape_name in ("decode_32k", "long_500k"):
+        return "encoder-only architecture: no decode step (DESIGN.md §6)"
+    return None
+
+
+def resolve_config(arch: str, shape: InputShape) -> ModelConfig:
+    cfg = get_config(arch)
+    if shape.name == "long_500k" and not cfg.is_encoder:
+        kinds = set(cfg.layer_kinds)
+        if kinds == {"attn"} or (cfg.moe is not None and kinds == {"attn"}):
+            # dense/moe/vlm: sub-quadratic via sliding-window attention
+            cfg = cfg.replace(sliding_window=SWA_WINDOW)
+    return cfg
+
+
+# --------------------------------------------------------------------------
+# Abstract batches
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int, *, train: bool
+                ) -> Tuple[Dict, Dict]:
+    """(SDS dict, logical-axes dict) for a full-sequence batch."""
+    dt = cfg.dtype
+    if cfg.family == "audio":
+        sds = {"features": _sds((batch, seq, cfg.frontend_dim), "float32")}
+        axes = {"features": ("act_batch", "act_seq", None)}
+        if train:
+            sds["targets"] = _sds((batch, seq), "int32")
+            sds["mask_indices"] = _sds((batch, seq), "bool")
+            axes["targets"] = ("act_batch", "act_seq")
+            axes["mask_indices"] = ("act_batch", "act_seq")
+        return sds, axes
+    sds = {"tokens": _sds((batch, seq), "int32")}
+    axes = {"tokens": ("act_batch", "act_seq")}
+    if cfg.family == "vlm":
+        sds["vision_embeds"] = _sds((batch, cfg.vision_tokens, cfg.d_model),
+                                    dt)
+        sds["vision_mask"] = _sds((batch, seq), "bool")
+        sds["positions"] = _sds((batch, seq, 3), "int32")
+        axes["vision_embeds"] = ("act_batch", None, "act_embed")
+        axes["vision_mask"] = ("act_batch", "act_seq")
+        axes["positions"] = ("act_batch", "act_seq", None)
+    return sds, axes
+
+
+def _shard_tree(sds_tree, axes_tree, ctx: ShardingCtx):
+    return jax.tree.map(
+        lambda s, a: NamedSharding(ctx.mesh, spec_for(s.shape, a, ctx)),
+        sds_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, (tuple, jax.ShapeDtypeStruct))
+        and not isinstance(x, dict))
+
+
+def _replicated(ctx):
+    return NamedSharding(ctx.mesh, P())
+
+
+# --------------------------------------------------------------------------
+# Optimizer sharding
+# --------------------------------------------------------------------------
+
+def optimizer_shardings(opt, defs, ctx: ShardingCtx):
+    scalar = _replicated(ctx)
+    if isinstance(opt, AdamW):
+        ps = param_shardings(defs, ctx)
+        from repro.training.optimizer import AdamWState
+        return AdamWState(step=scalar, mu=ps, nu=ps)
+    assert isinstance(opt, Adafactor)
+    from repro.training.optimizer import AdafactorState
+
+    def vr(d: ParamDef):
+        if len(d.shape) >= 2:
+            return NamedSharding(ctx.mesh,
+                                 spec_for(d.shape[:-1], d.axes[:-1], ctx))
+        return NamedSharding(ctx.mesh, spec_for(d.shape, d.axes, ctx))
+
+    def vc(d: ParamDef):
+        if len(d.shape) >= 2:
+            return NamedSharding(
+                ctx.mesh,
+                spec_for(d.shape[:-2] + d.shape[-1:],
+                         d.axes[:-2] + d.axes[-1:], ctx))
+        return _replicated(ctx)
+
+    leaf = lambda x: isinstance(x, ParamDef)
+    return AdafactorState(step=scalar,
+                          vr=jax.tree.map(vr, defs, is_leaf=leaf),
+                          vc=jax.tree.map(vc, defs, is_leaf=leaf))
+
+
+# --------------------------------------------------------------------------
+# Bundle builder
+# --------------------------------------------------------------------------
+
+def build_bundle(arch: str, shape_name: str, mesh, *,
+                 prefix_groups: int = 1,
+                 num_layers: Optional[int] = None,
+                 seq_override: Optional[int] = None,
+                 attn_seq_shard: bool = False) -> Bundle:
+    shape = SHAPES[shape_name]
+    cfg = resolve_config(arch, shape)
+    if num_layers is not None:
+        cfg = cfg.replace(num_layers=num_layers)
+    if seq_override is not None:
+        shape = dataclasses.replace(shape, seq_len=seq_override)
+    long_ctx = shape.name == "long_500k"
+    rules = make_rules(shape.kind, long_context=long_ctx,
+                       attn_seq_shard=attn_seq_shard)
+    ctx = ShardingCtx(mesh, rules)
+
+    model = build_model(cfg) if cfg.family == "dit" else build_model(
+        cfg, prefix_groups=prefix_groups)
+    defs = model.param_defs()
+    params_sds = model.abstract_params()
+    params_sh = param_shardings(defs, ctx)
+    n_params = count_params(defs)
+
+    meta = {"arch": arch, "shape": shape_name, "config": cfg.name,
+            "params": n_params, "family": cfg.family,
+            "n_super": getattr(model, "n_super", cfg.num_layers),
+            "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+            "kind": shape.kind,
+            "sliding_window": cfg.sliding_window}
+
+    if shape.kind == "train":
+        bsds, baxes = batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                  train=True)
+        bsh = _shard_tree(bsds, baxes, ctx)
+        opt = make_optimizer(cfg.optimizer)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        opt_sh = optimizer_shardings(opt, defs, ctx)
+        lr_fn = cosine_schedule(3e-4, 100, 10_000)
+        train_step = make_train_step(model, opt, lr_fn)
+
+        def step(params, opt_state, batch):
+            with use_sharding(mesh, rules):
+                return train_step(params, opt_state, batch)
+
+        metrics_sh = jax.tree.map(
+            lambda _: _replicated(ctx),
+            jax.eval_shape(train_step, params_sds, opt_sds, bsds)[2])
+        return Bundle(step, (params_sds, opt_sds, bsds),
+                      (params_sh, opt_sh, bsh),
+                      (params_sh, opt_sh, metrics_sh), meta)
+
+    if shape.kind == "prefill":
+        bsds, baxes = batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                  train=False)
+        bsh = _shard_tree(bsds, baxes, ctx)
+        if cfg.is_encoder:
+            def step(params, batch):
+                with use_sharding(mesh, rules):
+                    hidden, _ = model.apply(params, batch)
+                    return hidden
+
+            out_sds = jax.eval_shape(step, params_sds, bsds)
+            out_sh = NamedSharding(ctx.mesh, spec_for(
+                out_sds.shape, ("act_batch", "act_seq", "act_embed"), ctx))
+            return Bundle(step, (params_sds, bsds), (params_sh, bsh),
+                          out_sh, meta)
+
+        window = shape.seq_len
+
+        def step(params, batch):
+            with use_sharding(mesh, rules):
+                return model.prefill(params, batch, window)
+
+        cache_sh = param_shardings(
+            model.cache_defs(shape.global_batch, window), ctx)
+        logits_sds, _ = jax.eval_shape(step, params_sds, bsds)
+        logits_sh = NamedSharding(ctx.mesh, spec_for(
+            logits_sds.shape, ("act_batch", "act_vocab"), ctx))
+        return Bundle(step, (params_sds, bsds), (params_sh, bsh),
+                      (logits_sh, cache_sh), meta)
+
+    # ---- decode
+    window = min(shape.seq_len,
+                 cfg.sliding_window if cfg.sliding_window else shape.seq_len)
+    meta["cache_window"] = window
+    cache_defs = model.cache_defs(shape.global_batch, window)
+    cache_sds = abstract_params(cache_defs, cfg.dtype)
+    cache_sh = param_shardings(cache_defs, ctx)
+    tokens_sds = _sds((shape.global_batch,), "int32")
+    tokens_sh = NamedSharding(ctx.mesh, spec_for(
+        (shape.global_batch,), ("act_batch",), ctx))
+
+    def step(params, tokens, cache):
+        with use_sharding(mesh, rules):
+            return model.decode_step(params, tokens, cache)
+
+    logits_sds, _ = jax.eval_shape(step, params_sds, tokens_sds, cache_sds)
+    logits_sh = NamedSharding(ctx.mesh, spec_for(
+        logits_sds.shape, ("act_batch", "act_vocab"), ctx))
+    return Bundle(step, (params_sds, tokens_sds, cache_sds),
+                  (params_sh, tokens_sh, cache_sh),
+                  (logits_sh, cache_sh), meta)
+
+
+# --------------------------------------------------------------------------
+# Model FLOPs (roofline's "useful compute" reference)
+# --------------------------------------------------------------------------
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: routed fraction only)."""
+    model = build_model(cfg)
+    total = count_params(model.param_defs())
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    expert_block = 3 * cfg.d_model * m.d_ff_expert
+    n_moe_layers = sum(1 for i in range(len(cfg.layer_kinds))
+                       if cfg.family == "moe"
+                       or (cfg.moe and i % m.moe_layer_period == 1))
+    if cfg.family == "moe":
+        n_moe_layers = cfg.num_layers
+    all_expert = n_moe_layers * m.num_experts * expert_block
+    active_expert = n_moe_layers * m.top_k * expert_block
+    return total - all_expert + active_expert
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6*N*D for training, 2*N_active*D for inference (D = tokens)."""
+    n_act = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * shape.global_batch  # one token per sequence

@@ -1,0 +1,176 @@
+"""Attention: GQA, causal / bidirectional / sliding-window, decode-with-cache.
+
+Two XLA execution paths (the Pallas flash kernel in ``repro.kernels`` is the
+TPU-target hot path; these are the portable references that the dry-run lowers):
+
+* ``attend_direct`` — materializes (Sq, Skv) logits; used for short sequences.
+* ``attend_chunked`` — online-softmax scan over KV chunks; O(Sq * chunk)
+  memory; used for long sequences (prefill_32k and up).
+
+``prefix_grouped_causal`` is a beyond-paper compute optimization: causal
+attention computed as G independent rectangular attends, q-group g attending
+only its prefix — cuts the fully-masked upper-triangle FLOPs from ~2x useful
+to (G+1)/G of useful. See EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import flags
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _split_gqa(q: jax.Array, kvh: int) -> jax.Array:
+    """(B, S, H, dh) -> (B, S, KVH, G, dh)."""
+    b, s, h, dh = q.shape
+    return q.reshape(b, s, kvh, h // kvh, dh)
+
+
+def _mask(q_pos: jax.Array, kv_pos: jax.Array, causal: bool,
+          window: int, kv_valid: Optional[jax.Array]) -> jax.Array:
+    """Bool mask (..., Sq, Skv) from position arrays (..., Sq) / (..., Skv)."""
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= kp <= qp
+    if window > 0:
+        m &= kp > qp - window
+    m &= kp >= 0  # invalid cache slots are marked pos=-1
+    if kv_valid is not None:
+        m &= kp < kv_valid[..., None, None]
+    return m
+
+
+def attend_direct(q: jax.Array, k: jax.Array, v: jax.Array,
+                  q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool,
+                  window: int = 0,
+                  kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """q: (B,Sq,H,dh); k/v: (B,Skv,KVH,dh); positions (B,S*) or (S*,)."""
+    kvh = k.shape[2]
+    scale = q.shape[-1] ** -0.5
+    qg = _split_gqa(q, kvh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=F32) * scale
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]
+    if kv_pos.ndim == 1:
+        kv_pos = kv_pos[None]
+    m = _mask(q_pos, kv_pos, causal, window, kv_valid)     # (B,Sq,Skv)
+    s = jnp.where(m[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=F32).astype(q.dtype)
+    return out.reshape(q.shape)
+
+
+def attend_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                   q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool,
+                   window: int = 0, chunk_kv: int = 1024) -> jax.Array:
+    """Online-softmax scan over KV chunks. Memory O(Sq * chunk_kv)."""
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    if skv % chunk_kv:
+        pad = chunk_kv - skv % chunk_kv
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_pos.ndim == 1:
+            kv_pos = kv_pos[None]
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        skv += pad
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]
+    if kv_pos.ndim == 1:
+        kv_pos = kv_pos[None]
+    q_pos = jnp.broadcast_to(q_pos, (b, sq))
+    kv_pos = jnp.broadcast_to(kv_pos, (b, skv))
+    n_chunks = skv // chunk_kv
+    qg = _split_gqa(q, kvh)
+    scale = dh ** -0.5
+
+    kc = k.reshape(b, n_chunks, chunk_kv, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk_kv, kvh, dh).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(b, n_chunks, chunk_kv).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        kj, vj, pj = xs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kj,
+                       preferred_element_type=F32) * scale
+        msk = _mask(q_pos, pj, causal, window, None)       # (B,Sq,ck)
+        s = jnp.where(msk[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vj.dtype), vj,
+                        preferred_element_type=F32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, F32)
+    l0 = jnp.zeros((b, kvh, g, sq), F32)
+    acc0 = jnp.zeros((b, kvh, g, sq, dh), F32)
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kc, vc, pc),
+                                      unroll=flags.scan_unroll(n_chunks))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def prefix_grouped_causal(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                          groups: int = 1, chunk_kv: int = 1024):
+    """Causal self-attention as `groups` prefix attends (Sq == Skv)."""
+    sq = q.shape[1]
+    if groups <= 1 or sq % groups:
+        return attend_chunked(q, k, v, q_pos, kv_pos, causal=True,
+                              window=window, chunk_kv=chunk_kv)
+    gs = sq // groups
+    chunk_kv = min(chunk_kv, gs)
+    outs = []
+    for gidx in range(groups):
+        lo, hi = gidx * gs, (gidx + 1) * gs
+        qp = q_pos[..., lo:hi]
+        kv_hi = hi
+        kv_lo = 0 if window <= 0 else max(0, lo - window + 1)
+        kp = kv_pos[..., kv_lo:kv_hi]
+        outs.append(attend_chunked(
+            q[:, lo:hi], k[:, kv_lo:kv_hi], v[:, kv_lo:kv_hi], qp, kp,
+            causal=True, window=window, chunk_kv=min(chunk_kv, kv_hi - kv_lo)))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool,
+              window: int = 0, kv_valid: Optional[jax.Array] = None,
+              impl: str = "auto", chunk_kv: int = 1024,
+              prefix_groups: int = 1) -> jax.Array:
+    """Dispatcher. q (B,Sq,H,dh); k/v (B,Skv,KVH,dh)."""
+    sq, skv = q.shape[1], k.shape[1]
+    if impl == "auto":
+        impl = "direct" if sq * skv <= flags.DIRECT_MAX_ELEMS else "chunked"
+    if impl == "direct":
+        return attend_direct(q, k, v, q_pos, kv_pos, causal=causal,
+                             window=window, kv_valid=kv_valid)
+    if causal and sq == skv and prefix_groups > 1:
+        return prefix_grouped_causal(q, k, v, q_pos, kv_pos, window=window,
+                                     groups=prefix_groups, chunk_kv=chunk_kv)
+    return attend_chunked(q, k, v, q_pos, kv_pos, causal=causal,
+                          window=window, chunk_kv=chunk_kv)
+
+
+def decode_attend(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                  q_pos: jax.Array, cache_pos: jax.Array) -> jax.Array:
+    """One-token decode. q: (B,1,H,dh); caches (B,W,KVH,dh);
+    q_pos (B,); cache_pos (B,W) absolute positions (-1 = empty)."""
+    k_cache = constrain(k_cache, "act_batch", "act_kv_seq", None, None)
+    v_cache = constrain(v_cache, "act_batch", "act_kv_seq", None, None)
+    return attend_direct(q, k_cache, v_cache, q_pos[:, None], cache_pos,
+                         causal=True, window=0)

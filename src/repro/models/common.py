@@ -1,0 +1,175 @@
+"""Shared model building blocks: norms, RoPE / M-RoPE, MLPs, embeddings."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def fdot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Matmul with f32 accumulation, result in a.dtype."""
+    return jnp.matmul(a, b, preferred_element_type=F32).astype(a.dtype)
+
+
+def feinsum(eq: str, *xs: jax.Array) -> jax.Array:
+    return jnp.einsum(eq, *xs, preferred_element_type=F32).astype(xs[0].dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(F32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(F32) + b.astype(F32)
+    return out.astype(x.dtype)
+
+
+def modulate(x: jax.Array, shift: jax.Array, scale: jax.Array) -> jax.Array:
+    """adaLN modulation; shift/scale are (B, D), x is (B, N, D)."""
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings
+# --------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, half_dim: int,
+                 theta: float) -> jax.Array:
+    """positions (...,) -> angles (..., half_dim), f32."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(half_dim, dtype=F32) / half_dim))
+    return positions.astype(F32)[..., None] * inv_freq
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (B, S, H, dh); positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = _rope_angles(positions, dh // 2, theta)          # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array,
+                sections: Tuple[int, ...], theta: float) -> jax.Array:
+    """Qwen2-VL multi-axis RoPE.
+
+    x: (B, S, H, dh); positions: (B, S, A) with A == len(sections); the rotary
+    half-dims are split into `sections` (summing to dh//2), each section
+    rotated with its own position axis (t, h, w).
+    """
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    axis_of_freq = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)])
+    # pos_per_freq: (B, S, dh/2)
+    pos = jnp.take_along_axis(
+        positions.astype(F32),
+        jnp.broadcast_to(axis_of_freq[None, None, :],
+                         positions.shape[:2] + (dh // 2,)),
+        axis=-1)
+    inv_freq = 1.0 / (theta ** (jnp.arange(dh // 2, dtype=F32) / (dh // 2)))
+    ang = pos * inv_freq                                   # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_dispatch(x: jax.Array, positions: Optional[jax.Array], kind: str,
+                  theta: float, sections: Tuple[int, ...]) -> jax.Array:
+    if kind == "none" or positions is None:
+        return x
+    if kind == "mrope":
+        if positions.ndim == 2:  # text-only: broadcast to all axes
+            positions = jnp.repeat(positions[..., None], len(sections), -1)
+        return apply_mrope(x, positions, sections, theta)
+    return apply_rope(x, positions, theta)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = fdot(x, w_gate)
+    u = fdot(x, w_up)
+    return fdot(jax.nn.silu(g.astype(F32)).astype(x.dtype) * u, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+             w_out: jax.Array, b_out: jax.Array) -> jax.Array:
+    h = fdot(x, w_in) + b_in
+    h = jax.nn.gelu(h.astype(F32), approximate=True).astype(x.dtype)
+    return fdot(h, w_out) + b_out
+
+
+# --------------------------------------------------------------------------
+# Embeddings
+# --------------------------------------------------------------------------
+
+def timestep_embedding(t: jax.Array, dim: int,
+                       max_period: float = 10_000.0) -> jax.Array:
+    """Sinusoidal timestep embedding (DiT). t: (B,) -> (B, dim) f32."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period)
+                    * jnp.arange(half, dtype=F32) / half)
+    args = t.astype(F32)[:, None] * freqs[None]
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, ((0, 0), (0, 1)))
+    return emb
+
+
+def patchify(latents: jax.Array, patch: int) -> jax.Array:
+    """(B, H, W, C) -> (B, (H/p)*(W/p), p*p*C)."""
+    b, h, w, c = latents.shape
+    x = latents.reshape(b, h // patch, patch, w // patch, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, (h // patch) * (w // patch), patch * patch * c)
+
+
+def unpatchify(tokens: jax.Array, patch: int, grid: int) -> jax.Array:
+    """(B, g*g, p*p*C) -> (B, g*p, g*p, C)."""
+    b, n, d = tokens.shape
+    c = d // (patch * patch)
+    x = tokens.reshape(b, grid, grid, patch, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, grid * patch, grid * patch, c)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv along seq. x: (B, S, C); w: (K, C).
+
+    If `state` (B, K-1, C) is given, it is the trailing context (decode)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (k - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x, dtype=F32)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1]].astype(F32) * w[i].astype(F32)
+    return out.astype(x.dtype)

@@ -1,0 +1,49 @@
+"""Trace-time flags.
+
+UNROLL_INNER: when True, every lax.scan in the model bodies (layer stack, KV
+chunk loops, SSM chunk loops, CE loss chunks) is fully unrolled.  XLA's
+HloCostAnalysis counts a while-loop body ONCE regardless of trip count, so
+the dry-run's cost-measurement compiles (reduced-depth variants, see
+launch/dryrun.py) run with this flag to get exact FLOP/byte/collective
+counts; the production-shape compile keeps rolled scans (small HLO, real
+memory analysis).
+"""
+from __future__ import annotations
+
+import contextlib
+
+UNROLL_INNER = False
+
+# Perf opt (EXPERIMENTS.md §Perf): gather-based MoE when tokens*top_k <=
+# num_experts (decode) instead of capacity dispatch. Off by default so the
+# paper-faithful baseline measurements stay stable.
+MOE_GATHER_DECODE = False
+
+# Perf opt: largest Sq*Skv for which attention materializes full logits;
+# above it the online-softmax chunked path bounds the working set.
+DIRECT_MAX_ELEMS = 4096 * 4096
+
+# Perf opt: sharding constraints on the MoE dispatch intermediates (the
+# (T*k, D) token copies and routing arrays). Without them GSPMD replicates
+# the dispatch tensors (kimi train: ~120 GB bf16 per copy, per device).
+MOE_CONSTRAIN_DISPATCH = False
+
+# Perf opt: rematerialize the chunked-CE loss head in backward instead of
+# saving each chunk's (B, c, V) f32 logits (qwen3-14b: ~5 GB per chunk).
+CE_REMAT = False
+
+
+def scan_unroll(n: int) -> int:
+    """Value for lax.scan(..., unroll=...)."""
+    return max(1, n) if UNROLL_INNER else 1
+
+
+@contextlib.contextmanager
+def unroll_inner():
+    global UNROLL_INNER
+    prev = UNROLL_INNER
+    UNROLL_INNER = True
+    try:
+        yield
+    finally:
+        UNROLL_INNER = prev

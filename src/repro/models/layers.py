@@ -1,0 +1,339 @@
+"""Attention + FFN + MoE layer bodies and their ParamDefs.
+
+Every ``*_defs`` returns a dict of ParamDef with logical axes; the matching
+``*_apply`` consumes the materialized params. Layer stacks add a leading
+``layers`` axis via ``stack_defs`` and scan over it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.distributed.sharding import constrain
+from repro.models import common, flags
+from repro.models.attention import attention, decode_attend
+from repro.models.params import ParamDef
+
+F32 = jnp.float32
+
+
+def stack_defs(defs, n: int):
+    """Add a leading stacking dim of size n to every ParamDef."""
+    def one(d: ParamDef) -> ParamDef:
+        return ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init,
+                        d.scale, d.dtype)
+    return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# --------------------------------------------------------------------------
+# Attention layer
+# --------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, h, kvh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    out = {
+        "norm": ParamDef((d,), ("embed",), "ones", dtype="float32"),
+        "wq": ParamDef((d, h, dh), ("embed", "heads", "head_dim"), "fan_in"),
+        "wk": ParamDef((d, kvh, dh), ("embed", "kv_heads", "head_dim"), "fan_in"),
+        "wv": ParamDef((d, kvh, dh), ("embed", "kv_heads", "head_dim"), "fan_in"),
+        "wo": ParamDef((h, dh, d), ("heads", "head_dim", "embed"), "fan_in",
+                       scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = ParamDef((dh,), ("head_dim",), "ones", dtype="float32")
+        out["k_norm"] = ParamDef((dh,), ("head_dim",), "ones", dtype="float32")
+    if cfg.is_encoder and cfg.family in ("audio",):
+        out["norm_b"] = ParamDef((d,), ("embed",), "zeros", dtype="float32")
+    return out
+
+
+def _qkv(p, x, cfg: ModelConfig, positions):
+    q = common.feinsum("bsd,dhk->bshk", x, p["wq"])
+    k = common.feinsum("bsd,dhk->bshk", x, p["wk"])
+    v = common.feinsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = common.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = common.rope_dispatch(q, positions, cfg.rope_kind, cfg.rope_theta,
+                             cfg.mrope_sections)
+    k = common.rope_dispatch(k, positions, cfg.rope_kind, cfg.rope_theta,
+                             cfg.mrope_sections)
+    q = constrain(q, "act_batch", "act_attn_seq", "act_heads", None)
+    return q, k, v
+
+
+def attn_apply(p, x: jax.Array, *, cfg: ModelConfig,
+               positions: Optional[jax.Array],
+               cache: Optional[dict] = None,
+               decode_pos: Optional[jax.Array] = None,
+               window: int = 0, prefix_groups: int = 1,
+               ) -> Tuple[jax.Array, Optional[dict]]:
+    """Pre-norm attention sublayer with residual.
+
+    * train/encode: ``cache=None, decode_pos=None`` — full self-attention.
+    * prefill:      ``cache`` is a zeroed cache dict to fill, decode_pos None.
+    * decode:       ``cache`` holds K/V; ``decode_pos`` (B,) current positions.
+    """
+    if "norm_b" in p:
+        h_in = common.layer_norm(x, p["norm"], p["norm_b"], cfg.norm_eps)
+    else:
+        h_in = common.rms_norm(x, p["norm"], cfg.norm_eps)
+
+    causal = not cfg.is_encoder
+    new_cache = None
+    if decode_pos is not None:                       # ---- decode (Sq == 1)
+        assert cache is not None
+        q, k, v = _qkv(p, h_in, cfg, positions)
+        w = cache["k"].shape[1]
+        slot = decode_pos % w                        # (B,)
+        bidx = jnp.arange(x.shape[0])
+        k_cache = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        pos_cache = cache["pos"].at[bidx, slot].set(decode_pos)
+        out = decode_attend(q, k_cache.astype(x.dtype),
+                            v_cache.astype(x.dtype), decode_pos, pos_cache)
+        new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache}
+    else:                                            # ---- full sequence
+        s = x.shape[1]
+        if positions is None:
+            positions = jnp.arange(s)[None]          # (1, S): rope + mask
+        q, k, v = _qkv(p, h_in, cfg, positions)
+        pos1d = positions
+        if pos1d is not None and pos1d.ndim == 3:    # mrope: use t axis
+            pos1d = pos1d[..., 0]
+        out = attention(q, k, v, pos1d, pos1d, causal=causal, window=window,
+                        prefix_groups=prefix_groups)
+        if cache is not None:                        # prefill: fill the cache
+            w = cache["k"].shape[1]
+            kd = k.astype(cache["k"].dtype)
+            vd = v.astype(cache["v"].dtype)
+            pc = jnp.broadcast_to(pos1d, (x.shape[0], s)).astype(jnp.int32)
+            if s >= w:                               # keep the last w entries
+                kd, vd, pc = kd[:, s - w:], vd[:, s - w:], pc[:, s - w:]
+                # rotate so that slot == pos % w
+                shift = (s - w) % w
+                idx = (jnp.arange(w) - shift) % w
+                inv = jnp.argsort(idx)
+                new_cache = {"k": kd[:, inv], "v": vd[:, inv],
+                             "pos": pc[:, inv]}
+            else:
+                pad = w - s
+                new_cache = {
+                    "k": jnp.pad(kd, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "v": jnp.pad(vd, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "pos": jnp.pad(pc, ((0, 0), (0, pad)), constant_values=-1),
+                }
+    proj = common.feinsum("bshk,hkd->bsd", out, p["wo"])
+    proj = constrain(proj, "act_batch", "act_seq", "act_embed")
+    return x + proj, new_cache
+
+
+def attn_cache_defs(cfg: ModelConfig, batch: int, window: int,
+                    dtype: str) -> Dict[str, ParamDef]:
+    kvh, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": ParamDef((batch, window, kvh, dh),
+                      ("act_batch", "act_kv_seq", None, None), "zeros", dtype=dtype),
+        "v": ParamDef((batch, window, kvh, dh),
+                      ("act_batch", "act_kv_seq", None, None), "zeros", dtype=dtype),
+        "pos": ParamDef((batch, window), ("act_batch", "act_kv_seq"),
+                        "zeros", dtype="int32"),
+    }
+
+
+# --------------------------------------------------------------------------
+# Dense FFN
+# --------------------------------------------------------------------------
+
+def ffn_defs(cfg: ModelConfig, d_ff: Optional[int] = None,
+             kind: str = "swiglu") -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    out = {"norm": ParamDef((d,), ("embed",), "ones", dtype="float32")}
+    if kind == "swiglu":
+        out.update({
+            "w_gate": ParamDef((d, f), ("embed", "ffn"), "fan_in"),
+            "w_up": ParamDef((d, f), ("embed", "ffn"), "fan_in"),
+            "w_down": ParamDef((f, d), ("ffn", "embed"), "fan_in",
+                               scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+        })
+    else:  # gelu
+        out.update({
+            "norm_b": ParamDef((d,), ("embed",), "zeros", dtype="float32"),
+            "w_in": ParamDef((d, f), ("embed", "ffn"), "fan_in"),
+            "b_in": ParamDef((f,), ("ffn",), "zeros"),
+            "w_out": ParamDef((f, d), ("ffn", "embed"), "fan_in",
+                              scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+            "b_out": ParamDef((d,), ("embed",), "zeros"),
+        })
+    return out
+
+
+def ffn_apply(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "w_in" in p:
+        h = common.layer_norm(x, p["norm"], p["norm_b"], cfg.norm_eps)
+        out = common.gelu_mlp(h, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+    else:
+        h = common.rms_norm(x, p["norm"], cfg.norm_eps)
+        h = constrain(h, "act_batch", "act_seq", "act_embed")
+        out = common.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    out = constrain(out, "act_batch", "act_seq", "act_embed")
+    return x + out
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts
+# --------------------------------------------------------------------------
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    m = cfg.moe
+    assert m is not None
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    out = {
+        "norm": ParamDef((d,), ("embed",), "ones", dtype="float32"),
+        "router": ParamDef((d, e), ("embed", None), "fan_in", dtype="float32"),
+        "we_gate": ParamDef((e, d, f), ("expert", "expert_embed", None), "fan_in"),
+        "we_up": ParamDef((e, d, f), ("expert", "expert_embed", None), "fan_in"),
+        "we_down": ParamDef((e, f, d), ("expert", None, "expert_embed"), "fan_in",
+                            scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+    if m.num_shared_experts:
+        fs = f * m.num_shared_experts
+        out.update({
+            "ws_gate": ParamDef((d, fs), ("embed", "ffn"), "fan_in"),
+            "ws_up": ParamDef((d, fs), ("embed", "ffn"), "fan_in"),
+            "ws_down": ParamDef((fs, d), ("ffn", "embed"), "fan_in"),
+        })
+    if m.dense_ff_parallel:
+        fd = m.dense_ff_parallel
+        out.update({
+            "wd_gate": ParamDef((d, fd), ("embed", "ffn"), "fan_in"),
+            "wd_up": ParamDef((d, fd), ("embed", "ffn"), "fan_in"),
+            "wd_down": ParamDef((fd, d), ("ffn", "embed"), "fan_in"),
+        })
+    return out
+
+
+def moe_capacity(m: MoEConfig, tokens: int) -> int:
+    c = int(m.capacity_factor * m.top_k * tokens / m.num_experts)
+    return max(m.min_capacity, c)
+
+
+def moe_gather_apply(p, x: jax.Array, cfg: ModelConfig
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Decode-path MoE: gather the top-k experts' weights per token and run
+    per-token GEMVs — exact active-parameter FLOPs, no capacity padding.
+    Used when tokens*top_k <= num_experts (decode steps), where the
+    capacity dispatch would waste E*min_capacity slots on a handful of
+    tokens (the dominant compute term of MoE decode otherwise)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = m.top_k
+    h = common.rms_norm(x, p["norm"], cfg.norm_eps)
+    xt = h.reshape(t, d)
+    logits = jnp.matmul(xt.astype(F32), p["router"])         # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    wg = jnp.take(p["we_gate"], top_i, axis=0)               # (T,k,D,F)
+    wu = jnp.take(p["we_up"], top_i, axis=0)
+    wd = jnp.take(p["we_down"], top_i, axis=0)               # (T,k,F,D)
+    g = common.feinsum("td,tkdf->tkf", xt, wg)
+    u = common.feinsum("td,tkdf->tkf", xt, wu)
+    act = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    out = common.feinsum("tkf,tkfd->tkd", act, wd)           # (T,k,D)
+    y = jnp.einsum("tkd,tk->td", out.astype(F32),
+                   top_w.astype(F32)).astype(x.dtype)
+
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_i[:, 0], m.num_experts,
+                                          dtype=F32), axis=0)
+    aux = (m.num_experts * jnp.sum(frac_tokens * jnp.mean(probs, axis=0))
+           * m.router_aux_weight)
+    if m.num_shared_experts:
+        y = y + common.swiglu(xt, p["ws_gate"], p["ws_up"],
+                              p["ws_down"]).astype(F32).astype(x.dtype)
+    if m.dense_ff_parallel:
+        y = y + common.swiglu(xt, p["wd_gate"], p["wd_up"],
+                              p["wd_down"]).astype(F32).astype(x.dtype)
+    return x + y.reshape(b, s, d), aux
+
+
+def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based top-k dispatch (scatter, not one-hot einsum) with
+    expert-parallel GEMMs. Returns (residual-added output, aux load loss)."""
+    m = cfg.moe
+    assert m is not None
+    b, s, d = x.shape
+    t = b * s
+    k, e = m.top_k, m.num_experts
+    if flags.MOE_GATHER_DECODE and t * k <= e:
+        # decode: gather path, no capacity padding (perf opt, see §Perf)
+        return moe_gather_apply(p, x, cfg)
+    cap = moe_capacity(m, t)
+
+    h = common.rms_norm(x, p["norm"], cfg.norm_eps)
+    xt = h.reshape(t, d)
+    xt = constrain(xt, "act_batch", "act_embed")
+
+    logits = jnp.matmul(xt.astype(F32), p["router"])         # (T, E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                   # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- slot assignment: sort copies by expert (MegaBlocks-style); the
+    # slot of a copy is its rank within its expert's contiguous run.  This
+    # is O(Tk log Tk) — no (Tk, E) one-hot cumsum.
+    flat_e = top_i.reshape(t * k)                            # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e))       # (E,)
+    slot_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    flat_slot = jnp.zeros((t * k,), jnp.int32).at[order].set(slot_sorted)
+    valid = flat_slot < cap
+    dump = jnp.where(valid, flat_slot, cap)                  # overflow slot
+
+    # ---- dispatch: scatter tokens into (E, cap+1, D)
+    xk = jnp.repeat(xt[:, None, :], k, axis=1).reshape(t * k, d)
+    if flags.MOE_CONSTRAIN_DISPATCH:
+        xk = constrain(xk, "act_batch", "act_embed")
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    buf = buf.at[flat_e, dump].set(xk, mode="drop")
+    buf = buf[:, :cap]
+    buf = constrain(buf, "act_expert", None, "act_embed")
+
+    # ---- expert GEMMs (E-parallel over `model`)
+    g = common.feinsum("ecd,edf->ecf", buf, p["we_gate"])
+    u = common.feinsum("ecd,edf->ecf", buf, p["we_up"])
+    act = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    out_e = common.feinsum("ecf,efd->ecd", act, p["we_down"])
+    out_e = jnp.pad(out_e, ((0, 0), (0, 1), (0, 0)))         # dump slot = 0
+
+    # ---- combine
+    gathered = out_e[flat_e, dump]                           # (T*k, D)
+    if flags.MOE_CONSTRAIN_DISPATCH:
+        gathered = constrain(gathered, "act_batch", "act_embed")
+    gathered = gathered * (valid[:, None] & True).astype(x.dtype)
+    gathered = gathered.reshape(t, k, d)
+    y = jnp.einsum("tkd,tk->td", gathered.astype(F32),
+                   top_w.astype(F32)).astype(x.dtype)
+
+    # ---- auxiliary load-balancing loss (Switch-style)
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(top_i[:, 0], e, dtype=F32)), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs) * m.router_aux_weight
+
+    if m.num_shared_experts:
+        y = y + common.swiglu(h.reshape(t, d), p["ws_gate"], p["ws_up"],
+                              p["ws_down"]).astype(F32).astype(x.dtype)
+    if m.dense_ff_parallel:
+        y = y + common.swiglu(h.reshape(t, d), p["wd_gate"], p["wd_up"],
+                              p["wd_down"]).astype(F32).astype(x.dtype)
+
+    y = y.reshape(b, s, d)
+    y = constrain(y, "act_batch", "act_seq", "act_embed")
+    return x + y, aux

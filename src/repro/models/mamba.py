@@ -1,0 +1,141 @@
+"""Mamba-1 selective-scan mixer (Jamba's SSM layers) [arXiv:2403.19887].
+
+TPU adaptation: the selective scan runs chunked — an outer ``lax.scan`` over
+sequence chunks carries the (B, d_inner, d_state) state; within a chunk the
+diagonal recurrence ``h_t = a_t * h_{t-1} + b_t`` is a ``lax.associative_scan``
+(log-depth, parallel). Single-step recurrent form for decode; the naive
+recurrence is the test oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, flags
+from repro.models.params import ParamDef
+
+F32 = jnp.float32
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    ds = cfg.ssm.d_state
+    dtr = cfg.ssm.dt_rank or math.ceil(d / 16)
+    return d, di, ds, dtr
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, di, ds, dtr = _dims(cfg)
+    k = cfg.ssm.d_conv
+    return {
+        "norm": ParamDef((d,), ("embed",), "ones", dtype="float32"),
+        "w_in": ParamDef((d, 2 * di), ("embed", "inner"), "fan_in"),
+        "conv_w": ParamDef((k, di), (None, "inner"), "fan_in"),
+        "conv_b": ParamDef((di,), ("inner",), "zeros"),
+        "w_x_proj": ParamDef((di, dtr + 2 * ds), ("inner", None), "fan_in"),
+        "w_dt": ParamDef((dtr, di), (None, "inner"), "fan_in"),
+        "b_dt": ParamDef((di,), ("inner",), "ones", dtype="float32"),
+        "a_log": ParamDef((di, ds), ("inner", "state"), "ones", dtype="float32"),
+        "d_skip": ParamDef((di,), ("inner",), "ones", dtype="float32"),
+        "w_out": ParamDef((di, d), ("inner", "embed"), "fan_in",
+                          scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+
+
+def mamba_state_defs(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    _, di, ds, _ = _dims(cfg)
+    k = cfg.ssm.d_conv
+    ab = ("act_batch",)
+    return {
+        "ssm": ParamDef((batch, di, ds), ab + ("act_inner", None), "zeros",
+                        dtype="float32"),
+        "conv": ParamDef((batch, k - 1, di), ab + (None, "act_inner"), "zeros",
+                         dtype="float32"),
+    }
+
+
+def _ssm_params(p, xc, cfg: ModelConfig):
+    """xc: (B, L, di) post-conv activations. Returns dA, dBx, C for the span."""
+    _, di, ds, dtr = _dims(cfg)
+    dbc = common.fdot(xc, p["w_x_proj"])                     # (B,L,dtr+2ds)
+    dt_r = dbc[..., :dtr]
+    b_mat = dbc[..., dtr:dtr + ds].astype(F32)               # (B,L,ds)
+    c_mat = dbc[..., dtr + ds:].astype(F32)                  # (B,L,ds)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,ri->bli", dt_r.astype(F32), p["w_dt"]) + p["b_dt"])
+    a = -jnp.exp(p["a_log"])                                 # (di,ds)
+    da = jnp.exp(dt[..., None] * a)                          # (B,L,di,ds)
+    dbx = (dt[..., None] * b_mat[:, :, None, :]
+           * xc.astype(F32)[..., None])                      # (B,L,di,ds)
+    return da, dbx, c_mat
+
+
+def _chunk_scan(da, dbx, c_mat, h0):
+    """Associative scan within a chunk. da/dbx: (B,L,di,ds); h0: (B,di,ds)."""
+    # fold initial state into the first step
+    dbx = dbx.at[:, 0].add(da[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+    y = jnp.einsum("blis,bls->bli", hs, c_mat)               # (B,L,di)
+    return y, hs[:, -1]
+
+
+def mamba_apply(p, x, *, cfg: ModelConfig, state: Optional[dict] = None,
+                decode: bool = False, chunk: int = 256,
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """Pre-norm Mamba block with residual."""
+    res = x
+    b, s, d = x.shape
+    _, di, ds, _ = _dims(cfg)
+    kk = cfg.ssm.d_conv
+    xn = common.rms_norm(x, p["norm"], cfg.norm_eps)
+    xz = common.fdot(xn, p["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)                        # (B,S,di)
+
+    conv_state = state["conv"] if state is not None else None
+    conv_out = common.causal_conv1d(xi, p["conv_w"], conv_state) + p["conv_b"]
+    new_conv = jnp.concatenate(
+        [conv_state if conv_state is not None
+         else jnp.zeros((b, kk - 1, di), F32), xi.astype(F32)],
+        axis=1)[:, -(kk - 1):]
+    xc = jax.nn.silu(conv_out.astype(F32)).astype(x.dtype)
+
+    h0 = state["ssm"] if state is not None else jnp.zeros((b, di, ds), F32)
+
+    if decode:
+        assert s == 1
+        da, dbx, c_mat = _ssm_params(p, xc, cfg)
+        h1 = da[:, 0] * h0 + dbx[:, 0]
+        y = jnp.einsum("bis,bs->bi", h1, c_mat[:, 0])[:, None]  # (B,1,di)
+        h_last = h1
+    else:
+        cs = min(chunk, s)
+        while s % cs:                                # largest divisor <= chunk
+            cs -= 1
+        nc = s // cs
+
+        def step(h, xc_chunk):
+            da, dbx, c_mat = _ssm_params(p, xc_chunk, cfg)
+            y, h1 = _chunk_scan(da, dbx, c_mat, h)
+            return h1, y
+
+        xcs = xc.reshape(b, nc, cs, di).transpose(1, 0, 2, 3)
+        h_last, ys = jax.lax.scan(step, h0, xcs,
+                                  unroll=flags.scan_unroll(nc))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+
+    y = y + p["d_skip"] * xc.astype(F32)
+    y = (y * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    out = common.fdot(y, p["w_out"])
+    new_state = {"ssm": h_last, "conv": new_conv}
+    return res + out, new_state

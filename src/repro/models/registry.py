@@ -1,0 +1,12 @@
+"""Model construction from config."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.dit import DiTModel
+from repro.models.transformer import TransformerModel
+
+
+def build_model(cfg: ModelConfig, **kw):
+    if cfg.family == "dit":
+        return DiTModel(cfg)
+    return TransformerModel(cfg, **kw)

@@ -1,0 +1,319 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM (matrix memory, exponential gating)
+and recurrent sLSTM (scalar memory, per-head recurrence) [arXiv:2405.04517].
+
+TPU adaptation: the mLSTM runs in its chunkwise-parallel form — intra-chunk
+terms are dense (c x c) matmuls on the MXU, inter-chunk state is carried by a
+short ``lax.scan`` (S/c steps). The recurrent single-step form is used for
+decode and serves as the test oracle (tests/test_ssm.py checks chunkwise ==
+recurrent). All state math in f32 with running-max stabilization.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, flags
+from repro.models.params import ParamDef
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    inner = int(cfg.ssm.proj_factor * d)
+    h = cfg.num_heads
+    k = cfg.ssm.conv_kernel
+    return {
+        "norm": ParamDef((d,), ("embed",), "ones", dtype="float32"),
+        "w_up": ParamDef((d, 2 * inner), ("embed", "inner"), "fan_in"),
+        "conv_w": ParamDef((k, inner), (None, "inner"), "fan_in"),
+        "wq": ParamDef((inner, inner), ("inner", None), "fan_in"),
+        "wk": ParamDef((inner, inner), ("inner", None), "fan_in"),
+        "wv": ParamDef((inner, inner), ("inner", None), "fan_in"),
+        "w_igate": ParamDef((inner, h), ("inner", None), "fan_in", dtype="float32"),
+        "b_igate": ParamDef((h,), (None,), "zeros", dtype="float32"),
+        "w_fgate": ParamDef((inner, h), ("inner", None), "fan_in", dtype="float32"),
+        "b_fgate": ParamDef((h,), (None,), "ones", dtype="float32"),
+        "out_norm": ParamDef((inner,), ("inner",), "ones", dtype="float32"),
+        "w_down": ParamDef((inner, d), ("inner", "embed"), "fan_in",
+                           scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+
+
+def mlstm_state_defs(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    inner = int(cfg.ssm.proj_factor * cfg.d_model)
+    h = cfg.num_heads
+    dh = inner // h
+    k = cfg.ssm.conv_kernel
+    ab = ("act_batch",)
+    return {
+        "C": ParamDef((batch, h, dh, dh), ab + (None, "act_inner", None),
+                      "zeros", dtype="float32"),
+        "n": ParamDef((batch, h, dh), ab + (None, "act_inner"), "zeros",
+                      dtype="float32"),
+        "m": ParamDef((batch, h), ab + (None,), "zeros", dtype="float32"),
+        "conv": ParamDef((batch, k - 1, inner), ab + (None, "act_inner"),
+                         "zeros", dtype="float32"),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """One chunk. q,k,v: (B,H,c,dh) f32; li,lf: (B,H,c) log-gates f32;
+    state: (C (B,H,dh,dh), n (B,H,dh), m (B,H))."""
+    c0, n0, m0 = state
+    dh = q.shape[-1]
+    c = q.shape[2]
+    fcum = jnp.cumsum(lf, axis=-1)                     # (B,H,c) inclusive
+    g_total = fcum[..., -1]
+
+    # log weight of source s for target t (s <= t): fcum_t - fcum_s + li_s
+    log_w = (fcum[..., :, None] - fcum[..., None, :]
+             + li[..., None, :])                       # (B,H,c,c)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    log_w = jnp.where(tri, log_w, -jnp.inf)
+    m_intra = jnp.max(log_w, axis=-1)                  # (B,H,c)
+    m_inter = fcum + m0[..., None]
+    m_t = jnp.maximum(m_intra, m_inter)                # (B,H,c)
+    m_t = jnp.maximum(m_t, -1e30)                      # guard -inf
+
+    d_mat = jnp.exp(log_w - m_t[..., None])
+    d_mat = jnp.where(tri, d_mat, 0.0)                 # (B,H,c,c)
+    scale = dh ** -0.5                                 # k-scaling (xLSTM conv.)
+    s_qk = jnp.einsum("bhtd,bhsd->bhts", q, k * scale) * d_mat
+    h_intra = jnp.einsum("bhts,bhsd->bhtd", s_qk, v)
+    n_intra = jnp.einsum("bhts,bhsd->bhtd", d_mat,
+                         k * scale)                    # sum of weighted k
+    w_inter = jnp.exp(m_inter - m_t)                   # (B,H,c)
+    h_inter = jnp.einsum("bhtd,bhde->bhte", q, c0) * w_inter[..., None]
+    n_inter = n0[..., None, :] * w_inter[..., None]
+
+    num = h_intra + h_inter
+    nvec = n_intra + n_inter                           # (B,H,c,dh)
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhtd,bhtd->bht", q, nvec)),
+        jnp.exp(-m_t))
+    h_out = num / denom[..., None]
+
+    # ---- state update to end of chunk
+    lw_end = g_total[..., None] - fcum + li            # (B,H,c)
+    m_next = jnp.maximum(g_total + m0, jnp.max(lw_end, axis=-1))
+    w_end = jnp.exp(lw_end - m_next[..., None])        # (B,H,c)
+    decay = jnp.exp(g_total + m0 - m_next)             # (B,H)
+    c_next = (c0 * decay[..., None, None]
+              + jnp.einsum("bhs,bhsd,bhse->bhde", w_end, k * scale, v))
+    n_next = n0 * decay[..., None] + jnp.einsum("bhs,bhsd->bhd", w_end,
+                                                k * scale)
+    return h_out, (c_next, n_next, m_next)
+
+
+def mlstm_sequence(q, k, v, li, lf, state, chunk: int):
+    """q,k,v: (B,S,H,dh); li,lf: (B,S,H). Returns h (B,S,H,dh), state."""
+    b, s, h, dh = q.shape
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    nc = s // chunk
+
+    def to_chunks(x):
+        x = x.astype(F32)
+        if x.ndim == 4:
+            return (x.reshape(b, nc, chunk, h, dh)
+                    .transpose(1, 0, 3, 2, 4))          # (nc,B,H,c,dh)
+        return x.reshape(b, nc, chunk, h).transpose(1, 0, 3, 2)  # (nc,B,H,c)
+
+    qs, ks, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+    lis, lfs = to_chunks(li), to_chunks(lf)
+
+    def step(carry, xs):
+        qq, kk, vv, ii, ff = xs
+        h_out, carry = _mlstm_chunk(qq, kk, vv, ii, ff, carry)
+        return carry, h_out
+
+    state, hs = jax.lax.scan(step, state, (qs, ks, vs, lis, lfs),
+                             unroll=flags.scan_unroll(nc))
+    hs = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dh)  # (B,S,H,dh)
+    return hs, state
+
+
+def mlstm_step(q, k, v, li, lf, state):
+    """Single recurrent step. q,k,v: (B,H,dh) f32; li,lf: (B,H)."""
+    c0, n0, m0 = state
+    dh = q.shape[-1]
+    scale = dh ** -0.5
+    m_new = jnp.maximum(lf + m0, li)
+    fg = jnp.exp(lf + m0 - m_new)
+    ig = jnp.exp(li - m_new)
+    c1 = c0 * fg[..., None, None] + ig[..., None, None] * (
+        (k * scale)[..., :, None] * v[..., None, :])
+    n1 = n0 * fg[..., None] + ig[..., None] * (k * scale)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n1)),
+                        jnp.exp(-m_new))
+    h = jnp.einsum("bhd,bhde->bhe", q, c1) / denom[..., None]
+    return h, (c1, n1, m_new)
+
+
+def _mlstm_qkv_gates(p, x, cfg: ModelConfig, conv_state=None):
+    """Shared pre-processing: up-proj, conv, heads, gates.
+
+    x: (B,S,D). Returns q,k,v (B,S,H,dh), li,lf (B,S,H), z (B,S,inner),
+    new conv state (B,K-1,inner)."""
+    inner = p["conv_w"].shape[1]
+    up = common.fdot(x, p["w_up"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    kk = cfg.ssm.conv_kernel
+    conv_out = common.causal_conv1d(xi, p["conv_w"], conv_state)
+    new_conv = jnp.concatenate(
+        [conv_state if conv_state is not None
+         else jnp.zeros(xi.shape[:1] + (kk - 1,) + xi.shape[2:], F32),
+         xi.astype(F32)], axis=1)[:, -(kk - 1):]
+    xc = jax.nn.silu(conv_out.astype(F32)).astype(x.dtype)
+    h = cfg.num_heads
+    b, s = x.shape[:2]
+
+    def heads(t):
+        return t.reshape(b, s, h, inner // h)
+
+    q = heads(common.fdot(xc, p["wq"]))
+    k = heads(common.fdot(xc, p["wk"]))
+    v = heads(common.fdot(xi, p["wv"]))
+    li = jnp.einsum("bsi,ih->bsh", xc.astype(F32), p["w_igate"]) + p["b_igate"]
+    lf_raw = jnp.einsum("bsi,ih->bsh", xc.astype(F32), p["w_fgate"]) + p["b_fgate"]
+    lf = jax.nn.log_sigmoid(lf_raw)
+    return q, k, v, li, lf, z, new_conv
+
+
+def mlstm_apply(p, x, *, cfg: ModelConfig, state: Optional[dict] = None,
+                decode: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+    """Pre-norm mLSTM block with residual. state: see mlstm_state_defs."""
+    res = x
+    xn = common.rms_norm(x, p["norm"], cfg.norm_eps)
+    conv_state = state["conv"] if state is not None else None
+    q, k, v, li, lf, z, new_conv = _mlstm_qkv_gates(p, xn, cfg, conv_state)
+    b, s = x.shape[:2]
+    h = cfg.num_heads
+    inner = p["conv_w"].shape[1]
+    dh = inner // h
+    if state is not None:
+        st = (state["C"], state["n"], state["m"])
+    else:
+        st = (jnp.zeros((b, h, dh, dh), F32), jnp.zeros((b, h, dh), F32),
+              jnp.zeros((b, h), F32))
+    if decode:
+        assert s == 1
+        hs, st = mlstm_step(q[:, 0].astype(F32), k[:, 0].astype(F32),
+                            v[:, 0].astype(F32), li[:, 0], lf[:, 0], st)
+        hs = hs[:, None]                               # (B,1,H,dh)
+    else:
+        chunk = min(cfg.ssm.chunk_size, s)
+        while s % chunk:                             # largest divisor <= chunk
+            chunk -= 1
+        hs, st = mlstm_sequence(q, k, v, li, lf, st, chunk)
+    hs = hs.reshape(b, s, inner)
+    hs = common.rms_norm(hs.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    out = hs * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    out = common.fdot(out, p["w_down"])
+    new_state = {"C": st[0], "n": st[1], "m": st[2], "conv": new_conv}
+    return res + out, new_state
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ff = int(4 * d / 3 + 63) // 64 * 64
+    return {
+        "norm": ParamDef((d,), ("embed",), "ones", dtype="float32"),
+        # gates order: z, i, f, o
+        "w_gates": ParamDef((d, 4 * d), ("embed", "inner"), "fan_in",
+                            dtype="float32"),
+        "r_gates": ParamDef((h, dh, 4 * dh), (None, None, "inner"), "fan_in",
+                            dtype="float32"),
+        "b_gates": ParamDef((4 * d,), ("inner",), "zeros", dtype="float32"),
+        "out_norm": ParamDef((d,), ("embed",), "ones", dtype="float32"),
+        "w_out": ParamDef((d, d), ("embed", "embed"), "fan_in"),
+        # post-FFN
+        "ffn_norm": ParamDef((d,), ("embed",), "ones", dtype="float32"),
+        "w_ff_in": ParamDef((d, ff), ("embed", "ffn"), "fan_in"),
+        "w_ff_out": ParamDef((ff, d), ("ffn", "embed"), "fan_in",
+                             scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+
+
+def slstm_state_defs(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    ab = ("act_batch",)
+    return {
+        "c": ParamDef((batch, h, dh), ab + (None, None), "zeros", dtype="float32"),
+        "n": ParamDef((batch, h, dh), ab + (None, None), "zeros", dtype="float32"),
+        "m": ParamDef((batch, h, dh), ab + (None, None), "zeros", dtype="float32"),
+        "h": ParamDef((batch, h, dh), ab + (None, None), "zeros", dtype="float32"),
+    }
+
+
+def _slstm_cell(p, xw, state):
+    """xw: (B, 4D) input contribution (pre-computed). state: (c,n,m,h)."""
+    c0, n0, m0, h0 = state
+    b = xw.shape[0]
+    hh, dh = h0.shape[1], h0.shape[2]
+    rec = jnp.einsum("bhd,hde->bhe", h0, p["r_gates"])      # (B,H,4dh)
+    gates = xw.reshape(b, hh, 4 * dh) + rec
+    z, i_raw, f_raw, o_raw = jnp.split(gates, 4, axis=-1)   # (B,H,dh) each
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o_raw)
+    m_new = jnp.maximum(f_raw + m0, i_raw)
+    ig = jnp.exp(i_raw - m_new)
+    fg = jnp.exp(f_raw + m0 - m_new)
+    c1 = fg * c0 + ig * z
+    n1 = jnp.maximum(fg * n0 + ig, jnp.exp(-m_new))
+    h1 = o * c1 / n1
+    return (c1, n1, m_new, h1)
+
+
+def slstm_apply(p, x, *, cfg: ModelConfig, state: Optional[dict] = None,
+                decode: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+    res = x
+    b, s, d = x.shape
+    h, dh = cfg.num_heads, d // cfg.num_heads
+    xn = common.rms_norm(x, p["norm"], cfg.norm_eps)
+    xw = (jnp.einsum("bsd,de->bse", xn.astype(F32), p["w_gates"])
+          + p["b_gates"])                                    # (B,S,4D)
+    if state is not None:
+        st = (state["c"], state["n"], state["m"], state["h"])
+    else:
+        z0 = jnp.zeros((b, h, dh), F32)
+        st = (z0, z0, z0, z0)
+
+    if decode:
+        assert s == 1
+        st = _slstm_cell(p, xw[:, 0], st)
+        hs = st[3][:, None]                                  # (B,1,H,dh)
+    else:
+        def step(carry, xw_t):
+            carry = _slstm_cell(p, xw_t, carry)
+            return carry, carry[3]
+
+        st, hs = jax.lax.scan(step, st, xw.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2, 3)                        # (B,S,H,dh)
+
+    hs = hs.reshape(b, s, d).astype(x.dtype)
+    hs = common.rms_norm(hs, p["out_norm"], cfg.norm_eps)
+    out = common.fdot(hs, p["w_out"])
+    x = res + out
+    # post-FFN (GeLU)
+    hf = common.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    hf = jax.nn.gelu(common.fdot(hf, p["w_ff_in"]).astype(F32),
+                     approximate=True).astype(x.dtype)
+    x = x + common.fdot(hf, p["w_ff_out"])
+    new_state = {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}
+    return x, new_state

@@ -1,0 +1,390 @@
+"""The unified stacked-block model covering the dense / moe / vlm / audio /
+ssm / hybrid families. Layers are grouped into *super-blocks* of one
+``block_pattern`` period and scanned (``lax.scan``) over the stack — HLO size
+is O(period), independent of depth (61-layer Kimi lowers as one scanned body).
+
+API (shared with DiTModel):
+    init(key) -> params                 param_defs() -> ParamDef tree
+    apply(params, batch, train)  -> (hidden, aux)
+    loss(params, batch)          -> (scalar, metrics)
+    prefill(params, batch, window) -> (last_logits, cache)
+    init_cache(batch, window)    -> zeroed cache pytree (or ParamDef tree)
+    decode_step(params, tokens, cache) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import common, flags, layers, mamba, ssm
+from repro.models.params import ParamDef, abstract_params, init_params
+
+F32 = jnp.float32
+
+
+def _moe_at(cfg: ModelConfig, pos: int) -> bool:
+    if cfg.moe is None:
+        return False
+    if cfg.family == "moe":
+        return True
+    return pos % cfg.moe.moe_layer_period == 1
+
+
+class TransformerModel:
+    def __init__(self, cfg: ModelConfig, *, prefix_groups: int = 1):
+        self.cfg = cfg
+        self.kinds = cfg.block_pattern or ("attn",)
+        self.period = len(self.kinds)
+        assert cfg.num_layers % self.period == 0, (
+            f"{cfg.name}: {cfg.num_layers} layers not divisible by "
+            f"pattern period {self.period}")
+        self.n_super = cfg.num_layers // self.period
+        self.prefix_groups = prefix_groups
+
+    # ------------------------------------------------------------------
+    # Params
+    # ------------------------------------------------------------------
+
+    def _block_defs(self, pos: int) -> Dict[str, dict]:
+        cfg = self.cfg
+        kind = self.kinds[pos]
+        d: Dict[str, dict] = {}
+        if kind == "attn":
+            d["attn"] = layers.attn_defs(cfg)
+        elif kind == "mamba":
+            d["mamba"] = mamba.mamba_defs(cfg)
+        elif kind == "mlstm":
+            d["mlstm"] = ssm.mlstm_defs(cfg)
+        elif kind == "slstm":
+            d["slstm"] = ssm.slstm_defs(cfg)
+        else:
+            raise ValueError(kind)
+        if kind != "mlstm" and kind != "slstm" and cfg.d_ff > 0:
+            if _moe_at(cfg, pos):
+                d["moe"] = layers.moe_defs(cfg)
+            else:
+                mlp_kind = "gelu" if cfg.family == "audio" else "swiglu"
+                d["ffn"] = layers.ffn_defs(cfg, kind=mlp_kind)
+        return d
+
+    def param_defs(self):
+        cfg = self.cfg
+        defs: Dict[str, object] = {
+            "final_norm": ParamDef((cfg.d_model,), ("embed",), "ones",
+                                   dtype="float32"),
+            "blocks": {f"pos{i}": layers.stack_defs(self._block_defs(i),
+                                                    self.n_super)
+                       for i in range(self.period)},
+        }
+        if cfg.family == "audio":
+            defs["feat_proj"] = ParamDef((cfg.frontend_dim, cfg.d_model),
+                                         (None, "embed"), "fan_in")
+            defs["feat_bias"] = ParamDef((cfg.d_model,), ("embed",), "zeros")
+            defs["pos_conv"] = ParamDef((15, cfg.d_model), (None, "embed"),
+                                        "fan_in")
+            defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                       ("embed", "vocab"), "fan_in")
+        else:
+            defs["embed"] = ParamDef((cfg.vocab_size, cfg.d_model),
+                                     ("vocab", "embed"), "normal")
+            if not cfg.tie_embeddings:
+                defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                           ("embed", "vocab"), "fan_in")
+        return defs
+
+    def init(self, key: jax.Array):
+        return init_params(self.param_defs(), key, self.cfg.dtype)
+
+    def abstract_params(self):
+        return abstract_params(self.param_defs(), self.cfg.dtype)
+
+    # ------------------------------------------------------------------
+    # Embedding / head
+    # ------------------------------------------------------------------
+
+    def embed(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            x = common.fdot(batch["features"].astype(jnp.dtype(cfg.dtype)),
+                            params["feat_proj"]) + params["feat_bias"]
+            # symmetric depthwise positional conv
+            w = params["pos_conv"]
+            k = w.shape[0]
+            xp = jnp.pad(x, ((0, 0), (k // 2, k - 1 - k // 2), (0, 0)))
+            pos = jnp.zeros_like(x, dtype=F32)
+            for i in range(k):
+                pos = pos + xp[:, i:i + x.shape[1]].astype(F32) * w[i].astype(F32)
+            return x + jax.nn.gelu(pos).astype(x.dtype)
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            vis, msk = batch["vision_embeds"], batch["vision_mask"]
+            # associative_scan: cost analysis counts plain cumsum (reduce-
+            # window) quadratically in S, which would pollute the roofline
+            csum = jax.lax.associative_scan(jnp.add,
+                                            msk.astype(jnp.int32), axis=1)
+            idx = jnp.clip(csum - 1, 0, vis.shape[1] - 1)
+            scattered = jnp.take_along_axis(vis.astype(x.dtype),
+                                            idx[..., None], axis=1)
+            x = jnp.where(msk[..., None], scattered, x)
+        return x
+
+    def unembed(self, params, hidden) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return common.feinsum("...d,vd->...v", hidden, params["embed"])
+        return common.fdot(hidden, params["lm_head"])
+
+    def _head_matrix(self, params):
+        """(V, D) regardless of tie/untie."""
+        if self.cfg.family == "audio" or not self.cfg.tie_embeddings:
+            return params["lm_head"].T
+        return params["embed"]
+
+    # ------------------------------------------------------------------
+    # Block application
+    # ------------------------------------------------------------------
+
+    def block_apply(self, pos: int, bp, x, *, positions=None, cache=None,
+                    decode_pos=None, window=0, decode=False):
+        """Apply super-block position `pos`. Returns (x, new_cache, aux)."""
+        cfg = self.cfg
+        kind = self.kinds[pos]
+        aux = jnp.zeros((), F32)
+        new_cache = {}
+        if kind == "attn":
+            x, c = layers.attn_apply(
+                bp["attn"], x, cfg=cfg, positions=positions, cache=cache,
+                decode_pos=decode_pos, window=window,
+                prefix_groups=self.prefix_groups)
+            if c is not None:
+                new_cache = c
+        elif kind == "mamba":
+            x, st = mamba.mamba_apply(bp["mamba"], x, cfg=cfg, state=cache,
+                                      decode=decode)
+            new_cache = st
+        elif kind == "mlstm":
+            x, st = ssm.mlstm_apply(bp["mlstm"], x, cfg=cfg, state=cache,
+                                    decode=decode)
+            new_cache = st
+        elif kind == "slstm":
+            x, st = ssm.slstm_apply(bp["slstm"], x, cfg=cfg, state=cache,
+                                    decode=decode)
+            new_cache = st
+        if "moe" in bp:
+            x, moe_aux = layers.moe_apply(bp["moe"], x, cfg)
+            aux = aux + moe_aux
+        elif "ffn" in bp:
+            x = layers.ffn_apply(bp["ffn"], x, cfg)
+        return x, new_cache, aux
+
+    # ------------------------------------------------------------------
+    # Full-sequence forward (train / encode)
+    # ------------------------------------------------------------------
+
+    def apply(self, params, batch, train: bool = False):
+        cfg = self.cfg
+        x = self.embed(params, batch)
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+        positions = batch.get("positions")
+
+        def super_block(x, bps):
+            aux = jnp.zeros((), F32)
+            for i in range(self.period):
+                x, _, a = self.block_apply(i, bps[f"pos{i}"], x,
+                                           positions=positions)
+                aux = aux + a
+            x = constrain(x, "act_batch", "act_seq", "act_embed")
+            return x, aux
+
+        body = super_block
+        if train and cfg.remat:
+            body = jax.checkpoint(
+                super_block,
+                policy=jax.checkpoint_policies.save_only_these_names())
+
+        def scan_body(carry, bps):
+            x, aux = carry
+            x, a = body(x, bps)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), F32)),
+                                   params["blocks"],
+                                   unroll=flags.scan_unroll(self.n_super))
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, {"moe_aux": aux}
+
+    # ------------------------------------------------------------------
+    # Loss (chunked cross-entropy over the vocab head)
+    # ------------------------------------------------------------------
+
+    def loss(self, params, batch) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        hidden, aux = self.apply(params, batch, train=True)
+        head = self._head_matrix(params)                     # (V, D)
+        if cfg.family == "audio":
+            targets = batch["targets"]
+            mask = batch.get("mask_indices",
+                             jnp.ones(targets.shape, bool)).astype(F32)
+            h = hidden
+        else:
+            tokens = batch["tokens"]
+            targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+            mask = jnp.pad(jnp.ones_like(tokens[:, 1:], dtype=F32),
+                           ((0, 0), (0, 1)))
+            if "loss_mask" in batch:
+                mask = mask * batch["loss_mask"].astype(F32)
+            h = hidden
+        nll, denom = chunked_ce(h, head, targets, mask)
+        loss = nll / jnp.maximum(denom, 1.0) + aux["moe_aux"]
+        return loss, {"nll": nll / jnp.maximum(denom, 1.0),
+                      "moe_aux": aux["moe_aux"], "tokens": denom}
+
+    # ------------------------------------------------------------------
+    # Caching / decode
+    # ------------------------------------------------------------------
+
+    def cache_defs(self, batch: int, window: int):
+        cfg = self.cfg
+        out = {}
+        for i, kind in enumerate(self.kinds):
+            if kind == "attn":
+                d = layers.attn_cache_defs(cfg, batch, window, cfg.dtype)
+            elif kind == "mamba":
+                d = mamba.mamba_state_defs(cfg, batch)
+            elif kind == "mlstm":
+                d = ssm.mlstm_state_defs(cfg, batch)
+            else:
+                d = ssm.slstm_state_defs(cfg, batch)
+            out[f"pos{i}"] = layers.stack_defs(d, self.n_super)
+        return {"blocks": out,
+                "step": ParamDef((batch,), ("act_batch",), "zeros",
+                                 dtype="int32")}
+
+    def init_cache(self, batch: int, window: int):
+        defs = self.cache_defs(batch, window)
+        zeros = init_params(defs, jax.random.PRNGKey(0), self.cfg.dtype)
+        # empty attn slots are pos=-1
+        for i, kind in enumerate(self.kinds):
+            if kind == "attn":
+                blk = zeros["blocks"][f"pos{i}"]
+                blk["pos"] = blk["pos"] - 1
+        return zeros
+
+    def abstract_cache(self, batch: int, window: int):
+        return abstract_params(self.cache_defs(batch, window), self.cfg.dtype)
+
+    def prefill(self, params, batch, window: int):
+        """Full forward that also builds the decode cache."""
+        cfg = self.cfg
+        x = self.embed(params, batch)
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+        positions = batch.get("positions")
+        b = x.shape[0]
+
+        def scan_body(carry, bps):
+            x, aux = carry
+            caches = {}
+            for i in range(self.period):
+                kind = self.kinds[i]
+                cache_in = None
+                if kind == "attn":
+                    # template for shape only; attn prefill builds its own
+                    cache_in = {"k": jnp.zeros(
+                        (b, window, cfg.num_kv_heads, cfg.resolved_head_dim),
+                        jnp.dtype(cfg.dtype)), "v": None, "pos": None}
+                    cache_in["v"] = cache_in["k"]
+                    cache_in["pos"] = jnp.zeros((b, window), jnp.int32)
+                x, c, a = self.block_apply(i, bps[f"pos{i}"], x,
+                                           positions=positions,
+                                           cache=cache_in, window=window)
+                caches[f"pos{i}"] = c
+                aux = aux + a
+            return (x, aux), caches
+
+        (x, _aux), blocks_cache = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), F32)), params["blocks"],
+            unroll=flags.scan_unroll(self.n_super))
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self.unembed(params, x[:, -1])
+        s = batch["tokens"].shape[1] if "tokens" in batch \
+            else batch["features"].shape[1]
+        cache = {"blocks": blocks_cache,
+                 "step": jnp.full((b,), s, jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, tokens: jax.Array, cache,
+                    extra: Optional[dict] = None):
+        """tokens: (B,) int32. Returns (logits (B, V), new cache)."""
+        cfg = self.cfg
+        step = cache["step"]                                 # (B,)
+        batch = {"tokens": tokens[:, None]}
+        if extra:
+            batch.update(extra)
+        x = self.embed(params, batch)
+        if cfg.rope_kind == "mrope":
+            positions = jnp.repeat(step[:, None, None], 3, axis=-1)
+        else:
+            positions = step[:, None]
+
+        def scan_body(x, xs):
+            bps, blk_cache = xs
+            new_caches = {}
+            for i in range(self.period):
+                x, c, _ = self.block_apply(
+                    i, bps[f"pos{i}"], x, positions=positions,
+                    cache=blk_cache[f"pos{i}"],
+                    decode_pos=step if self.kinds[i] == "attn" else None,
+                    decode=True)
+                new_caches[f"pos{i}"] = c
+            return x, new_caches
+
+        x, new_blocks = jax.lax.scan(
+            scan_body, x, (params["blocks"], cache["blocks"]),
+            unroll=flags.scan_unroll(self.n_super))
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self.unembed(params, x[:, 0])
+        return logits, {"blocks": new_blocks, "step": step + 1}
+
+
+# --------------------------------------------------------------------------
+# Chunked cross-entropy
+# --------------------------------------------------------------------------
+
+def chunked_ce(hidden: jax.Array, head: jax.Array, targets: jax.Array,
+               mask: jax.Array, chunk: int = 512):
+    """Cross-entropy without materializing (B, S, V) — scans S in chunks.
+
+    hidden: (B,S,D); head: (V,D); targets/mask: (B,S).
+    Returns (sum nll, sum mask)."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        pad = chunk - s % chunk
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        s += pad
+    nc = s // chunk
+    hs = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        h, t, m = xs
+        logits = jnp.einsum("bcd,vd->bcv", h.astype(F32), head.astype(F32))
+        logits = constrain(logits, "act_batch", "act_seq", "act_vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * m
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+    if flags.CE_REMAT:  # drop per-chunk logits; recompute in backward
+        step = jax.checkpoint(step)
+    (nll, denom), _ = jax.lax.scan(step, (jnp.zeros((), F32),
+                                          jnp.zeros((), F32)), (hs, ts, ms),
+                                   unroll=flags.scan_unroll(nc))
+    return nll, denom

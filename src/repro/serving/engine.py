@@ -1,0 +1,143 @@
+"""Batched serving engine: slot-based continuous batching over a fixed-size
+decode batch, with optional FastCache decode gating.
+
+The engine owns a KV cache sized (max_batch, window) and a slot table; new
+requests prefill into free slots (per-request prefill, batched decode), decode
+steps run the whole batch, finished sequences free their slots.  This is the
+serving pattern the decode shapes (decode_32k / long_500k) lower: one
+``serve_step`` = one batched decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FastCacheConfig
+from repro.core.decode_runner import CachedDecoder
+from repro.models.transformer import TransformerModel
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: TransformerModel, params, *, max_batch: int,
+                 window: int, eos_id: Optional[int] = None,
+                 fastcache: Optional[FastCacheConfig] = None,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.window = window
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.cache = model.init_cache(max_batch, window)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.slot_tokens = np.zeros((max_batch,), np.int32)
+        self.decoder = None
+        if fastcache is not None and fastcache.enabled:
+            self.decoder = CachedDecoder(model, fastcache)
+            self.fc_state = self.decoder.init_state(max_batch)
+
+        self._prefill = jax.jit(self._prefill_impl)
+        if self.decoder is None:
+            self._decode = jax.jit(self._decode_impl)
+        else:
+            self._decode = jax.jit(self._decode_fc_impl)
+
+    # -- jitted bodies -------------------------------------------------
+
+    def _prefill_impl(self, params, tokens, cache, slot):
+        """Prefill ONE request (batch 1) and splice its cache into `slot`."""
+        logits, new_cache = self.model.prefill(params, {"tokens": tokens},
+                                               self.window)
+
+        def splice(full, one):
+            return full.at[:, slot].set(one[:, 0])
+
+        # cache leaves: blocks/<pos>/<leaf>: (n_super, B, ...) ; step: (B,)
+        spliced = jax.tree.map(
+            lambda full, one: (full.at[slot].set(one[0]) if full.ndim == 1
+                               else splice(full, one)),
+            cache, new_cache)
+        return logits[0], spliced
+
+    def _decode_impl(self, params, tokens, cache):
+        return self.model.decode_step(params, tokens, cache)
+
+    def _decode_fc_impl(self, params, tokens, cache, fc_state):
+        return self.decoder.decode_step(params, tokens, cache, fc_state)
+
+    # -- host orchestration --------------------------------------------
+
+    def add_request(self, req: Request) -> bool:
+        for s in range(self.max_batch):
+            if self.slots[s] is None:
+                logits, self.cache = self._prefill(
+                    self.params, jnp.asarray(req.prompt)[None], self.cache,
+                    s)
+                nxt = int(jnp.argmax(logits)) if self.greedy else int(
+                    jax.random.categorical(jax.random.PRNGKey(req.rid),
+                                           logits))
+                req.generated.append(nxt)
+                self.slots[s] = req
+                self.slot_tokens[s] = nxt
+                return True
+        return False
+
+    def step(self) -> None:
+        """One batched decode step for all active slots."""
+        tokens = jnp.asarray(self.slot_tokens)
+        if self.decoder is None:
+            logits, self.cache = self._decode(self.params, tokens, self.cache)
+        else:
+            logits, self.cache, self.fc_state = self._decode(
+                self.params, tokens, self.cache, self.fc_state)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for s, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            tok = int(nxt[s])
+            req.generated.append(tok)
+            self.slot_tokens[s] = tok
+            if ((self.eos_id is not None and tok == self.eos_id)
+                    or len(req.generated) >= req.max_new_tokens):
+                req.done = True
+                self.slots[s] = None
+
+    def run(self, requests: List[Request], max_steps: int = 1024
+            ) -> List[Request]:
+        pending = list(requests)
+        finished: List[Request] = []
+        active: List[Request] = []
+        steps = 0
+        while (pending or any(self.slots)) and steps < max_steps:
+            while pending and self.add_request(pending[0]):
+                active.append(pending.pop(0))
+            self.step()
+            steps += 1
+            for r in active:
+                if r.done and r not in finished:
+                    finished.append(r)
+        return finished + [r for r in active if r not in finished]
+
+    def cache_stats(self) -> Dict[str, float]:
+        if self.decoder is None:
+            return {}
+        s = self.fc_state["stats"]
+        tot = float(s["blocks_computed"]) + float(s["blocks_skipped"])
+        return {"blocks_skipped": float(s["blocks_skipped"]),
+                "block_cache_ratio": float(s["blocks_skipped"]) / tot
+                if tot else 0.0}

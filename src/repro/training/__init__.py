@@ -1,0 +1,3 @@
+from repro.training.loop import make_train_step, train  # noqa: F401
+from repro.training.optimizer import (AdamW, Adafactor,  # noqa: F401
+                                      cosine_schedule, make_optimizer)

@@ -1,0 +1,57 @@
+"""Train-step builder + host training loop.
+
+``make_train_step(model, opt)`` returns the pure (params, opt_state, batch)
+-> (params, opt_state, metrics) function that the launcher jits with explicit
+in/out shardings — the same function the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import clip_by_global_norm
+
+F32 = jnp.float32
+
+
+def make_train_step(model, opt, lr_fn: Callable, max_grad_norm: float = 1.0):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn,
+                                                    has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = lr_fn(opt_state.step)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out.update({k: v for k, v in metrics.items()
+                    if jnp.ndim(v) == 0})
+        return params, opt_state, out
+
+    return train_step
+
+
+def train(model, params, opt, lr_fn, data_iter, *, steps: int,
+          log_every: int = 10, max_grad_norm: float = 1.0,
+          callback: Optional[Callable[[int, Dict], None]] = None):
+    """Host loop for CPU-scale runs (examples / tests)."""
+    step_fn = jax.jit(make_train_step(model, opt, lr_fn, max_grad_norm))
+    opt_state = opt.init(params)
+    history = []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["elapsed_s"] = time.perf_counter() - t0
+            history.append(m)
+            if callback:
+                callback(i, m)
+    return params, opt_state, history

@@ -1,0 +1,23 @@
+import dataclasses
+
+import jax
+import pytest
+
+# Tests run on the single CPU device; the dry-run subprocess sets its own
+# XLA_FLAGS (do NOT force a device count here — see the brief).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def f32_cfg(cfg, *, big_capacity: bool = True):
+    """Reduced configs in f32 with ample MoE capacity (drop-free) so
+    numerical-consistency tests are exact."""
+    cfg = cfg.replace(dtype="float32")
+    if cfg.moe is not None and big_capacity:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=8.0))
+    return cfg

@@ -1,0 +1,91 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,d", [(128, 512), (256, 1024), (384, 768)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_saliency_delta(n, d, dtype, key):
+    x = jax.random.normal(key, (n, d)).astype(dtype)
+    xp = jax.random.normal(jax.random.fold_in(key, 1), (n, d)).astype(dtype)
+    sal, diff, prev = ops.saliency_delta(x, xp, bn=128, bd=256,
+                                         interpret=True)
+    sal_r, diff_r, prev_r = ref.saliency_delta(x, xp)
+    tol = 1e-4 if dtype == "float32" else 5e-2
+    np.testing.assert_allclose(sal, sal_r, rtol=tol, atol=tol)
+    np.testing.assert_allclose(diff, diff_r, rtol=tol)
+    np.testing.assert_allclose(prev, prev_r, rtol=tol)
+
+
+@pytest.mark.parametrize("m,d,f", [(128, 256, 256), (256, 512, 256),
+                                   (128, 768, 512)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("gamma", [0.0, 0.5, 1.0])
+def test_linear_blend(m, d, f, dtype, gamma, key):
+    ks = jax.random.split(key, 4)
+    x = (jax.random.normal(ks[0], (m, d)) * 0.5).astype(dtype)
+    w = (jax.random.normal(ks[1], (d, f)) * 0.05).astype(dtype)
+    b = jax.random.normal(ks[2], (f,)).astype(dtype)
+    prev = jax.random.normal(ks[3], (m, f)).astype(dtype)
+    out = ops.linear_blend(x, w, b, prev, gamma=gamma, bm=128, bf=128,
+                           bk=128, interpret=True)
+    out_r = ref.linear_blend(x, w, b, prev, gamma)
+    tol = 1e-4 if dtype == "float32" else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,h,kvh,sq,skv,dh", [
+    (1, 4, 4, 128, 128, 64),     # MHA square
+    (2, 8, 2, 128, 128, 64),     # GQA
+    (1, 4, 1, 64, 256, 32),      # cross / decode-ish (Sq < Skv)
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 96),
+                                           (False, 0)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_flash_attention(b, h, kvh, sq, skv, dh, causal, window, dtype, key):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kvh, skv, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kvh, skv, dh)).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=64, bk=64, interpret=True)
+    out_r = ref.flash_attention(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("nw,w,d,k", [(4, 16, 32, 5), (2, 32, 64, 3),
+                                      (8, 8, 16, 7)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_knn_density(nw, w, d, k, dtype, key):
+    h = jax.random.normal(key, (nw, w, d)).astype(dtype)
+    out = ops.knn_density(h, k=k, interpret=True)
+    out_r = ref.knn_density(h, min(k, w - 1))
+    tol = 1e-4 if dtype == "float32" else 6e-2
+    np.testing.assert_allclose(out, out_r, rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_model_attention(key):
+    """Kernel layout (B,H,S,dh) agrees with the model's (B,S,H,dh) path."""
+    from repro.models.attention import attend_direct
+    b, h, kvh, s, dh = 1, 4, 2, 128, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kvh, dh))
+    v = jax.random.normal(ks[2], (b, s, kvh, dh))
+    pos = jnp.arange(s)
+    ref_out = attend_direct(q, k, v, pos, pos, causal=True)
+    kern = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                               k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), causal=True,
+                               bq=64, bk=64, interpret=True)
+    np.testing.assert_allclose(kern.transpose(0, 2, 1, 3), ref_out,
+                               atol=2e-5)

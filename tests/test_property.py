@@ -1,0 +1,110 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chi2_ppf, saliency, statcache, token_merge
+from repro.models.attention import attend_chunked, attend_direct
+from repro.models.common import apply_rope
+from repro.training.optimizer import AdamW
+
+SET = dict(max_examples=20, deadline=None)
+
+
+@given(df=st.integers(30, 500_000), p=st.floats(0.5, 0.999))
+@settings(**SET)
+def test_chi2_ppf_monotone_in_p(df, p):
+    assert chi2_ppf(p + 1e-3 * (1 - p), df) >= chi2_ppf(p, df) - 1e-6
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(4, 64),
+       cap=st.integers(1, 64), tau=st.floats(0.0, 10.0))
+@settings(**SET)
+def test_partition_motion_count_bounded(seed, n, cap, tau):
+    key = jax.random.PRNGKey(seed)
+    sal = jax.random.uniform(key, (2, n)) * 5.0
+    part = saliency.partition_tokens(sal, tau, min(cap, n))
+    m = int(part.is_motion.sum(-1).max())
+    assert m <= min(cap, n)
+    # everything marked motion must exceed tau
+    masked = np.asarray(jnp.where(part.is_motion, sal, jnp.inf))
+    assert (masked > tau).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_saliency_nonnegative_and_zero_iff_equal(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (1, 8, 4))
+    s_zero = saliency.token_saliency(x, x)
+    np.testing.assert_allclose(s_zero, 0.0, atol=1e-6)
+    y = x + 0.1
+    assert float(saliency.token_saliency(x, y).min()) > 0.0
+
+
+@given(seed=st.integers(0, 2**31 - 1), sq=st.sampled_from([8, 16, 32]),
+       chunk=st.sampled_from([4, 8, 16]), causal=st.booleans())
+@settings(**SET)
+def test_chunked_attention_equals_direct(seed, sq, chunk, causal):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, sq, 4, 8))
+    k = jax.random.normal(ks[1], (1, sq, 2, 8))
+    v = jax.random.normal(ks[2], (1, sq, 2, 8))
+    pos = jnp.arange(sq)
+    ref = attend_direct(q, k, v, pos, pos, causal=causal)
+    out = attend_chunked(q, k, v, pos, pos, causal=causal, chunk_kv=chunk)
+    np.testing.assert_allclose(out, ref, atol=3e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1), shift=st.integers(0, 100))
+@settings(**SET)
+def test_rope_relative_property(seed, shift):
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[i]]), theta=100.0)
+        kj = apply_rope(k, jnp.array([[j]]), theta=100.0)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(3, 1) - dot_at(3 + shift, 1 + shift)) < 1e-3
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_adamw_matches_numpy_reference(seed):
+    rng = np.random.default_rng(seed)
+    p0 = rng.standard_normal((4, 3)).astype(np.float32)
+    g = rng.standard_normal((4, 3)).astype(np.float32)
+    opt = AdamW(b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0)
+    params = {"w": jnp.asarray(p0)}
+    state = opt.init(params)
+    lr = 1e-2
+    new_params, state = opt.update({"w": jnp.asarray(g)}, state, params, lr)
+    # reference
+    m = 0.1 * g
+    v = 0.01 * g * g
+    u = (m / 0.1) / (np.sqrt(v / 0.01) + 1e-8)
+    ref = p0 - lr * u
+    np.testing.assert_allclose(new_params["w"], ref, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1), keep=st.sampled_from([0.25, 0.5]))
+@settings(**SET)
+def test_merge_reduces_tokens_exactly(seed, keep):
+    key = jax.random.PRNGKey(seed)
+    h = jax.random.normal(key, (1, 32, 8))
+    merged, mm = token_merge.merge_tokens(h, h, window=8, keep_ratio=keep,
+                                          k=3, lam=1.0)
+    assert merged.shape[1] == int(32 * keep)
+    assert int(mm.assign.max()) < max(1, int(round(keep * 8)))
+
+
+@given(alpha=st.floats(0.005, 0.3), nd=st.integers(100, 1_000_000))
+@settings(**SET)
+def test_threshold_decreases_with_alpha(alpha, nd):
+    t1 = statcache.make_threshold(alpha, nd)
+    t2 = statcache.make_threshold(min(0.5, alpha * 2), nd)
+    assert t2 <= t1 + 1e-9

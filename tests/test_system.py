@@ -1,0 +1,138 @@
+"""End-to-end behaviour: the full FastCache-accelerated diffusion pipeline,
+training convergence, serving, checkpoints, and the dry-run subprocess."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import FastCacheConfig
+from repro.core import CachedDiT, summarize_stats
+from repro.diffusion import sample
+from repro.models import build_model
+from tests.conftest import f32_cfg
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_fastcache_sampling_end_to_end(key):
+    """Full DDIM sampling with CFG under FastCache: correct shapes, no NaNs,
+    real cache usage, and bounded deviation from the exact sampler."""
+    cfg = f32_cfg(get_reduced("dit-b2"))
+    model = build_model(cfg)
+    params = model.init(key)
+
+    r_exact = CachedDiT(model, FastCacheConfig(), policy="nocache")
+    x_exact, st_exact = sample(r_exact, params, key, batch=2, num_steps=10,
+                               guidance_scale=4.0)
+    r_fc = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    x_fc, st_fc = sample(r_fc, params, key, batch=2, num_steps=10,
+                         guidance_scale=4.0)
+    assert x_fc.shape == x_exact.shape
+    assert not bool(jnp.isnan(x_fc).any())
+    s = summarize_stats(st_fc)
+    assert s["steps"] == 10.0
+    rel = float(jnp.linalg.norm(x_fc - x_exact)
+                / (jnp.linalg.norm(x_exact) + 1e-9))
+    assert rel < 1.0, (rel, s)
+
+
+def test_training_learns_synthetic_structure(key):
+    """A tiny LM must beat its initial loss clearly on the Markov stream."""
+    from repro.data import token_stream
+    from repro.training import AdamW, cosine_schedule, train
+    cfg = f32_cfg(get_reduced("qwen3-0.6b"))
+    model = build_model(cfg)
+    params = model.init(key)
+    it = token_stream(cfg.vocab_size, 8, 64, seed=3)
+    _, _, hist = train(model, params, AdamW(weight_decay=0.0),
+                       cosine_schedule(1e-3, 5, 60), it, steps=60,
+                       log_every=59)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.5, hist
+
+
+def test_dit_training_reduces_mse(key):
+    from repro.data import latent_stream
+    from repro.training import AdamW, cosine_schedule, train
+    cfg = f32_cfg(get_reduced("dit-b2"))
+    model = build_model(cfg)
+    params = model.init(key)
+    it = latent_stream(4, cfg.dit.image_size, cfg.dit.in_channels,
+                       num_classes=cfg.dit.num_classes, seed=1)
+    _, _, hist = train(model, params, AdamW(weight_decay=0.0),
+                       cosine_schedule(1e-3, 5, 40), it, steps=40,
+                       log_every=39)
+    assert hist[-1]["loss"] < hist[0]["loss"], hist
+
+
+def test_serving_engine_slot_reuse(key):
+    from repro.serving import Request, ServingEngine
+    cfg = f32_cfg(get_reduced("qwen3-0.6b"))
+    model = build_model(cfg)
+    params = model.init(key)
+    eng = ServingEngine(model, params, max_batch=2, window=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 4 + i)
+                    .astype(np.int32), max_new_tokens=5) for i in range(5)]
+    done = eng.run(reqs)
+    assert len(done) == 5
+    assert all(len(r.generated) == 5 for r in done)
+
+
+def test_serving_with_fastcache_gate(key):
+    from repro.serving import Request, ServingEngine
+    cfg = f32_cfg(get_reduced("qwen3-0.6b"))
+    model = build_model(cfg)
+    params = model.init(key)
+    eng = ServingEngine(model, params, max_batch=2, window=64,
+                        fastcache=FastCacheConfig())
+    rng = np.random.default_rng(0)
+    done = eng.run([Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, 6).astype(np.int32), max_new_tokens=8)
+        for i in range(2)])
+    assert all(len(r.generated) == 8 for r in done)
+    assert eng.cache_stats()["block_cache_ratio"] >= 0.0
+
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    import repro.checkpoint as ckpt
+    cfg = f32_cfg(get_reduced("xlstm-1.3b"))
+    model = build_model(cfg)
+    params = model.init(key)
+    path = str(tmp_path / "ck")
+    ckpt.save(path, params, {"arch": cfg.name})
+    restored = ckpt.load(path, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ckpt.load_metadata(path)["metadata"]["arch"] == cfg.name
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_small_mesh():
+    """The dry-run driver lowers+compiles on a (2,2) host-device mesh —
+    validates mesh/sharding/bundle plumbing end-to-end (the 512-device
+    production run is exercised offline, see EXPERIMENTS.md)."""
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="4",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen3-0.6b",
+         "--shape", "long_500k", "--mesh", "single", "--mesh-shape", "2,2",
+         "--out", ""],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert "1 ok" in out.stdout, out.stdout[-2000:] + out.stderr[-2000:]
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_multipod_small():
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen3-0.6b",
+         "--shape", "decode_32k", "--mesh", "multi", "--mesh-shape", "2,2,2",
+         "--out", ""],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert "1 ok" in out.stdout, out.stdout[-2000:] + out.stderr[-2000:]
