@@ -1,0 +1,15 @@
+# One-command verify/bench entry points (the tier-1 command of ROADMAP.md).
+.PHONY: test test-fast bench-smoke bench
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+# skip the slow dry-run subprocess compiles (~4 min)
+test-fast:
+	PYTHONPATH=src python -m pytest -x -q -m "not slow"
+
+bench-smoke:
+	PYTHONPATH=src python -m benchmarks.run --only batched_gate,decode_gate
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run

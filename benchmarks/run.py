@@ -22,6 +22,8 @@ SUITES = {
     "table15": ("benchmarks.table15_knn", "Table 15: token-merge kNN K"),
     "decode_gate": ("benchmarks.decode_gate",
                     "Beyond-paper: AR-decode statistical gate"),
+    "batched_gate": ("benchmarks.batched_gate",
+                     "Per-sample vs global gating on heterogeneous batches"),
     "kernels": ("benchmarks.kernels_bench", "Kernel microbenchmarks"),
     "roofline": ("benchmarks.roofline", "Roofline from dry-run artifacts"),
 }

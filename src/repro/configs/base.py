@@ -128,3 +128,13 @@ class FastCacheConfig:
     use_str: bool = True
     use_sc: bool = True
     use_mb: bool = True
+    # gating granularity: "per_sample" gates each batch element independently
+    # (one moving sample no longer forces recompute for the whole batch);
+    # "global" reduces the statistic over the batch (the pre-refactor
+    # whole-batch behaviour, kept for ablation/benchmark baselines)
+    gate_mode: str = "per_sample"
+    # route the saliency-delta -> chi^2 -> gate -> linear-blend hot path
+    # through the fused Pallas kernel (kernels/fused_gate.py); the pure-JAX
+    # reference path (kernels/ref.fused_gate) is the default and the kernel's
+    # ground truth
+    use_fused_gate: bool = False

@@ -4,11 +4,19 @@ autoregressive LLM decode steps (beyond-paper; DESIGN.md §4/§7).
 The iterative axis is the decode step: adjacent tokens' residual-stream
 hiddens are highly correlated, so the chi^2 gate (Eq. 7) on the per-layer
 block input decides whether to replace the block with its learnable linear
-approximation (Eq. 6).  KV-cache consistency: on a skipped block we still
-compute and write that position's K/V from the (normalized) block input, so
-future tokens attend to an approximated-but-present entry; the mixer-state
-desync problem that forbids this for SSM layers (DESIGN.md §4) does not
-arise.  Supported: period-1 attention stacks (dense / moe / vlm families).
+approximation (Eq. 6).  The gate is **per-sample**: each serving slot gets
+its own (batch,)-indexed decision, variance tracker and skip counters, so one
+fresh or fast-moving request no longer forces its batchmates to recompute —
+the prerequisite for continuous batching.  ``reset_slot`` re-arms one slot's
+trackers when the serving engine assigns it a new request.
+
+KV-cache consistency: on a skipped block we still compute and write that
+position's K/V from the (normalized) block input, so future tokens attend to
+an approximated-but-present entry; when any sample in the batch recomputes,
+the block itself writes identical K/V for every sample (the block derives
+K/V from the same input ``_kv_write`` uses).  The mixer-state desync problem
+that forbids this for SSM layers (DESIGN.md §4) does not arise.  Supported:
+period-1 attention stacks (dense / moe / vlm families).
 """
 from __future__ import annotations
 
@@ -33,6 +41,7 @@ class CachedDecoder:
             f"got {model.kinds}")
         self.model = model
         self.fc = fc
+        self.gate_mode = fc.gate_mode
         self.L = model.cfg.num_layers
         d = model.cfg.d_model
         self.fc_params = fc_params or linear_approx.init_linear_params(
@@ -43,12 +52,22 @@ class CachedDecoder:
         return {
             "prev_hidden": jnp.zeros((self.L + 1, batch, d),
                                      jnp.dtype(self.model.cfg.dtype)),
-            "gate": statcache.init_gate_state(self.L),
-            "have_cache": jnp.zeros((), bool),
-            "stats": {"blocks_computed": jnp.zeros((), F32),
-                      "blocks_skipped": jnp.zeros((), F32),
+            "gate": statcache.init_gate_state(self.L, batch),
+            "have_cache": jnp.zeros((batch,), bool),
+            "stats": {"blocks_computed": jnp.zeros((batch,), F32),
+                      "blocks_skipped": jnp.zeros((batch,), F32),
                       "steps": jnp.zeros((), F32)},
         }
+
+    def reset_slot(self, state: Dict, slot: int) -> Dict:
+        """Re-arm one slot for a new request: drop its hidden cache and
+        variance trackers without disturbing its batchmates.  Stats stay
+        cumulative (engine-lifetime counters)."""
+        st = dict(state)
+        st["have_cache"] = state["have_cache"].at[slot].set(False)
+        st["gate"] = statcache.reset_gate_slot(state["gate"], slot)
+        st["prev_hidden"] = state["prev_hidden"].at[:, slot].set(0.0)
+        return st
 
     def _kv_write(self, p_attn, x, cache, decode_pos):
         """Write this position's K/V from block input x (B,1,D) on skip."""
@@ -77,45 +96,61 @@ class CachedDecoder:
         fcp = self.fc_params
         step = cache["step"]
         x = m.embed(params, {"tokens": tokens[:, None]})    # (B,1,D)
+        b = x.shape[0]
         positions = step[:, None]
-        nd = int(x.size)
+        nd = int(x.shape[-1])                # per-sample elements (one token)
         threshold = statcache.make_threshold(fc.alpha, nd)
+        if self.gate_mode == "global":
+            threshold_g = statcache.make_threshold(fc.alpha, nd * b)
         gate = state["gate"]
+        use_sc = bool(fc.use_sc)
 
         def body(carry, xs):
             x, sig, ini, comp, skip = carry
             bps, blk_cache, w_l, b_l, prev_in, lidx = xs
-            diff, prevsq = statcache.delta_stats(x[:, 0], prev_in)
-            do_cache = (statcache.gate_decision(diff, prevsq, sig[lidx], nd,
-                                                threshold)
-                        & ini[lidx] & state["have_cache"]
-                        & jnp.asarray(fc.use_sc))
+            diff, prevsq = statcache.delta_stats_per_sample(x[:, 0], prev_in)
+            eligible = ini[lidx] & state["have_cache"] & use_sc      # (B,)
+            if self.gate_mode == "global":
+                do_cache = jnp.broadcast_to(
+                    statcache.gate_decision_global(diff, sig[lidx], nd * b,
+                                                   threshold_g)
+                    & jnp.all(eligible), (b,))
+            else:
+                do_cache = statcache.gate_decision(
+                    diff, prevsq, sig[lidx], nd, threshold) & eligible
+            approx = linear_approx.apply_linear(w_l, b_l, x)
 
-            def skip_fn(op):
+            def all_skip(op):
                 xx, bc = op
-                new_cache = self._kv_write(bps["attn"], xx, bc, step)
-                return linear_approx.apply_linear(w_l, b_l, xx), new_cache
+                return approx, self._kv_write(bps["attn"], xx, bc, step)
 
-            def comp_fn(op):
+            def mixed(op):
                 xx, bc = op
-                x_new, c, _ = m.block_apply(0, bps, xx, positions=positions,
-                                            cache=bc, decode_pos=step,
-                                            decode=True)
-                return x_new, c
+                x_new, cnew, _ = m.block_apply(0, bps, xx,
+                                               positions=positions,
+                                               cache=bc, decode_pos=step,
+                                               decode=True)
+                return jnp.where(do_cache[:, None, None], approx,
+                                 x_new), cnew
 
-            x_new, new_cache = jax.lax.cond(do_cache, skip_fn, comp_fn,
-                                            (x, blk_cache))
+            x_new, new_cache = jax.lax.cond(jnp.all(do_cache), all_skip,
+                                            mixed, (x, blk_cache))
+            # only observe deltas taken against a REAL previous hidden:
+            # after a slot reset prev_hidden is zeroed and ||h - 0||^2 would
+            # poison the no-change variance into an always-skip gate
+            observe = jnp.logical_not(do_cache) & state["have_cache"]
             new_sig, _ = statcache.update_sigma(sig[lidx], ini[lidx], diff,
                                                 nd, fc.background_momentum)
-            sig = sig.at[lidx].set(jnp.where(do_cache, sig[lidx], new_sig))
-            ini = ini.at[lidx].set(True)
-            comp = comp + jnp.where(do_cache, 0.0, 1.0)
-            skip = skip + jnp.where(do_cache, 1.0, 0.0)
+            sig = sig.at[lidx].set(jnp.where(observe, new_sig, sig[lidx]))
+            ini = ini.at[lidx].set(ini[lidx] | observe)
+            dc = do_cache.astype(F32)
+            comp = comp + (1.0 - dc)
+            skip = skip + dc
             return (x_new, sig, ini, comp, skip), (new_cache, x[:, 0])
 
         lidx = jnp.arange(self.L)
-        carry0 = (x, gate.sigma2, gate.initialized, jnp.zeros((), F32),
-                  jnp.zeros((), F32))
+        carry0 = (x, gate.sigma2, gate.initialized, jnp.zeros((b,), F32),
+                  jnp.zeros((b,), F32))
         (x, sig, ini, comp, skip), (new_blocks, inputs) = jax.lax.scan(
             body, carry0,
             (params["blocks"]["pos0"], cache["blocks"]["pos0"],
@@ -127,7 +162,7 @@ class CachedDecoder:
         st = dict(state)
         st["prev_hidden"] = jnp.concatenate([inputs, x[:, 0][None]], 0)
         st["gate"] = statcache.GateState(sigma2=sig, initialized=ini)
-        st["have_cache"] = jnp.ones((), bool)
+        st["have_cache"] = jnp.ones_like(state["have_cache"])
         stats = dict(st["stats"])
         stats["blocks_computed"] = stats["blocks_computed"] + comp
         stats["blocks_skipped"] = stats["blocks_skipped"] + skip

@@ -1,7 +1,7 @@
 """CachedDiT: the FastCache execution engine around a DiT block stack, plus
 the baseline cache policies the paper compares against (Table 1/12).
 
-Policies (all jit-compatible; data-dependent decisions via lax.cond):
+Policies (all jit-compatible):
 
   nocache    full compute every step (reference)
   fora       static-interval layer cache: recompute every N-th step, else
@@ -17,6 +17,16 @@ Policies (all jit-compatible; data-dependent decisions via lax.cond):
   fastcache  the paper: STR token partition + per-block chi^2 statistical
              gate + learnable linear approximation + motion-aware blending
 
+Gating is **per-sample**: every data-dependent cache decision is a (batch,)
+boolean gate, and cached vs freshly computed activations are blended with
+``jnp.where`` masking, so one moving sample never invalidates its batchmates'
+caches.  The transformer stack itself only runs when at least one sample
+recomputes (``lax.cond`` on the all-skip fast path), which preserves the
+whole-batch speedup when every sample is static.  Per-sample statistics
+(``blocks_skipped``, ``steps_reused``, ...) are kept as (batch,) accumulators.
+``FastCacheConfig.gate_mode="global"`` restores the pre-refactor whole-batch
+decision (the statistic is reduced over the batch) for ablations.
+
 The FastCache state carries the previous step's per-block input hiddens
 (H_{t-1,l-1} in Eq. 4), the previous token embeddings (Eq. 1) and the
 previous model output (for step-level baselines and MB blending).
@@ -31,12 +41,15 @@ import jax.numpy as jnp
 
 from repro.configs.base import FastCacheConfig
 from repro.core import linear_approx, saliency, statcache, token_merge
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
 from repro.models.dit import DiTModel
 
 F32 = jnp.float32
 
 POLICIES = ("nocache", "fora", "teacache", "adacache", "fbcache", "l2c",
             "fastcache")
+GATE_MODES = ("per_sample", "global")
 
 
 class CachedDiT:
@@ -49,9 +62,12 @@ class CachedDiT:
                  fb_rdt: float = 0.08,
                  l2c_mask: Optional[jax.Array] = None):
         assert policy in POLICIES, policy
+        assert fc.gate_mode in GATE_MODES, fc.gate_mode
         self.model = model
         self.fc = fc
         self.policy = policy
+        self.gate_mode = fc.gate_mode
+        self.use_fused = fc.use_fused_gate
         self.L = model.cfg.num_layers
         d = model.cfg.d_model
         self.fc_params = fc_params or linear_approx.init_linear_params(
@@ -63,7 +79,7 @@ class CachedDiT:
         self.l2c_mask = (l2c_mask if l2c_mask is not None
                          else jnp.zeros((self.L,), bool))
         n = model.num_tokens
-        self.gate_nd = n * d  # ND of Eq. 5 (full token grid)
+        self.gate_nd = n * d  # ND of Eq. 5 (full token grid, one sample)
         self.threshold = statcache.make_threshold(fc.alpha, self.gate_nd)
         self.capacity = max(1, int(round(fc.motion_capacity * n)))
 
@@ -79,16 +95,16 @@ class CachedDiT:
             "prev_tokens_in": jnp.zeros((batch, n, d), dt),
             "prev_hidden": jnp.zeros((self.L + 1, batch, n, d), dt),
             "prev_eps": jnp.zeros((batch, img, img, cfg.dit.in_channels), dt),
-            "gate": statcache.init_gate_state(self.L),
+            "gate": statcache.init_gate_state(self.L, batch),
             "step_count": jnp.zeros((), jnp.int32),
-            "have_cache": jnp.zeros((), bool),
-            "tea_acc": jnp.zeros((), F32),
-            "ada_skip_left": jnp.zeros((), jnp.int32),
+            "have_cache": jnp.zeros((batch,), bool),
+            "tea_acc": jnp.zeros((batch,), F32),
+            "ada_skip_left": jnp.zeros((batch,), jnp.int32),
             "stats": {
-                "blocks_computed": jnp.zeros((), F32),
-                "blocks_skipped": jnp.zeros((), F32),
-                "steps_reused": jnp.zeros((), F32),
-                "motion_frac_sum": jnp.zeros((), F32),
+                "blocks_computed": jnp.zeros((batch,), F32),
+                "blocks_skipped": jnp.zeros((batch,), F32),
+                "steps_reused": jnp.zeros((batch,), F32),
+                "motion_frac_sum": jnp.zeros((batch,), F32),
                 "steps": jnp.zeros((), F32),
             },
         }
@@ -112,113 +128,113 @@ class CachedDiT:
         return unpatchify(out[..., :self.model.patch_dim], p, self.model.grid)
 
     # ------------------------------------------------------------------
+    # Step-level per-sample gate
+    # ------------------------------------------------------------------
+
+    def _rel_change(self, x: jax.Array, prev: jax.Array) -> jax.Array:
+        """Per-sample relative Frobenius change, (B,).  In global mode the
+        statistic is reduced over the batch and broadcast."""
+        diff, prevsq = statcache.delta_stats_per_sample(x, prev)
+        if self.gate_mode == "global":
+            rel = jnp.sqrt(jnp.sum(diff)
+                           / jnp.maximum(jnp.sum(prevsq), 1e-12))
+            return jnp.broadcast_to(rel, diff.shape)
+        return jnp.sqrt(diff / jnp.maximum(prevsq, 1e-12))
+
+    def _masked_step(self, params, state, x_in, c, skip: jax.Array,
+                     computed_on_skip: float = 0.0):
+        """One step under a per-sample step-level gate.  ``skip`` (B,) bool:
+        True reuses that sample's cached eps and leaves its cache payload
+        untouched; False recomputes and refreshes it.  The block stack only
+        runs when at least one sample recomputes.  ``computed_on_skip``
+        counts probe blocks (fbcache's block 0) charged to skipped samples.
+        """
+        def reuse_all(st):
+            return st["prev_eps"].astype(F32).astype(x_in.dtype), dict(st)
+
+        def mixed(st):
+            x_out, hidden = self._full_forward(params, x_in, c)
+            eps = self._eps(params, x_out, c, None)
+            out = dict(st)
+            out["prev_tokens_in"] = jnp.where(skip[:, None, None],
+                                              st["prev_tokens_in"], x_in)
+            out["prev_hidden"] = jnp.where(skip[None, :, None, None],
+                                           st["prev_hidden"], hidden)
+            eps_sel = jnp.where(skip[:, None, None, None],
+                                st["prev_eps"].astype(eps.dtype), eps)
+            out["prev_eps"] = eps_sel.astype(st["prev_eps"].dtype)
+            return eps_sel, out
+
+        eps, st = jax.lax.cond(jnp.all(skip), reuse_all, mixed, state)
+        st["have_cache"] = jnp.ones_like(state["have_cache"])
+        skf = skip.astype(F32)
+        stats = dict(st["stats"])
+        stats["blocks_computed"] = (stats["blocks_computed"]
+                                    + (1.0 - skf) * self.L
+                                    + skf * computed_on_skip)
+        stats["blocks_skipped"] = (stats["blocks_skipped"]
+                                   + skf * (self.L - computed_on_skip))
+        stats["steps_reused"] = stats["steps_reused"] + skf
+        stats["motion_frac_sum"] = stats["motion_frac_sum"] + (1.0 - skf)
+        st["stats"] = stats
+        return eps, st
+
+    # ------------------------------------------------------------------
 
     def step(self, params, state, latents, t, labels):
         """One denoising-model evaluation under the cache policy.
-        Returns (eps, new_state)."""
+        ``t`` and ``labels`` are (B,) and may be heterogeneous across the
+        batch.  Returns (eps, new_state)."""
         m = self.model
         x_in = m.tokens_in(params, latents)
         c = m.conditioning(params, t, labels)
-
-        def compute_full(state):
-            x_out, hidden = self._full_forward(params, x_in, c)
-            eps = self._eps(params, x_out, c, latents.shape)
-            st = dict(state)
-            st["prev_tokens_in"] = x_in
-            st["prev_hidden"] = hidden
-            st["prev_eps"] = eps.astype(state["prev_eps"].dtype)
-            st["have_cache"] = jnp.ones((), bool)
-            stats = dict(st["stats"])
-            stats["blocks_computed"] = stats["blocks_computed"] + self.L
-            stats["motion_frac_sum"] = stats["motion_frac_sum"] + 1.0
-            st["stats"] = stats
-            return eps, st
-
-        def reuse_step(state):
-            st = dict(state)
-            stats = dict(st["stats"])
-            stats["steps_reused"] = stats["steps_reused"] + 1.0
-            stats["blocks_skipped"] = stats["blocks_skipped"] + self.L
-            st["stats"] = stats
-            return st["prev_eps"].astype(F32).astype(x_in.dtype), st
+        b = x_in.shape[0]
+        have = state["have_cache"]
 
         p = self.policy
         if p == "nocache":
-            eps, state = compute_full(state)
+            eps, state = self._masked_step(params, state, x_in, c,
+                                           jnp.zeros((b,), bool))
         elif p == "fora":
-            compute = (state["step_count"] % self.fora_interval == 0) | (
-                ~state["have_cache"])
-            eps, state = jax.lax.cond(compute, compute_full, reuse_step, state)
+            recompute = state["step_count"] % self.fora_interval == 0
+            skip = jnp.broadcast_to(~recompute, (b,)) & have
+            eps, state = self._masked_step(params, state, x_in, c, skip)
         elif p == "teacache":
-            diff, prev = statcache.delta_stats(x_in, state["prev_tokens_in"])
-            rel = jnp.sqrt(diff / jnp.maximum(prev, 1e-12))
+            rel = self._rel_change(x_in, state["prev_tokens_in"])
             acc = state["tea_acc"] + rel
-            skip = (acc < self.tea_threshold) & state["have_cache"]
-
-            def sk(s):
-                eps, s = reuse_step(s)
-                s = dict(s)
-                s["tea_acc"] = acc
-                return eps, s
-
-            def co(s):
-                eps, s = compute_full(s)
-                s = dict(s)
-                s["tea_acc"] = jnp.zeros((), F32)
-                return eps, s
-
-            eps, state = jax.lax.cond(skip, sk, co, state)
+            skip = (acc < self.tea_threshold) & have
+            eps, state = self._masked_step(params, state, x_in, c, skip)
+            state["tea_acc"] = jnp.where(skip, acc, 0.0)
         elif p == "adacache":
-            diff, prev = statcache.delta_stats(x_in, state["prev_tokens_in"])
-            rel = jnp.sqrt(diff / jnp.maximum(prev, 1e-12))
+            rel = self._rel_change(x_in, state["prev_tokens_in"])
             lo, hi = self.ada_thresholds
             budget = jnp.where(rel < lo, 3, jnp.where(rel < hi, 1, 0))
-            skip = (state["ada_skip_left"] > 0) & state["have_cache"]
-
-            def sk(s):
-                eps, s = reuse_step(s)
-                s = dict(s)
-                s["ada_skip_left"] = s["ada_skip_left"] - 1
-                return eps, s
-
-            def co(s):
-                eps, s = compute_full(s)
-                s = dict(s)
-                s["ada_skip_left"] = budget.astype(jnp.int32)
-                return eps, s
-
-            eps, state = jax.lax.cond(skip, sk, co, state)
+            skip = (state["ada_skip_left"] > 0) & have
+            eps, state = self._masked_step(params, state, x_in, c, skip)
+            state["ada_skip_left"] = jnp.where(
+                skip, state["ada_skip_left"] - 1,
+                budget).astype(jnp.int32)
         elif p == "fbcache":
             bp0 = jax.tree.map(lambda a: a[0], params["blocks"])
             h1 = m.block_apply(bp0, x_in, c)
-            diff, prev = statcache.delta_stats(h1, state["prev_hidden"][1])
-            rel = jnp.sqrt(diff / jnp.maximum(prev, 1e-12))
-            skip = (rel < self.fb_rdt) & state["have_cache"]
-
-            def sk(s):
-                eps, s = reuse_step(s)
-                s = dict(s)
-                stats = dict(s["stats"])
-                stats["blocks_computed"] = stats["blocks_computed"] + 1.0
-                stats["blocks_skipped"] = stats["blocks_skipped"] - 1.0
-                s["stats"] = stats
-                return eps, s
-
-            eps, state = jax.lax.cond(skip, sk,
-                                      lambda s: compute_full(s), state)
+            rel = self._rel_change(h1, state["prev_hidden"][1])
+            skip = (rel < self.fb_rdt) & have
+            eps, state = self._masked_step(params, state, x_in, c, skip,
+                                           computed_on_skip=1.0)
         elif p == "l2c":
             eps, state = self._layerwise_step(
                 params, state, x_in, c,
                 forced_mask=self.l2c_mask, use_gate=False, use_str=False)
         else:  # fastcache
-            def first(s):
-                return compute_full(s)
-
-            def cached(s):
-                return self._fastcache_step(params, s, x_in, c)
-
-            eps, state = jax.lax.cond(state["have_cache"], cached, first,
-                                      state)
+            # Per-block gating needs every sample's cache payload; a batch
+            # with any cold sample recomputes fully (conservative — only the
+            # very first step in sampling, where all samples are cold).
+            eps, state = jax.lax.cond(
+                jnp.all(have),
+                lambda s: self._fastcache_step(params, s, x_in, c),
+                lambda s: self._masked_step(params, s, x_in, c,
+                                            jnp.zeros((b,), bool)),
+                state)
         state = dict(state)
         state["step_count"] = state["step_count"] + 1
         stats = dict(state["stats"])
@@ -227,7 +243,7 @@ class CachedDiT:
         return eps, state
 
     # ------------------------------------------------------------------
-    # FastCache proper (Alg. 1)
+    # FastCache proper (Alg. 1), per-sample block gates
     # ------------------------------------------------------------------
 
     def _fastcache_step(self, params, state, x_in, c):
@@ -235,7 +251,7 @@ class CachedDiT:
         fcp = self.fc_params
         b, n, d = x_in.shape
 
-        # ---- STR: token partition (Eqs. 1-2)
+        # ---- STR: token partition (Eqs. 1-2), per-sample
         if fc.use_str:
             sal = saliency.token_saliency(x_in, state["prev_tokens_in"])
             part = saliency.partition_tokens(sal, fc.motion_threshold,
@@ -243,7 +259,7 @@ class CachedDiT:
         else:
             sal = jnp.full((b, n), jnp.inf, F32)
             part = saliency.partition_tokens(sal, -1.0, n)
-        mfrac = saliency.motion_fraction(part)
+        mfrac = saliency.motion_fraction(part)               # (B,)
 
         # ---- static bypass (Eq. 3) + MB blend with previous final hidden
         h_static = linear_approx.apply_linear(fcp["W_c"], fcp["b_c"], x_in)
@@ -254,39 +270,60 @@ class CachedDiT:
         # ---- motion stream through gated blocks
         xm = saliency.gather_motion(x_in, part)              # (B,C,D)
         gate = state["gate"]
-        # df of the chi^2 statistic = number of observed elements (static at
-        # trace time; the paper's ND with the motion capacity applied)
-        nd = int(xm.size)
+        # df of the chi^2 statistic = observed elements of ONE sample (static
+        # at trace time; the paper's ND with the motion capacity applied)
+        nd = int(xm.shape[1] * xm.shape[2])
         threshold = statcache.make_threshold(fc.alpha, nd)
+        if self.gate_mode == "global":
+            threshold_g = statcache.make_threshold(fc.alpha, nd * b)
+        use_sc = bool(fc.use_sc)
 
         def body(carry, xs):
             xm, sig, ini, comp, skip = carry
             bp, w_l, b_l, prev_in, prev_out, lidx = xs
             prev_m = saliency.gather_motion(prev_in, part)
-            diff, prevsq = statcache.delta_stats(xm, prev_m)
-            do_cache = statcache.gate_decision(
-                diff, prevsq, sig[lidx], nd, threshold) & ini[lidx]
-            do_cache = do_cache & jnp.asarray(fc.use_sc)
+            prev_om = saliency.gather_motion(prev_out, part)
+            eligible = ini[lidx] & use_sc                    # (B,)
 
-            def skip_fn(xm):
+            if self.gate_mode == "global":
+                diff, prevsq = statcache.delta_stats_per_sample(xm, prev_m)
+                do_cache = jnp.broadcast_to(
+                    statcache.gate_decision_global(diff, sig[lidx], nd * b,
+                                                   threshold_g)
+                    & jnp.all(eligible), (b,))
                 approx = linear_approx.apply_linear(w_l, b_l, xm)
                 if fc.use_mb:
-                    approx = linear_approx.blend(
-                        approx, saliency.gather_motion(prev_out, part),
-                        fc.blend_gamma)
-                return approx
+                    approx = linear_approx.blend(approx, prev_om,
+                                                 fc.blend_gamma)
+                out = jnp.where(do_cache[:, None, None], approx, xm)
+            elif self.use_fused:
+                out, do_cache, diff, prevsq = kernel_ops.fused_gate(
+                    xm, prev_m, prev_om, w_l, b_l, sig[lidx], eligible,
+                    threshold=threshold, gamma=fc.blend_gamma,
+                    use_blend=fc.use_mb)
+            else:
+                out, do_cache, diff, prevsq = kernel_ref.fused_gate(
+                    xm, prev_m, prev_om, w_l, b_l, sig[lidx], eligible,
+                    threshold=threshold, gamma=fc.blend_gamma,
+                    use_blend=fc.use_mb)
 
-            def comp_fn(xm):
-                return self.model.block_apply(bp, xm, c)
-
-            xm_new = jax.lax.cond(do_cache, skip_fn, comp_fn, xm)
-            # sliding-window variance tracker updates on recompute
-            new_sig_l, _ = statcache.update_sigma(
+            # skip the MXU block entirely when every sample caches; otherwise
+            # compute it once for the batch and keep cached samples' approx
+            xm_new = jax.lax.cond(
+                jnp.all(do_cache),
+                lambda ops_: ops_[0],
+                lambda ops_: jnp.where(do_cache[:, None, None], ops_[0],
+                                       self.model.block_apply(bp, ops_[1],
+                                                              c)),
+                (out, xm))
+            # sliding-window variance tracker updates on recompute, per-sample
+            new_sig, _ = statcache.update_sigma(
                 sig[lidx], ini[lidx], diff, nd, fc.background_momentum)
-            sig = sig.at[lidx].set(jnp.where(do_cache, sig[lidx], new_sig_l))
-            ini = ini.at[lidx].set(True)
-            comp = comp + jnp.where(do_cache, 0.0, 1.0)
-            skip = skip + jnp.where(do_cache, 1.0, 0.0)
+            sig = sig.at[lidx].set(jnp.where(do_cache, sig[lidx], new_sig))
+            ini = ini.at[lidx].set(jnp.ones_like(ini[lidx]))
+            dc = do_cache.astype(F32)
+            comp = comp + (1.0 - dc)
+            skip = skip + dc
             # cache payload: this block's input scattered over prev full grid
             new_prev_in = saliency.scatter_motion(prev_in, xm, part)
             return (xm_new, sig, ini, comp, skip), new_prev_in
@@ -295,7 +332,7 @@ class CachedDiT:
         prev_in_stack = state["prev_hidden"][:-1]            # (L,B,N,D)
         prev_out_stack = state["prev_hidden"][1:]            # (L,B,N,D)
         carry0 = (xm, gate.sigma2, gate.initialized,
-                  jnp.zeros((), F32), jnp.zeros((), F32))
+                  jnp.zeros((b,), F32), jnp.zeros((b,), F32))
         (xm, sig, ini, comp, skip), new_prev_in = jax.lax.scan(
             body, carry0,
             (params["blocks"], fcp["W_l"], fcp["b_l"], prev_in_stack,
@@ -345,7 +382,7 @@ class CachedDiT:
         st["prev_tokens_in"] = x_in
         st["prev_hidden"] = jnp.concatenate([inputs, x_out[None]], 0)
         st["prev_eps"] = eps.astype(state["prev_eps"].dtype)
-        st["have_cache"] = jnp.ones((), bool)
+        st["have_cache"] = jnp.ones_like(state["have_cache"])
         stats = dict(st["stats"])
         stats["blocks_computed"] = stats["blocks_computed"] + comp
         stats["blocks_skipped"] = stats["blocks_skipped"] + skip
@@ -355,19 +392,35 @@ class CachedDiT:
 
 
 def summarize_stats(state) -> Dict[str, float]:
+    """Batch-mean view of the (batch,) per-sample accumulators, so the
+    reported numbers stay in per-sample units (steps reused per sample,
+    blocks skipped per sample, ...) regardless of batch size.  The raw
+    per-sample counts are under ``per_sample``."""
     s = state["stats"]
-    total = float(s["blocks_computed"]) + float(s["blocks_skipped"])
-    return {
-        "steps": float(s["steps"]),
-        "steps_reused": float(s["steps_reused"]),
-        "blocks_computed": float(s["blocks_computed"]),
-        "blocks_skipped": float(s["blocks_skipped"]),
-        "block_cache_ratio": (float(s["blocks_skipped"]) / total
-                              if total else 0.0),
-        "mean_motion_fraction": (float(s["motion_frac_sum"])
-                                 / max(1.0, float(s["steps"])
-                                       - float(s["steps_reused"]))),
+
+    def mean(a):
+        return float(jnp.mean(jnp.asarray(a, F32)))
+
+    steps = float(s["steps"])
+    computed = mean(s["blocks_computed"])
+    skipped = mean(s["blocks_skipped"])
+    reused = mean(s["steps_reused"])
+    total = computed + skipped
+    out = {
+        "steps": steps,
+        "steps_reused": reused,
+        "blocks_computed": computed,
+        "blocks_skipped": skipped,
+        "block_cache_ratio": skipped / total if total else 0.0,
+        "mean_motion_fraction": (mean(s["motion_frac_sum"])
+                                 / max(1.0, steps - reused)),
     }
+    if jnp.ndim(s["blocks_skipped"]):
+        out["per_sample"] = {
+            k: [float(v) for v in jnp.asarray(s[k])]
+            for k in ("blocks_computed", "blocks_skipped", "steps_reused",
+                      "motion_frac_sum")}
+    return out
 
 
 def l2c_mask_from_deltas(deltas: jax.Array, n_skip: int) -> jax.Array:

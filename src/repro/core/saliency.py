@@ -59,4 +59,5 @@ def scatter_motion(base: jax.Array, motion: jax.Array,
 
 
 def motion_fraction(part: Partition) -> jax.Array:
-    return jnp.mean(part.is_motion.astype(F32))
+    """Per-sample fraction of tokens marked motion. (B, N) -> (B,)."""
+    return jnp.mean(part.is_motion.astype(F32), axis=-1)

@@ -28,15 +28,35 @@ class GateState(NamedTuple):
     initialized: jax.Array  # per-layer bool
 
 
-def init_gate_state(num_blocks: int) -> GateState:
-    return GateState(sigma2=jnp.ones((num_blocks,), F32),
-                     initialized=jnp.zeros((num_blocks,), bool))
+def init_gate_state(num_blocks: int, batch: int = 0) -> GateState:
+    """Gate tracker state. ``batch > 0`` gives per-(layer, sample) trackers
+    (the per-sample gating path); ``batch == 0`` keeps the legacy per-layer
+    scalars."""
+    shape = (num_blocks, batch) if batch else (num_blocks,)
+    return GateState(sigma2=jnp.ones(shape, F32),
+                     initialized=jnp.zeros(shape, bool))
+
+
+def reset_gate_slot(gate: GateState, slot) -> GateState:
+    """Re-arm one sample's trackers (a serving slot was re-assigned)."""
+    return GateState(sigma2=gate.sigma2.at[:, slot].set(1.0),
+                     initialized=gate.initialized.at[:, slot].set(False))
 
 
 def delta_stats(h: jax.Array, h_prev: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Returns (||h - h_prev||_F^2, ||h_prev||_F^2) in f32."""
     d = h.astype(F32) - h_prev.astype(F32)
     return jnp.sum(d * d), jnp.sum(jnp.square(h_prev.astype(F32)))
+
+
+def delta_stats_per_sample(h: jax.Array, h_prev: jax.Array
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Per-sample Frobenius stats: sums over every axis but the leading batch
+    axis.  h: (B, ...) -> ((B,), (B,)) in f32."""
+    axes = tuple(range(1, h.ndim))
+    d = h.astype(F32) - h_prev.astype(F32)
+    return (jnp.sum(d * d, axis=axes),
+            jnp.sum(jnp.square(h_prev.astype(F32)), axis=axes))
 
 
 def gate_decision(diff_sq: jax.Array, prev_sq: jax.Array, sigma2: jax.Array,
@@ -47,6 +67,15 @@ def gate_decision(diff_sq: jax.Array, prev_sq: jax.Array, sigma2: jax.Array,
         delta_sq = diff_sq / jnp.maximum(prev_sq, 1e-12)
         return delta_sq <= threshold
     stat = diff_sq / (jnp.maximum(sigma2, 1e-30) * n_elements)
+    return stat <= threshold
+
+
+def gate_decision_global(diff_sq: jax.Array, sigma2: jax.Array,
+                         n_total: int, threshold: float) -> jax.Array:
+    """Legacy whole-batch decision from per-sample stats: the (B,) Frobenius
+    deltas and trackers are reduced to ONE statistic ~ chi^2_{B*ND}.
+    `threshold` is chi2_{B*ND,1-a}/(B*ND).  Returns a scalar bool."""
+    stat = jnp.sum(diff_sq) / (jnp.maximum(jnp.mean(sigma2), 1e-30) * n_total)
     return stat <= threshold
 
 

@@ -23,8 +23,15 @@ F32 = jnp.float32
 def sample(runner: CachedDiT, params, key: jax.Array, *, batch: int,
            labels: Optional[jax.Array] = None, num_steps: int = 50,
            guidance_scale: float = 4.0, num_train_steps: int = 1000,
-           jit_step: bool = True) -> Tuple[jax.Array, Dict]:
-    """Returns (samples (B, H, W, C) latents, cache stats state)."""
+           jit_step: bool = True, t_offsets: Optional[jax.Array] = None,
+           x_init: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Returns (samples (B, H, W, C) latents, cache stats state).
+
+    The batch may be heterogeneous: per-sample ``labels`` (B,) and per-sample
+    integer ``t_offsets`` (B,) that shift each sample's DDIM schedule — the
+    per-sample cache gate keeps each sample's skip decisions independent, so
+    mixing fast-converging and still-moving samples in one batch is safe.
+    ``x_init`` overrides the initial noise (e.g. to match unbatched runs)."""
     cfg = runner.model.cfg
     img, ch = cfg.dit.image_size, cfg.dit.in_channels
     null_label = cfg.dit.num_classes
@@ -36,19 +43,25 @@ def sample(runner: CachedDiT, params, key: jax.Array, *, batch: int,
     ts = sch.ddim_timesteps(num_train_steps, num_steps)
     ts_prev = jnp.concatenate([ts[1:], jnp.array([-1], jnp.int32)])
 
-    x = jax.random.normal(key, (batch, img, img, ch), F32)
+    x = (x_init.astype(F32) if x_init is not None
+         else jax.random.normal(key, (batch, img, img, ch), F32))
     eff_batch = 2 * batch if use_cfg else batch
     state = runner.init_state(eff_batch)
 
     lab = jnp.concatenate([labels, jnp.full((batch,), null_label,
                                             jnp.int32)]) if use_cfg else labels
+    off = (jnp.zeros((batch,), jnp.int32) if t_offsets is None
+           else t_offsets.astype(jnp.int32))
 
     step_fn = runner.step
     if jit_step:
         step_fn = jax.jit(step_fn)
 
     for i in range(num_steps):
-        t = jnp.full((batch,), ts[i], jnp.int32)
+        t = jnp.clip(ts[i] + off, 0, num_train_steps - 1)
+        t_prev = jnp.where(ts_prev[i] < 0, -1,
+                           jnp.clip(ts_prev[i] + off, 0,
+                                    num_train_steps - 1))
         if use_cfg:
             x_in = jnp.concatenate([x, x], axis=0)
             t_in = jnp.concatenate([t, t], axis=0)
@@ -58,5 +71,5 @@ def sample(runner: CachedDiT, params, key: jax.Array, *, batch: int,
         if use_cfg:
             eps_c, eps_u = jnp.split(eps, 2, axis=0)
             eps = eps_u + guidance_scale * (eps_c - eps_u)
-        x = sch.ddim_step(sched, x, eps, ts[i], ts_prev[i])
+        x = sch.ddim_step(sched, x, eps, t, t_prev)
     return x, state

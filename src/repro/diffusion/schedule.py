@@ -39,10 +39,15 @@ def ddim_timesteps(num_train_steps: int, num_inference_steps: int
 
 def ddim_step(sched: Schedule, x_t: jax.Array, eps: jax.Array, t: jax.Array,
               t_prev: jax.Array, eta: float = 0.0) -> jax.Array:
-    """Deterministic DDIM update x_t -> x_{t_prev} (eta=0)."""
+    """Deterministic DDIM update x_t -> x_{t_prev} (eta=0).  ``t``/``t_prev``
+    may be scalars (shared schedule) or (B,) per-sample timesteps."""
     ac_t = sched.alphas_cum[t]
     ac_p = jnp.where(t_prev >= 0, sched.alphas_cum[jnp.maximum(t_prev, 0)],
                      jnp.ones_like(ac_t))
+    if jnp.ndim(ac_t):                       # (B,) -> broadcast over x_t dims
+        shape = (-1,) + (1,) * (x_t.ndim - 1)
+        ac_t = ac_t.reshape(shape)
+        ac_p = ac_p.reshape(shape)
     x_t = x_t.astype(F32)
     eps = eps.astype(F32)
     x0 = (x_t - jnp.sqrt(1.0 - ac_t) * eps) / jnp.sqrt(ac_t)

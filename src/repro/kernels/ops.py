@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_gate as _fg
 from repro.kernels import knn_density as _knn
 from repro.kernels import linear_blend as _lb
 from repro.kernels import saliency_delta as _sd
@@ -31,6 +32,16 @@ def linear_blend(x, w, b, prev, *, gamma: float = 0.5, bm: int = 128,
         interpret = _auto_interpret()
     return _lb.linear_blend(x, w, b, prev, gamma=gamma, bm=bm, bf=bf, bk=bk,
                             interpret=interpret)
+
+
+def fused_gate(x, prev_in, prev_out, w, b, sigma2, eligible, *,
+               threshold: float, gamma: float = 0.5, use_blend: bool = True,
+               bc: int = 0, interpret=None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _fg.fused_gate(x, prev_in, prev_out, w, b, sigma2, eligible,
+                          threshold=threshold, gamma=gamma,
+                          use_blend=use_blend, bc=bc, interpret=interpret)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

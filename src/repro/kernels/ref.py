@@ -25,6 +25,29 @@ def linear_blend(x: jax.Array, w: jax.Array, b: jax.Array,
     return (gamma * y + (1.0 - gamma) * prev.astype(F32)).astype(x.dtype)
 
 
+def fused_gate(x: jax.Array, prev_in: jax.Array, prev_out: jax.Array,
+               w: jax.Array, b: jax.Array, sigma2: jax.Array,
+               eligible: jax.Array, *, threshold: float, gamma: float = 0.5,
+               use_blend: bool = True):
+    """Per-sample fused cache gate (Eqs. 4-7 + 6/MB).  x, prev_in, prev_out:
+    (B, C, D); w: (D, D); b: (D,); sigma2, eligible: (B,).  Returns
+    (out (B,C,D), gate (B,) bool, diff_sq (B,), prev_sq (B,)): gated samples
+    get the blended linear approximation, the rest pass through."""
+    xf = x.astype(F32)
+    pf = prev_in.astype(F32)
+    dd = xf - pf
+    diff = jnp.sum(dd * dd, axis=(1, 2))
+    prevsq = jnp.sum(pf * pf, axis=(1, 2))
+    nd = x.shape[1] * x.shape[2]
+    stat = diff / (jnp.maximum(sigma2.astype(F32), 1e-30) * nd)
+    gate = (stat <= threshold) & eligible.astype(bool)
+    approx = jnp.matmul(xf, w.astype(F32)) + b.astype(F32)
+    if use_blend:
+        approx = gamma * approx + (1.0 - gamma) * prev_out.astype(F32)
+    out = jnp.where(gate[:, None, None], approx, xf)
+    return out.astype(x.dtype), gate, diff, prevsq
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool, window: int = 0) -> jax.Array:
     """q: (B, H, Sq, dh); k, v: (B, KVH, Skv, dh); GQA by head grouping.

@@ -32,6 +32,15 @@ from repro.launch.specs import (Bundle, build_bundle, model_flops,
                                 skip_reason)
 from repro.models import flags as model_flags
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a per-program list of dicts on the
+    pinned jax 0.4.37 and a bare dict on newer releases — normalize both."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 # TPU v5e hardware constants (roofline denominators)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
@@ -53,7 +62,7 @@ def _measure_cost(arch: str, shape_name: str, mesh, num_layers: int,
         jitted = jax.jit(bundle.step_fn, in_shardings=bundle.in_shardings,
                          out_shardings=bundle.out_shardings)
         compiled = jitted.lower(*bundle.args).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll, _ = collective_bytes(compiled.as_text(), default_trip=1)
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),
@@ -155,7 +164,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
                 v = getattr(mem, k, None)
                 if v is not None:
                     mem_rec[k] = int(v)
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled)
         flops = float(cost.get("flops", 0.0))
         bytes_accessed = float(cost.get("bytes accessed", 0.0))
 

@@ -50,6 +50,11 @@ class ServingEngine:
         if fastcache is not None and fastcache.enabled:
             self.decoder = CachedDecoder(model, fastcache)
             self.fc_state = self.decoder.init_state(max_batch)
+            # headline counters accumulate only ACTIVE slots' decisions —
+            # idle slots re-feed their stale token, trivially skip every
+            # block, and would otherwise inflate the cache ratio
+            self.active_blocks_skipped = 0.0
+            self.active_blocks_computed = 0.0
 
         self._prefill = jax.jit(self._prefill_impl)
         if self.decoder is None:
@@ -88,6 +93,10 @@ class ServingEngine:
                 logits, self.cache = self._prefill(
                     self.params, jnp.asarray(req.prompt)[None], self.cache,
                     s)
+                if self.decoder is not None:
+                    # per-slot gating: re-arm only this slot's trackers — the
+                    # other slots' caches stay valid across the admission
+                    self.fc_state = self.decoder.reset_slot(self.fc_state, s)
                 nxt = int(jnp.argmax(logits)) if self.greedy else int(
                     jax.random.categorical(jax.random.PRNGKey(req.rid),
                                            logits))
@@ -103,8 +112,20 @@ class ServingEngine:
         if self.decoder is None:
             logits, self.cache = self._decode(self.params, tokens, self.cache)
         else:
+            active = np.array([r is not None and not r.done
+                               for r in self.slots])
+            before = {k: np.asarray(v)
+                      for k, v in self.fc_state["stats"].items()
+                      if k != "steps"}
             logits, self.cache, self.fc_state = self._decode(
                 self.params, tokens, self.cache, self.fc_state)
+            after = self.fc_state["stats"]
+            self.active_blocks_skipped += float(
+                (np.asarray(after["blocks_skipped"])
+                 - before["blocks_skipped"])[active].sum())
+            self.active_blocks_computed += float(
+                (np.asarray(after["blocks_computed"])
+                 - before["blocks_computed"])[active].sum())
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         for s, req in enumerate(self.slots):
             if req is None or req.done:
@@ -134,10 +155,18 @@ class ServingEngine:
         return finished + [r for r in active if r not in finished]
 
     def cache_stats(self) -> Dict[str, float]:
+        """Engine-lifetime cache counters.  The headline numbers count only
+        decisions made while a slot had a live request (idle slots skip
+        trivially); the raw per-slot (batch,) accumulators — which do
+        include idle periods — are reported under per_slot_*."""
         if self.decoder is None:
             return {}
         s = self.fc_state["stats"]
-        tot = float(s["blocks_computed"]) + float(s["blocks_skipped"])
-        return {"blocks_skipped": float(s["blocks_skipped"]),
-                "block_cache_ratio": float(s["blocks_skipped"]) / tot
-                if tot else 0.0}
+        skipped = self.active_blocks_skipped
+        tot = self.active_blocks_computed + skipped
+        return {"blocks_skipped": skipped,
+                "block_cache_ratio": skipped / tot if tot else 0.0,
+                "per_slot_blocks_skipped": [
+                    float(v) for v in jnp.asarray(s["blocks_skipped"])],
+                "per_slot_blocks_computed": [
+                    float(v) for v in jnp.asarray(s["blocks_computed"])]}

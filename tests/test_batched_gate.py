@@ -1,0 +1,190 @@
+"""Per-sample batched cache gating: a static sample must keep skipping while
+its moving batchmate recomputes, batched results must match per-sample
+unbatched runs, and the fused Pallas gate kernel must match its reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import FastCacheConfig
+from repro.core import CachedDiT, summarize_stats, statcache
+from repro.diffusion import sample
+from repro.kernels import ops, ref
+from repro.models import build_model
+from tests.conftest import f32_cfg
+
+
+def _setup(key, fc=None, policy="fastcache"):
+    cfg = f32_cfg(get_reduced("dit-b2"))
+    model = build_model(cfg)
+    params = model.init(key)
+    runner = CachedDiT(model, fc or FastCacheConfig(), policy=policy)
+    return cfg, model, params, runner
+
+
+def _drive_half_static(runner, params, key, cfg, idxs, steps=6):
+    """Drive samples `idxs`: sample id 0 feeds constant latents, sample id 1
+    doubles in amplitude every step (outruns the sliding-window tracker)."""
+    img, ch = cfg.dit.image_size, cfg.dit.in_channels
+    x0 = jax.random.normal(key, (2, img, img, ch))
+    ids = jnp.array(idxs)
+    state = runner.init_state(len(idxs))
+    step = jax.jit(runner.step)
+    labels = jnp.array([1, 2])[ids]
+    outs = []
+    for t in range(steps):
+        scale = jnp.where(ids == 1, 2.0 ** t, 1.0)
+        x = x0[ids] * scale[:, None, None, None]
+        eps, state = step(params, state, x, jnp.full((len(idxs),), 25),
+                          labels)
+        outs.append(eps)
+    return outs, state
+
+
+def test_static_sample_skips_while_moving_recomputes(key):
+    cfg, model, params, runner = _setup(key)
+    _, state = _drive_half_static(runner, params, key, cfg, [0, 1])
+    s = summarize_stats(state)["per_sample"]
+    static_skip, moving_skip = s["blocks_skipped"]
+    assert static_skip > moving_skip, s
+    assert static_skip > 0.0, s
+    assert moving_skip == 0.0, s
+    # per-sample compute counters mirror the skips
+    assert s["blocks_computed"][0] < s["blocks_computed"][1], s
+
+
+def test_batched_matches_unbatched(key):
+    """Running {static, moving} as one batch must reproduce each sample's
+    solo run bit-for-bit stats and fp32-tolerance outputs."""
+    cfg, model, params, runner = _setup(key)
+    outs_b, st_b = _drive_half_static(runner, params, key, cfg, [0, 1])
+    outs_0, st_0 = _drive_half_static(runner, params, key, cfg, [0])
+    outs_1, st_1 = _drive_half_static(runner, params, key, cfg, [1])
+    for t, (eb, e0, e1) in enumerate(zip(outs_b, outs_0, outs_1)):
+        np.testing.assert_allclose(eb[0], e0[0], rtol=1e-5, atol=1e-5,
+                                   err_msg=f"static sample step {t}")
+        np.testing.assert_allclose(eb[1], e1[0], rtol=1e-5, atol=1e-5,
+                                   err_msg=f"moving sample step {t}")
+    sb = summarize_stats(st_b)["per_sample"]
+    s0 = summarize_stats(st_0)["per_sample"]
+    s1 = summarize_stats(st_1)["per_sample"]
+    assert sb["blocks_skipped"][0] == s0["blocks_skipped"][0]
+    assert sb["blocks_skipped"][1] == s1["blocks_skipped"][0]
+
+
+@pytest.mark.parametrize("policy", ["teacache", "fbcache"])
+def test_step_level_policies_gate_per_sample(key, policy):
+    cfg, model, params, runner = _setup(key, policy=policy)
+    _, state = _drive_half_static(runner, params, key, cfg, [0, 1])
+    s = summarize_stats(state)["per_sample"]
+    assert s["steps_reused"][0] > s["steps_reused"][1], (policy, s)
+
+
+def test_global_gate_mode_couples_batch(key):
+    """gate_mode='global' (the pre-refactor baseline) must give identical
+    skip counts for every sample — the moving one drags the static one."""
+    fc = FastCacheConfig(gate_mode="global")
+    cfg, model, params, runner = _setup(key, fc=fc)
+    _, state = _drive_half_static(runner, params, key, cfg, [0, 1])
+    s = summarize_stats(state)["per_sample"]
+    assert s["blocks_skipped"][0] == s["blocks_skipped"][1], s
+
+
+def test_fused_gate_path_matches_reference_path(key):
+    """CachedDiT with use_fused_gate=True (Pallas interpret on CPU) must
+    reproduce the default JAX gating path."""
+    cfg, model, params, runner = _setup(key)
+    _, _, _, r_fused = _setup(key, fc=FastCacheConfig(use_fused_gate=True))
+    outs_a, st_a = _drive_half_static(runner, params, key, cfg, [0, 1],
+                                      steps=4)
+    outs_b, st_b = _drive_half_static(r_fused, params, key, cfg, [0, 1],
+                                      steps=4)
+    for ea, eb in zip(outs_a, outs_b):
+        np.testing.assert_allclose(ea, eb, rtol=1e-5, atol=1e-5)
+    assert (summarize_stats(st_a)["per_sample"]["blocks_skipped"]
+            == summarize_stats(st_b)["per_sample"]["blocks_skipped"])
+
+
+def test_sampler_heterogeneous_batch(key):
+    """Full sampling with per-sample labels and timestep offsets: shapes,
+    finiteness, and per-sample stats present."""
+    cfg, model, params, runner = _setup(key)
+    x, state = sample(runner, params, key, batch=2,
+                      labels=jnp.array([3, 7]),
+                      t_offsets=jnp.array([0, 5]), num_steps=6,
+                      guidance_scale=4.0)
+    assert x.shape[0] == 2
+    assert not bool(jnp.isnan(x).any())
+    s = summarize_stats(state)
+    assert len(s["per_sample"]["blocks_skipped"]) == 4  # 2B with CFG
+
+
+def test_decode_reset_slot_rearms_one_slot(key):
+    from repro.core import CachedDecoder
+    cfg = f32_cfg(get_reduced("qwen3-0.6b"))
+    model = build_model(cfg)
+    dec = CachedDecoder(model, FastCacheConfig())
+    st = dec.init_state(2)
+    st["have_cache"] = jnp.ones((2,), bool)
+    st["gate"] = statcache.GateState(
+        sigma2=jnp.full((cfg.num_layers, 2), 0.5),
+        initialized=jnp.ones((cfg.num_layers, 2), bool))
+    st2 = dec.reset_slot(st, 1)
+    assert bool(st2["have_cache"][0]) and not bool(st2["have_cache"][1])
+    assert bool(st2["gate"].initialized[:, 0].all())
+    assert not bool(st2["gate"].initialized[:, 1].any())
+    np.testing.assert_allclose(st2["gate"].sigma2[:, 0], 0.5)
+    np.testing.assert_allclose(st2["gate"].sigma2[:, 1], 1.0)
+
+
+def test_decode_sigma_not_seeded_from_bootstrap(key):
+    """The variance tracker must only observe deltas against a REAL previous
+    hidden: the first decode step after init/reset compares against zeroed
+    prev_hidden, and seeding sigma2 from ||h - 0||^2 would lock the gate
+    into skipping every block forever."""
+    from repro.core import CachedDecoder
+    cfg = f32_cfg(get_reduced("qwen3-0.6b"))
+    model = build_model(cfg)
+    params = model.init(key)
+    toks = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    dec = CachedDecoder(model, FastCacheConfig())
+    st = dec.init_state(2)
+    logits, cache = model.prefill(params, {"tokens": toks}, window=32)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits, cache, st = dec.decode_step(params, nxt, cache, st)
+    # bootstrap step (prev_hidden was zeros): nothing observed
+    assert not bool(st["gate"].initialized.any())
+    np.testing.assert_allclose(st["gate"].sigma2, 1.0)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits, cache, st = dec.decode_step(params, nxt, cache, st)
+    # second step observed a real token-to-token delta
+    assert bool(st["gate"].initialized.all())
+    assert bool((st["gate"].sigma2 != 1.0).any())
+    # sigma must be the token-delta scale, not the raw hidden magnitude
+    h = st["prev_hidden"][1]                 # block-0 input, (B, D)
+    raw_scale = float(jnp.mean(jnp.sum(h.astype(jnp.float32) ** 2, -1))
+                      / h.shape[-1])
+    assert float(st["gate"].sigma2.max()) < raw_scale, (
+        float(st["gate"].sigma2.max()), raw_scale)
+
+
+def test_serving_admission_preserves_batchmate_cache(key):
+    """Admitting a new request into a freed slot must reset only that slot's
+    gate state; the resident request keeps decoding with its cache."""
+    from repro.serving import Request, ServingEngine
+    cfg = f32_cfg(get_reduced("qwen3-0.6b"))
+    model = build_model(cfg)
+    params = model.init(key)
+    eng = ServingEngine(model, params, max_batch=2, window=64,
+                        fastcache=FastCacheConfig())
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 5)
+                    .astype(np.int32), max_new_tokens=4 + 3 * i)
+            for i in range(3)]
+    done = eng.run(reqs)
+    assert len(done) == 3
+    assert all(len(r.generated) == r.max_new_tokens for r in done)
+    stats = eng.cache_stats()
+    assert len(stats["per_slot_blocks_skipped"]) == 2
+    assert stats["block_cache_ratio"] >= 0.0

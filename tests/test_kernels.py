@@ -40,6 +40,53 @@ def test_linear_blend(m, d, f, dtype, gamma, key):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("b,c,d", [(2, 32, 128), (4, 64, 256), (3, 16, 64)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("use_blend", [True, False])
+def test_fused_gate(b, c, d, dtype, use_blend, key):
+    from repro.core import statcache
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, c, d)).astype(dtype)
+    prev = (x + 0.01 * jax.random.normal(ks[1], (b, c, d))).astype(dtype)
+    prev = prev.at[0].add(5.0)              # sample 0 moved a lot
+    po = jax.random.normal(ks[2], (b, c, d)).astype(dtype)
+    w = (jnp.eye(d) + 0.01 * jax.random.normal(ks[3], (d, d))).astype(dtype)
+    bias = (0.1 * jax.random.normal(ks[4], (d,))).astype(dtype)
+    sigma2 = jnp.full((b,), 1e-4, jnp.float32)
+    eligible = jnp.arange(b) != b - 1       # last sample ineligible
+    thr = statcache.make_threshold(0.05, c * d)
+    out, gate, diff, prevsq = ops.fused_gate(
+        x, prev, po, w, bias, sigma2, eligible, threshold=thr, gamma=0.5,
+        use_blend=use_blend, interpret=True)
+    out_r, gate_r, diff_r, prevsq_r = ref.fused_gate(
+        x, prev, po, w, bias, sigma2, eligible, threshold=thr, gamma=0.5,
+        use_blend=use_blend)
+    tol = 1e-4 if dtype == "float32" else 5e-2
+    np.testing.assert_array_equal(np.asarray(gate), np.asarray(gate_r))
+    assert not bool(gate[0]) and not bool(gate[b - 1])  # moved / ineligible
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(diff, diff_r, rtol=tol)
+    np.testing.assert_allclose(prevsq, prevsq_r, rtol=tol)
+
+
+def test_fused_gate_blocked_token_axis(key):
+    """C-axis blocking (two-phase grid revisit) agrees with one-shot."""
+    from repro.core import statcache
+    x = jax.random.normal(key, (2, 64, 128))
+    prev = x + 0.05
+    po = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, 128))
+    w = jnp.eye(128)
+    thr = statcache.make_threshold(0.05, 64 * 128)
+    args = (x, prev, po, w, jnp.zeros((128,)), jnp.full((2,), 0.01),
+            jnp.ones((2,), bool))
+    a = ops.fused_gate(*args, threshold=thr, bc=16, interpret=True)
+    b = ref.fused_gate(*args, threshold=thr)
+    np.testing.assert_allclose(a[0], b[0], atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
 @pytest.mark.parametrize("b,h,kvh,sq,skv,dh", [
     (1, 4, 4, 128, 128, 64),     # MHA square
     (2, 8, 2, 128, 128, 64),     # GQA
