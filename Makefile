@@ -1,15 +1,27 @@
 # One-command verify/bench entry points (the tier-1 command of ROADMAP.md).
-.PHONY: test test-fast bench-smoke bench
+.PHONY: test test-fast test-serving bench-smoke bench-serve bench
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
 
-# skip the slow dry-run subprocess compiles (~4 min)
+# skip the slow dry-run subprocess compiles (~4 min) and the serving suites
 test-fast:
-	PYTHONPATH=src python -m pytest -x -q -m "not slow"
+	PYTHONPATH=src python -m pytest -x -q -m "not slow and not serving"
+
+# the continuous-batching engine suites (AR decode + diffusion)
+test-serving:
+	PYTHONPATH=src python -m pytest -x -q -m serving
 
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.run --only batched_gate,decode_gate
+
+# smoke both serving engines for a few steps on reduced configs
+bench-serve:
+	PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+		--requests 4 --new-tokens 8 --max-batch 2 --fastcache
+	PYTHONPATH=src python -m repro.launch.serve_diffusion --arch dit-b2 \
+		--reduced --requests 4 --slots 2 --steps 6 --rate 0.5 --json
+	PYTHONPATH=src python -m benchmarks.run --only serving
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

@@ -24,6 +24,9 @@ SUITES = {
                     "Beyond-paper: AR-decode statistical gate"),
     "batched_gate": ("benchmarks.batched_gate",
                      "Per-sample vs global gating on heterogeneous batches"),
+    "serving": ("benchmarks.serving_diffusion",
+                "Continuous vs lockstep diffusion serving under Poisson "
+                "arrivals"),
     "kernels": ("benchmarks.kernels_bench", "Kernel microbenchmarks"),
     "roofline": ("benchmarks.roofline", "Roofline from dry-run artifacts"),
 }

@@ -134,7 +134,8 @@ class FastCacheConfig:
     # whole-batch behaviour, kept for ablation/benchmark baselines)
     gate_mode: str = "per_sample"
     # route the saliency-delta -> chi^2 -> gate -> linear-blend hot path
-    # through the fused Pallas kernel (kernels/fused_gate.py); the pure-JAX
-    # reference path (kernels/ref.fused_gate) is the default and the kernel's
-    # ground truth
-    use_fused_gate: bool = False
+    # through the fused Pallas kernel (kernels/fused_gate.py).  ``None``
+    # auto-selects by backend: the compiled Mosaic kernel on TPU, the
+    # pure-JAX reference path (kernels/ref.fused_gate — the kernel's ground
+    # truth) on CPU/GPU.  Set True/False to override the auto-selection.
+    use_fused_gate: Optional[bool] = None

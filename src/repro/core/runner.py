@@ -67,7 +67,8 @@ class CachedDiT:
         self.fc = fc
         self.policy = policy
         self.gate_mode = fc.gate_mode
-        self.use_fused = fc.use_fused_gate
+        self.use_fused = (kernel_ops.default_use_fused()
+                          if fc.use_fused_gate is None else fc.use_fused_gate)
         self.L = model.cfg.num_layers
         d = model.cfg.d_model
         self.fc_params = fc_params or linear_approx.init_linear_params(
@@ -96,7 +97,10 @@ class CachedDiT:
             "prev_hidden": jnp.zeros((self.L + 1, batch, n, d), dt),
             "prev_eps": jnp.zeros((batch, img, img, cfg.dit.in_channels), dt),
             "gate": statcache.init_gate_state(self.L, batch),
-            "step_count": jnp.zeros((), jnp.int32),
+            # per-sample step phase: serving slots admitted mid-flight keep
+            # their own schedule position (fora's interval counts from 0 for
+            # every request, not from the engine's global step)
+            "step_count": jnp.zeros((batch,), jnp.int32),
             "have_cache": jnp.zeros((batch,), bool),
             "tea_acc": jnp.zeros((batch,), F32),
             "ada_skip_left": jnp.zeros((batch,), jnp.int32),
@@ -108,6 +112,22 @@ class CachedDiT:
                 "steps": jnp.zeros((), F32),
             },
         }
+
+    def reset_slot(self, state: Dict, slot) -> Dict:
+        """Re-arm one sample (or an index array of samples, e.g. a CFG
+        cond/uncond pair) for a new request: drop its cache payload, variance
+        trackers and policy counters without disturbing its batchmates.
+        Stats stay cumulative (engine-lifetime counters)."""
+        st = dict(state)
+        st["have_cache"] = state["have_cache"].at[slot].set(False)
+        st["gate"] = statcache.reset_gate_slot(state["gate"], slot)
+        st["prev_tokens_in"] = state["prev_tokens_in"].at[slot].set(0.0)
+        st["prev_hidden"] = state["prev_hidden"].at[:, slot].set(0.0)
+        st["prev_eps"] = state["prev_eps"].at[slot].set(0.0)
+        st["step_count"] = state["step_count"].at[slot].set(0)
+        st["tea_acc"] = state["tea_acc"].at[slot].set(0.0)
+        st["ada_skip_left"] = state["ada_skip_left"].at[slot].set(0)
+        return st
 
     # ------------------------------------------------------------------
     # Full forward that records per-block inputs (the cache payload)
@@ -196,8 +216,8 @@ class CachedDiT:
             eps, state = self._masked_step(params, state, x_in, c,
                                            jnp.zeros((b,), bool))
         elif p == "fora":
-            recompute = state["step_count"] % self.fora_interval == 0
-            skip = jnp.broadcast_to(~recompute, (b,)) & have
+            recompute = state["step_count"] % self.fora_interval == 0  # (B,)
+            skip = ~recompute & have
             eps, state = self._masked_step(params, state, x_in, c, skip)
         elif p == "teacache":
             rel = self._rel_change(x_in, state["prev_tokens_in"])
@@ -226,14 +246,23 @@ class CachedDiT:
                 params, state, x_in, c,
                 forced_mask=self.l2c_mask, use_gate=False, use_str=False)
         else:  # fastcache
-            # Per-block gating needs every sample's cache payload; a batch
-            # with any cold sample recomputes fully (conservative — only the
-            # very first step in sampling, where all samples are cold).
+            # Per-block gating needs a sample's cache payload.  All-warm
+            # batches take the pure gated path; all-cold batches (the first
+            # sampling step) take one full forward.  A MIXED batch — a
+            # request admitted into a running serving batch — warms up the
+            # cold samples with a full forward while the warm samples keep
+            # their per-sample gate decisions, cache payloads and trackers
+            # (their outputs and state match an admission-free run exactly).
             eps, state = jax.lax.cond(
                 jnp.all(have),
                 lambda s: self._fastcache_step(params, s, x_in, c),
-                lambda s: self._masked_step(params, s, x_in, c,
-                                            jnp.zeros((b,), bool)),
+                lambda s: jax.lax.cond(
+                    jnp.any(have),
+                    lambda s2: self._fastcache_mixed_step(params, s2, x_in,
+                                                          c, have),
+                    lambda s2: self._masked_step(params, s2, x_in, c,
+                                                 jnp.zeros((b,), bool)),
+                    s),
                 state)
         state = dict(state)
         state["step_count"] = state["step_count"] + 1
@@ -351,6 +380,49 @@ class CachedDiT:
         stats["blocks_computed"] = stats["blocks_computed"] + comp
         stats["blocks_skipped"] = stats["blocks_skipped"] + skip
         stats["motion_frac_sum"] = stats["motion_frac_sum"] + mfrac
+        st["stats"] = stats
+        return eps, st
+
+    def _fastcache_mixed_step(self, params, state, x_in, c, have):
+        """Mixed warm/cold batch (a request admitted mid-flight): cold
+        samples take a full forward (their warm-up step — the STR static
+        bypass is only valid with a real cache payload), warm samples take
+        the gated fastcache path.  Results and state are selected per-sample,
+        so a warm sample's outputs, cache payload, variance trackers and
+        stats are bit-identical to a run where the admission never happened,
+        and a cold sample's match its own solo warm-up step."""
+        warm = have                                          # (B,)
+        x_out, hidden = self._full_forward(params, x_in, c)
+        eps_full = self._eps(params, x_out, c, None)
+        eps_fc, st_fc = self._fastcache_step(params, state, x_in, c)
+
+        w3 = warm[:, None, None]
+        w4 = warm[:, None, None, None]
+        eps = jnp.where(w4, eps_fc, eps_full.astype(eps_fc.dtype))
+        st = dict(st_fc)
+        st["prev_tokens_in"] = jnp.where(w3, st_fc["prev_tokens_in"], x_in)
+        st["prev_hidden"] = jnp.where(warm[None, :, None, None],
+                                      st_fc["prev_hidden"],
+                                      hidden.astype(st_fc["prev_hidden"].dtype))
+        st["prev_eps"] = jnp.where(w4, st_fc["prev_eps"],
+                                   eps_full.astype(st_fc["prev_eps"].dtype))
+        # cold samples' warm-up leaves the gate untouched (matching
+        # _masked_step): trackers first observe a delta on the NEXT step,
+        # against the real payload installed here
+        st["gate"] = statcache.GateState(
+            sigma2=jnp.where(warm[None, :], st_fc["gate"].sigma2,
+                             state["gate"].sigma2),
+            initialized=jnp.where(warm[None, :], st_fc["gate"].initialized,
+                                  state["gate"].initialized))
+        st["have_cache"] = jnp.ones_like(have)
+        old = state["stats"]
+        stats = dict(st_fc["stats"])
+        stats["blocks_computed"] = jnp.where(
+            warm, stats["blocks_computed"], old["blocks_computed"] + self.L)
+        for k in ("blocks_skipped", "steps_reused"):
+            stats[k] = jnp.where(warm, stats[k], old[k])
+        stats["motion_frac_sum"] = jnp.where(
+            warm, stats["motion_frac_sum"], old["motion_frac_sum"] + 1.0)
         st["stats"] = stats
         return eps, st
 

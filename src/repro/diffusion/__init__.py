@@ -1,3 +1,3 @@
-from repro.diffusion.sampler import sample  # noqa: F401
+from repro.diffusion.sampler import denoise_step, sample  # noqa: F401
 from repro.diffusion.schedule import (add_noise, ddim_step,  # noqa: F401
                                       ddim_timesteps, linear_schedule)

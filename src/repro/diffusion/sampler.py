@@ -5,6 +5,12 @@ runner.step call, so any cache policy (nocache / fastcache / baselines) slots
 in unchanged.  CFG doubles the batch (cond + null label) — the cache state is
 sized 2B and cond/uncond streams are cached independently, matching how the
 paper runs DiT with guidance enabled (§5.2).
+
+``denoise_step`` is the reusable single-step core: one model evaluation +
+guidance + DDIM update over per-sample ``(t, t_prev)`` vectors.  ``sample()``
+loops it over a shared schedule; the continuous-batching engine
+(``serving/diffusion_engine.py``) jits it with a heterogeneous per-slot
+timestep vector so requests at different schedule positions share one batch.
 """
 from __future__ import annotations
 
@@ -18,6 +24,34 @@ from repro.core.runner import CachedDiT
 from repro.diffusion import schedule as sch
 
 F32 = jnp.float32
+
+
+def denoise_step(runner: CachedDiT, params, sched: sch.Schedule, state,
+                 x: jax.Array, t: jax.Array, t_prev: jax.Array,
+                 labels: jax.Array, *, guidance_scale: float = 4.0
+                 ) -> Tuple[jax.Array, Dict]:
+    """One denoising step x_t -> x_{t_prev} for a (possibly heterogeneous)
+    batch: per-sample integer timesteps ``t``/``t_prev`` (B,), per-sample
+    ``labels`` (B,).  With guidance the model batch is doubled internally
+    (cond rows then uncond rows) and ``state`` must be sized 2B; the split
+    matches ``CachedDiT.init_state(2 * B)``.  ``t_prev < 0`` marks the final
+    step (x0 prediction).  Returns (x_next, new_state)."""
+    use_cfg = guidance_scale != 1.0
+    b = x.shape[0]
+    if use_cfg:
+        null_label = runner.model.cfg.dit.num_classes
+        x_in = jnp.concatenate([x, x], axis=0)
+        t_in = jnp.concatenate([t, t], axis=0)
+        lab = jnp.concatenate([labels,
+                               jnp.full((b,), null_label, jnp.int32)])
+    else:
+        x_in, t_in, lab = x, t, labels
+    eps, state = runner.step(params, state, x_in, t_in, lab)
+    if use_cfg:
+        eps_c, eps_u = jnp.split(eps, 2, axis=0)
+        eps = eps_u + guidance_scale * (eps_c - eps_u)
+    x = sch.ddim_step(sched, x, eps, t, t_prev)
+    return x, state
 
 
 def sample(runner: CachedDiT, params, key: jax.Array, *, batch: int,
@@ -34,7 +68,6 @@ def sample(runner: CachedDiT, params, key: jax.Array, *, batch: int,
     ``x_init`` overrides the initial noise (e.g. to match unbatched runs)."""
     cfg = runner.model.cfg
     img, ch = cfg.dit.image_size, cfg.dit.in_channels
-    null_label = cfg.dit.num_classes
     if labels is None:
         labels = jnp.zeros((batch,), jnp.int32)
     use_cfg = guidance_scale != 1.0
@@ -48,12 +81,11 @@ def sample(runner: CachedDiT, params, key: jax.Array, *, batch: int,
     eff_batch = 2 * batch if use_cfg else batch
     state = runner.init_state(eff_batch)
 
-    lab = jnp.concatenate([labels, jnp.full((batch,), null_label,
-                                            jnp.int32)]) if use_cfg else labels
     off = (jnp.zeros((batch,), jnp.int32) if t_offsets is None
            else t_offsets.astype(jnp.int32))
 
-    step_fn = runner.step
+    step_fn = functools.partial(denoise_step, runner,
+                                guidance_scale=guidance_scale)
     if jit_step:
         step_fn = jax.jit(step_fn)
 
@@ -62,14 +94,5 @@ def sample(runner: CachedDiT, params, key: jax.Array, *, batch: int,
         t_prev = jnp.where(ts_prev[i] < 0, -1,
                            jnp.clip(ts_prev[i] + off, 0,
                                     num_train_steps - 1))
-        if use_cfg:
-            x_in = jnp.concatenate([x, x], axis=0)
-            t_in = jnp.concatenate([t, t], axis=0)
-        else:
-            x_in, t_in = x, t
-        eps, state = step_fn(params, state, x_in, t_in, lab)
-        if use_cfg:
-            eps_c, eps_u = jnp.split(eps, 2, axis=0)
-            eps = eps_u + guidance_scale * (eps_c - eps_u)
-        x = sch.ddim_step(sched, x, eps, t, t_prev)
+        x, state = step_fn(params, sched, state, x, t, t_prev, labels)
     return x, state

@@ -19,6 +19,13 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def default_use_fused() -> bool:
+    """Backend auto-selection for the fused gate kernel: compiled Mosaic on
+    TPU; elsewhere the pure-JAX reference path is both faster than the Pallas
+    interpreter and the kernel's ground truth."""
+    return jax.default_backend() == "tpu"
+
+
 def saliency_delta(x, x_prev, *, bn: int = 128, bd: int = 512,
                    interpret=None):
     if interpret is None:

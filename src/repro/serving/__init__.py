@@ -1,1 +1,4 @@
+from repro.serving.diffusion_engine import DiffusionServingEngine  # noqa: F401
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.scheduler import (DiffusionRequest,  # noqa: F401
+                                     RequestQueue, poisson_trace)

@@ -1,0 +1,228 @@
+"""Continuous-batching serving engine for DiT sampling with per-slot
+FastCache state — the diffusion twin of ``serving/engine.py``'s slot pattern.
+
+The engine owns a fixed batch of ``max_slots`` generation slots.  Each slot
+holds one request: its class label, its own DDIM step index, its CFG pair
+(cond row ``s`` + uncond row ``S + s`` of the doubled model batch) and its
+per-slot cache state inside the shared ``CachedDiT`` state (gate variance
+trackers, cache payloads, policy counters — all (batch,)-indexed).  One
+jitted ``serve_step`` advances every active slot one denoising step over a
+per-sample timestep vector (slots sit at *different* schedule positions);
+finished slots emit latents and free immediately; queued requests are
+admitted into free slots mid-flight.
+
+Safety of mid-flight admission rests on two properties of ``CachedDiT``:
+every cache decision is per-sample (one slot's state never influences a
+batchmate's outputs), and a mixed warm/cold batch warms the cold sample up
+with a full forward while warm samples keep their gated path — so a request
+admitted at engine step k reproduces its solo run from step 0, and resident
+requests are untouched by the admission.
+
+Headline cache counters accumulate only ACTIVE slots' decisions (idle slots
+re-feed frozen latents, trivially skip, and would inflate the ratio) —
+matching the ``serving/engine.py`` convention.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.runner import CachedDiT
+from repro.diffusion import sampler
+from repro.diffusion import schedule as sch
+from repro.serving.scheduler import DiffusionRequest, RequestQueue
+
+F32 = jnp.float32
+
+
+class DiffusionServingEngine:
+    def __init__(self, runner: CachedDiT, params, *, max_slots: int,
+                 num_steps: int = 50, guidance_scale: float = 4.0,
+                 num_train_steps: int = 1000):
+        # the bitwise admission-invariance contract needs per-sample gating:
+        # global mode reduces the chi^2 statistic over the whole batch, so
+        # an admission would silently change residents' gate decisions
+        assert runner.gate_mode == "per_sample", (
+            "DiffusionServingEngine requires FastCacheConfig("
+            f"gate_mode='per_sample'); got {runner.gate_mode!r}")
+        self.runner = runner
+        self.params = params
+        self.S = max_slots
+        self.num_steps = num_steps
+        self.guidance_scale = guidance_scale
+        self.use_cfg = guidance_scale != 1.0
+        cfg = runner.model.cfg
+        self.img = cfg.dit.image_size
+        self.ch = cfg.dit.in_channels
+
+        self.sched = sch.linear_schedule(num_train_steps)
+        ts = sch.ddim_timesteps(num_train_steps, num_steps)
+        self.ts = ts
+        self.ts_prev = jnp.concatenate([ts[1:], jnp.array([-1], jnp.int32)])
+
+        eff = 2 * max_slots if self.use_cfg else max_slots
+        self.state = runner.init_state(eff)
+        self.x = jnp.zeros((max_slots, self.img, self.img, self.ch), F32)
+        self.slots: List[Optional[DiffusionRequest]] = [None] * max_slots
+        self.slot_step = np.full((max_slots,), -1, np.int32)
+        self.slot_label = np.zeros((max_slots,), np.int32)
+        self.clock = 0                      # engine steps taken
+        self.model_steps = 0                # steps that actually ran the DiT
+        # active-slot-only counters (PR 1 convention), accumulated on-device
+        # inside serve_step so the host never syncs per step
+        self.acc = self._zero_acc()
+
+        self._step = jax.jit(self._serve_step_impl)
+        self._reset = jax.jit(self.runner.reset_slot)
+
+    @staticmethod
+    def _zero_acc() -> Dict[str, jax.Array]:
+        return {k: jnp.zeros((), F32)
+                for k in ("blocks_skipped", "blocks_computed",
+                          "steps_reused")}
+
+    # -- jitted body ----------------------------------------------------
+
+    def _serve_step_impl(self, params, state, x, step_idx, labels, active,
+                         acc):
+        """Advance all slots one denoising step.  ``step_idx`` (S,) is each
+        slot's DDIM schedule position; idle slots (active=False) run through
+        the model as padding but their latents are frozen and their cache
+        decisions are excluded from the ``acc`` headline counters."""
+        idx = jnp.clip(step_idx, 0, self.num_steps - 1)
+        t = self.ts[idx]
+        t_prev = self.ts_prev[idx]
+        before = state["stats"]
+        x_new, state = sampler.denoise_step(
+            self.runner, params, self.sched, state, x, t, t_prev, labels,
+            guidance_scale=self.guidance_scale)
+        x_new = jnp.where(active[:, None, None, None], x_new, x)
+        act_rows = (jnp.concatenate([active, active]) if self.use_cfg
+                    else active)
+        acc = {k: acc[k] + jnp.sum((state["stats"][k] - before[k])
+                                   * act_rows) for k in acc}
+        return x_new, state, acc
+
+    # -- host orchestration ---------------------------------------------
+
+    def _slot_rows(self, s: int) -> jnp.ndarray:
+        """State rows owned by slot s (the CFG cond/uncond pair)."""
+        rows = [s, self.S + s] if self.use_cfg else [s]
+        return jnp.array(rows, jnp.int32)
+
+    def request_noise(self, req: DiffusionRequest) -> jax.Array:
+        """The request's deterministic initial latents, (img, img, ch) —
+        shared with solo replays (``sample(..., x_init=noise[None])``)."""
+        return jax.random.normal(jax.random.PRNGKey(req.seed),
+                                 (self.img, self.img, self.ch), F32)
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.S) if self.slots[s] is None]
+
+    def reset_clock(self) -> None:
+        """Rewind the step clock and headline counters (e.g. after a warm-up
+        trace, so a timed trace's absolute arrival steps line up).  Requires
+        an idle engine; per-slot raw accumulators keep their history."""
+        assert all(r is None for r in self.slots), "engine not idle"
+        self.clock = 0
+        self.model_steps = 0
+        self.acc = self._zero_acc()
+
+    def add_request(self, req: DiffusionRequest) -> bool:
+        """Admit one request into a free slot (mid-flight is fine): seed its
+        latents and fully reset the slot's gate/cache state."""
+        free = self.free_slots()
+        if not free:
+            return False
+        s = free[0]
+        self.state = self._reset(self.state, self._slot_rows(s))
+        self.x = self.x.at[s].set(self.request_noise(req))
+        self.slots[s] = req
+        self.slot_step[s] = 0
+        self.slot_label[s] = req.label
+        req.admit_step = self.clock
+        return True
+
+    def step(self) -> List[DiffusionRequest]:
+        """One engine step: advance all active slots one denoising step.
+        Returns the requests that finished on this step (slots freed)."""
+        active = np.array([r is not None for r in self.slots])
+        self.clock += 1
+        if not active.any():            # idle tick: time passes, no compute
+            return []
+        self.x, self.state, self.acc = self._step(
+            self.params, self.state, self.x,
+            jnp.asarray(np.where(active, self.slot_step, 0).astype(np.int32)),
+            jnp.asarray(self.slot_label), jnp.asarray(active), self.acc)
+        self.model_steps += 1
+
+        finished: List[DiffusionRequest] = []
+        done_slots = []
+        for s in np.flatnonzero(active):
+            self.slot_step[s] += 1
+            if self.slot_step[s] >= self.num_steps:
+                done_slots.append(int(s))
+        if done_slots:
+            x_host = np.asarray(self.x)
+            for s in done_slots:
+                req = self.slots[s]
+                req.latents = x_host[s].copy()
+                req.finish_step = self.clock
+                req.done = True
+                finished.append(req)
+                # free immediately: reset on free as well as on admission,
+                # so a freed slot never carries stale gate/cache state
+                self.slots[s] = None
+                self.slot_step[s] = -1
+                # (the reset leaves the padding row cold, so the next step
+                # pays one mixed warm-up; a stale-cache-free slot table is
+                # worth that once-per-completion cost)
+                self.state = self._reset(self.state, self._slot_rows(s))
+        return finished
+
+    def run(self, requests: Union[List[DiffusionRequest], RequestQueue],
+            *, lockstep: bool = False, max_steps: int = 100_000
+            ) -> List[DiffusionRequest]:
+        """Drive a whole trace.  ``lockstep=False`` (continuous batching)
+        admits arrived requests into free slots every step; ``lockstep=True``
+        is the fixed-batch baseline — a new wave is admitted only once every
+        slot is free (the classic ``sample()``-per-batch serving pattern)."""
+        queue = (requests if isinstance(requests, RequestQueue)
+                 else RequestQueue(list(requests)))
+        finished: List[DiffusionRequest] = []
+        while (queue or any(r is not None for r in self.slots)):
+            if self.clock >= max_steps:
+                break
+            if not lockstep or all(r is None for r in self.slots):
+                while (len(self.free_slots())
+                       and queue.peek_arrived(self.clock)):
+                    self.add_request(queue.pop_arrived(self.clock))
+            finished.extend(self.step())
+        return finished
+
+    # -- stats ----------------------------------------------------------
+
+    def cache_stats(self) -> Dict:
+        """Engine-lifetime cache counters under the active-slots-only
+        convention; raw per-slot (batch,) accumulators — which include idle
+        padding steps — under per_slot_*."""
+        skipped = float(self.acc["blocks_skipped"])
+        computed = float(self.acc["blocks_computed"])
+        tot = computed + skipped
+        s = self.state["stats"]
+        return {
+            "policy": self.runner.policy,
+            "engine_steps": self.clock,
+            "model_steps": self.model_steps,
+            "blocks_skipped": skipped,
+            "blocks_computed": computed,
+            "block_cache_ratio": skipped / tot if tot else 0.0,
+            "steps_reused": float(self.acc["steps_reused"]),
+            "per_slot_blocks_skipped": [
+                float(v) for v in np.asarray(s["blocks_skipped"])],
+            "per_slot_blocks_computed": [
+                float(v) for v in np.asarray(s["blocks_computed"])],
+        }

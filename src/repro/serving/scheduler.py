@@ -1,0 +1,83 @@
+"""Request scheduling for the diffusion serving engine: a FIFO admission
+queue gated on arrival time, plus Poisson arrival-trace generation for
+benchmarks.
+
+Time is measured in *engine steps* (one ``serve_step`` = one clock tick):
+arrival traces, admission decisions and request latencies all live on that
+discrete clock, which makes lockstep-vs-continuous comparisons exact and
+hardware-independent (wall-clock throughput is reported separately by the
+benchmark from the measured per-step time).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(eq=False)
+class DiffusionRequest:
+    """One image-generation request.  ``seed`` determines the initial noise
+    (so an engine run can be replayed solo for parity checks); ``label`` is
+    the class condition."""
+    rid: int
+    label: int
+    seed: int = 0
+    arrival_step: int = 0
+    # filled by the engine
+    latents: Optional[np.ndarray] = None
+    admit_step: int = -1
+    finish_step: int = -1
+    done: bool = False
+
+    @property
+    def latency_steps(self) -> int:
+        """Queueing + service latency on the engine-step clock."""
+        return (self.finish_step - self.arrival_step
+                if self.finish_step >= 0 else -1)
+
+
+class RequestQueue:
+    """FIFO queue gated on arrival time: ``pop_arrived(now)`` hands out the
+    oldest request whose arrival_step has passed, preserving submission
+    order (no request overtakes an earlier arrival)."""
+
+    def __init__(self, requests: Optional[List[DiffusionRequest]] = None):
+        self._q: List[DiffusionRequest] = sorted(
+            requests or [], key=lambda r: (r.arrival_step, r.rid))
+
+    def push(self, req: DiffusionRequest) -> None:
+        self._q.append(req)
+        self._q.sort(key=lambda r: (r.arrival_step, r.rid))
+
+    def peek_arrived(self, now: int) -> Optional[DiffusionRequest]:
+        if self._q and self._q[0].arrival_step <= now:
+            return self._q[0]
+        return None
+
+    def pop_arrived(self, now: int) -> Optional[DiffusionRequest]:
+        if self._q and self._q[0].arrival_step <= now:
+            return self._q.pop(0)
+        return None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
+def poisson_trace(num_requests: int, rate: float, *, seed: int = 0,
+                  num_classes: int = 10) -> List[DiffusionRequest]:
+    """Poisson arrival process: exponential inter-arrival times with mean
+    ``1 / rate`` (requests per engine step), floored onto the step clock.
+    Labels and noise seeds are drawn deterministically from ``seed``."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(scale=1.0 / max(rate, 1e-9), size=num_requests)
+    arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)
+    return [DiffusionRequest(rid=i,
+                             label=int(rng.integers(0, num_classes)),
+                             seed=int(1000 + i),
+                             arrival_step=int(arrivals[i]))
+            for i in range(num_requests)]

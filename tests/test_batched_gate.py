@@ -169,6 +169,7 @@ def test_decode_sigma_not_seeded_from_bootstrap(key):
         float(st["gate"].sigma2.max()), raw_scale)
 
 
+@pytest.mark.serving
 def test_serving_admission_preserves_batchmate_cache(key):
     """Admitting a new request into a freed slot must reset only that slot's
     gate state; the resident request keeps decoding with its cache."""

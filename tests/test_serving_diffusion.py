@@ -1,0 +1,254 @@
+"""Continuous-batching diffusion serving: mid-flight admission must be
+invisible — an admitted request reproduces its solo run bitwise, resident
+requests keep their cache decisions, and per-slot gate/cache state is fully
+reset on admission and on free.  Plus scheduler/queue semantics and the
+engine's active-slot-only stats convention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import FastCacheConfig
+from repro.core import CachedDiT, POLICIES, summarize_stats
+from repro.diffusion import sample
+from repro.models import build_model
+from repro.serving import (DiffusionRequest, DiffusionServingEngine,
+                           RequestQueue, poisson_trace)
+from tests.conftest import f32_cfg
+
+pytestmark = pytest.mark.serving
+
+STEPS = 5
+
+
+@pytest.fixture(scope="module")
+def dit():
+    cfg = f32_cfg(get_reduced("dit-b2"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, policy, *, slots=2, guidance=4.0):
+    runner = CachedDiT(model, FastCacheConfig(), policy=policy)
+    return DiffusionServingEngine(runner, params, max_slots=slots,
+                                  num_steps=STEPS, guidance_scale=guidance)
+
+
+def _staggered_trace():
+    """Request 1 joins while request 0 is mid-flight; request 2 queues until
+    a slot frees (admitted mid-flight next to a warm resident)."""
+    return [DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0),
+            DiffusionRequest(rid=1, label=2, seed=11, arrival_step=2),
+            DiffusionRequest(rid=2, label=3, seed=12, arrival_step=3)]
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: mid-flight admission parity, every cache policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_midflight_admission_parity(dit, policy):
+    """A request admitted at engine step k produces bitwise (float32) the
+    same latents as running it alone from step 0, for every policy."""
+    cfg, model, params = dit
+    eng = _engine(model, params, policy)
+    done = eng.run(_staggered_trace())
+    assert len(done) == 3
+    for r in done:
+        solo_runner = CachedDiT(model, FastCacheConfig(), policy=policy)
+        x, _ = sample(solo_runner, params, jax.random.PRNGKey(0), batch=1,
+                      labels=jnp.array([r.label]), num_steps=STEPS,
+                      guidance_scale=4.0,
+                      x_init=np.asarray(eng.request_noise(r))[None])
+        np.testing.assert_array_equal(
+            np.asarray(x[0]), r.latents,
+            err_msg=f"policy={policy} rid={r.rid} "
+                    f"admit_step={r.admit_step}")
+        assert r.latency_steps >= STEPS
+
+
+def test_no_cfg_engine_matches_solo(dit):
+    """guidance=1.0 path: single-stream slots (no CFG pair)."""
+    cfg, model, params = dit
+    eng = _engine(model, params, "fastcache", guidance=1.0)
+    done = eng.run(_staggered_trace())
+    for r in done:
+        solo = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+        x, _ = sample(solo, params, jax.random.PRNGKey(0), batch=1,
+                      labels=jnp.array([r.label]), num_steps=STEPS,
+                      guidance_scale=1.0,
+                      x_init=np.asarray(eng.request_noise(r))[None])
+        np.testing.assert_array_equal(np.asarray(x[0]), r.latents)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: mixed-have_cache per-sample warm-up at the runner level
+# ---------------------------------------------------------------------------
+
+def test_batched_with_straggler_matches_solo(dit):
+    key = jax.random.PRNGKey(3)
+    """Runner-level parity: sample 0 runs 6 steps; sample 1 is reset
+    (straggler admission) after step 3 and restarts.  Both must match their
+    solo runs bitwise — the mixed warm-up step must not force the resident
+    sample off its gated path, nor corrupt its trackers."""
+    cfg, model, params = dit
+    img, ch = cfg.dit.image_size, cfg.dit.in_channels
+    xa = jax.random.normal(key, (6, img, img, ch))          # sample 0 inputs
+    xb = jax.random.normal(jax.random.fold_in(key, 1), (6, img, img, ch))
+    runner = CachedDiT(model, FastCacheConfig())
+    step = jax.jit(runner.step)
+    t = jnp.full((2,), 25)
+    labels = jnp.array([1, 2])
+
+    state = runner.init_state(2)
+    outs = []
+    for i in range(6):
+        if i == 3:
+            state = runner.reset_slot(state, 1)
+        # sample 1 replays xb from its own step 0 after the reset
+        x = jnp.stack([xa[i], xb[i - 3 if i >= 3 else i]])
+        eps, state = step(params, state, x, t, labels)
+        outs.append(np.asarray(eps))
+
+    def solo(xs, label, n):
+        st = runner.init_state(1)
+        res = []
+        for i in range(n):
+            eps, st = step(params, st, xs[i][None], jnp.full((1,), 25),
+                           jnp.full((1,), label))
+            res.append(np.asarray(eps[0]))
+        return res, st
+
+    sa, st_a = solo(xa, 1, 6)
+    sb, st_b = solo(xb, 2, 3)
+    for i in range(6):
+        np.testing.assert_array_equal(outs[i][0], sa[i], err_msg=f"A@{i}")
+    for i in range(3):
+        np.testing.assert_array_equal(outs[3 + i][1], sb[i],
+                                      err_msg=f"B@{i}")
+    # stats parity for the resident sample (bitwise counters)
+    s = summarize_stats(state)["per_sample"]
+    assert s["blocks_skipped"][0] == \
+        summarize_stats(st_a)["per_sample"]["blocks_skipped"][0]
+    assert s["blocks_skipped"][1] >= \
+        summarize_stats(st_b)["per_sample"]["blocks_skipped"][0]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: per-slot state reset on admission and on free
+# ---------------------------------------------------------------------------
+
+def _assert_slot_reset(eng, s):
+    rows = np.asarray(eng._slot_rows(s))
+    st = eng.state
+    assert not np.asarray(st["have_cache"])[rows].any()
+    assert not np.asarray(st["gate"].initialized)[:, rows].any()
+    np.testing.assert_array_equal(np.asarray(st["gate"].sigma2)[:, rows], 1.0)
+    assert not np.asarray(st["prev_hidden"])[:, rows].any()
+    assert not np.asarray(st["prev_tokens_in"])[rows].any()
+    assert not np.asarray(st["prev_eps"])[rows].any()
+    np.testing.assert_array_equal(np.asarray(st["step_count"])[rows], 0)
+    np.testing.assert_array_equal(np.asarray(st["tea_acc"])[rows], 0.0)
+    np.testing.assert_array_equal(np.asarray(st["ada_skip_left"])[rows], 0)
+
+
+def test_slot_state_reset_on_admission_and_free(dit):
+    cfg, model, params = dit
+    eng = _engine(model, params, "fastcache")
+    # dirty every slot: run one request to completion in slot 0 while
+    # slot 1 stays idle (its padding rows still evolve state)
+    [r0] = eng.run([DiffusionRequest(rid=0, label=1, seed=5)])
+    assert r0.done
+    # freed on finish: slot 0 rows are fully reset
+    _assert_slot_reset(eng, 0)
+    # admission resets the target slot's rows before the first step
+    assert eng.add_request(DiffusionRequest(rid=1, label=2, seed=6))
+    _assert_slot_reset(eng, 0)
+    eng.step()
+    assert np.asarray(eng.state["have_cache"])[np.asarray(
+        eng._slot_rows(0))].all()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: backend auto-selection of the fused gate
+# ---------------------------------------------------------------------------
+
+def test_auto_fused_gate_backend_default(dit):
+    cfg, model, params = dit
+    assert FastCacheConfig().use_fused_gate is None
+    auto = CachedDiT(model, FastCacheConfig())
+    assert auto.use_fused == (jax.default_backend() == "tpu")
+    on = CachedDiT(model, FastCacheConfig(use_fused_gate=True))
+    off = CachedDiT(model, FastCacheConfig(use_fused_gate=False))
+    assert on.use_fused is True and off.use_fused is False
+
+
+# ---------------------------------------------------------------------------
+# Scheduler / queue semantics
+# ---------------------------------------------------------------------------
+
+def test_poisson_trace_is_sorted_and_deterministic():
+    a = poisson_trace(20, 0.5, seed=7)
+    b = poisson_trace(20, 0.5, seed=7)
+    arr = [r.arrival_step for r in a]
+    assert arr == sorted(arr)
+    assert arr == [r.arrival_step for r in b]
+    assert [r.seed for r in a] == [r.seed for r in b]
+    # higher rate => denser arrivals
+    dense = poisson_trace(20, 5.0, seed=7)
+    assert dense[-1].arrival_step <= a[-1].arrival_step
+
+
+def test_request_queue_gates_on_arrival():
+    q = RequestQueue([DiffusionRequest(rid=1, label=0, arrival_step=4),
+                      DiffusionRequest(rid=0, label=0, arrival_step=1)])
+    assert q.pop_arrived(0) is None
+    assert q.pop_arrived(2).rid == 0
+    assert q.peek_arrived(2) is None          # rid 1 not arrived yet
+    assert q.pop_arrived(4).rid == 1
+    assert not q
+
+
+# ---------------------------------------------------------------------------
+# Engine stats + lockstep-vs-continuous latency ordering
+# ---------------------------------------------------------------------------
+
+def test_engine_stats_active_only(dit):
+    cfg, model, params = dit
+    eng = _engine(model, params, "fora")
+    done = eng.run(_staggered_trace())
+    stats = eng.cache_stats()
+    assert stats["policy"] == "fora"
+    assert stats["blocks_computed"] > 0
+    assert stats["steps_reused"] > 0          # fora reuses 2 of every 3
+    assert 0.0 < stats["block_cache_ratio"] < 1.0
+    assert len(stats["per_slot_blocks_skipped"]) == 4   # 2 slots x CFG pair
+    # idle padding decisions are excluded from the headline counters
+    per_slot_total = sum(stats["per_slot_blocks_skipped"]) + \
+        sum(stats["per_slot_blocks_computed"])
+    assert stats["blocks_computed"] + stats["blocks_skipped"] \
+        <= per_slot_total
+
+
+def test_continuous_beats_lockstep_p95(dit):
+    """r0 occupies a slot; r1/r2 arrive mid-flight.  Continuous admission
+    uses the free slot immediately; lockstep waits for the wave to drain."""
+    cfg, model, params = dit
+
+    def trace():
+        return [DiffusionRequest(rid=0, label=1, seed=20, arrival_step=0),
+                DiffusionRequest(rid=1, label=2, seed=21, arrival_step=2),
+                DiffusionRequest(rid=2, label=3, seed=22, arrival_step=2),
+                DiffusionRequest(rid=3, label=4, seed=23, arrival_step=2)]
+
+    lats = {}
+    for lockstep in (False, True):
+        eng = _engine(model, params, "fastcache")
+        done = eng.run(trace(), lockstep=lockstep)
+        lats[lockstep] = sorted(r.latency_steps for r in done)
+    # every request is no later under continuous admission, and the tail
+    # (the queued requests) is strictly earlier
+    assert all(c <= l for c, l in zip(lats[False], lats[True]))
+    assert lats[False][-1] < lats[True][-1]
