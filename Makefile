@@ -1,5 +1,5 @@
 # One-command verify/bench entry points (the tier-1 command of ROADMAP.md).
-.PHONY: test test-fast test-serving bench-smoke bench-serve bench
+.PHONY: test test-fast test-serving test-sharded bench-smoke bench-serve bench
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -12,6 +12,13 @@ test-fast:
 test-serving:
 	PYTHONPATH=src python -m pytest -x -q -m serving
 
+# sharded-vs-single-device bitwise parity on an 8-virtual-device CPU mesh
+# (XLA only honors the flag at first jax init, so it must be in the env
+# before pytest starts — do not fold this into the main suite)
+test-sharded:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" PYTHONPATH=src \
+		python -m pytest -x -q -m distributed
+
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.run --only batched_gate,decode_gate
 
@@ -21,7 +28,7 @@ bench-serve:
 		--requests 4 --new-tokens 8 --max-batch 2 --fastcache
 	PYTHONPATH=src python -m repro.launch.serve_diffusion --arch dit-b2 \
 		--reduced --requests 4 --slots 2 --steps 6 --rate 0.5 --json
-	PYTHONPATH=src python -m benchmarks.run --only serving
+	PYTHONPATH=src python -m benchmarks.run --only serving,serving_sharded
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

@@ -27,6 +27,10 @@ SUITES = {
     "serving": ("benchmarks.serving_diffusion",
                 "Continuous vs lockstep diffusion serving under Poisson "
                 "arrivals"),
+    "serving_sharded": ("benchmarks.serving_sharded",
+                        "Sharded vs single-device diffusion serving across "
+                        "(data, model) mesh topologies (8-virtual-device "
+                        "CPU subprocess)"),
     "kernels": ("benchmarks.kernels_bench", "Kernel microbenchmarks"),
     "roofline": ("benchmarks.roofline", "Roofline from dry-run artifacts"),
 }

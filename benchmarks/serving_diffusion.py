@@ -14,6 +14,15 @@ Emits a JSON report (stdout or --json path) with per-mode throughput,
 p50/p95 request latency (engine-step clock + measured wall time per step)
 and engine-level cache-ratio stats; also runnable through benchmarks/run.py
 (suite name ``serving``) as compact CSV rows.
+
+``--mesh 1x1,4x1,4x2`` adds a topology sweep: the SAME trace is served
+through the single-device engine and through ``ShardedDiffusionEngine`` on
+each listed ``(data, model)`` mesh (async host admission), reporting one
+JSON row per topology — p50/p95 latency, steps/sec, cache ratio, and
+max-abs-diff of every request's latents against the single-device run
+(bitwise parity => 0.0).  Multi-device topologies on CPU need
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``; the ``bench-serve``
+driver row (suite name ``serving_sharded``) sets that in a subprocess.
 """
 from __future__ import annotations
 
@@ -21,7 +30,7 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -29,6 +38,7 @@ from benchmarks.common import build_dit
 from repro.configs.base import FastCacheConfig
 from repro.core import CachedDiT
 from repro.serving import (DiffusionRequest, DiffusionServingEngine,
+                           ShardedDiffusionEngine, make_serving_mesh,
                            poisson_trace)
 
 
@@ -39,11 +49,23 @@ def _fresh_trace(trace: List[DiffusionRequest]) -> List[DiffusionRequest]:
 
 
 def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
-               guidance: float, lockstep: bool) -> Dict:
+               guidance: float, lockstep: bool, topology=None,
+               async_admission: bool = True
+               ) -> Tuple[Dict, List[DiffusionRequest]]:
+    """One engine run over a fresh copy of ``trace``; returns (result row,
+    finished requests).  ``topology`` (data, model) != (1, 1) serves
+    through the sharded engine on that mesh."""
     runner = CachedDiT(model, FastCacheConfig(), policy=policy)
-    engine = DiffusionServingEngine(runner, params, max_slots=slots,
-                                    num_steps=steps,
-                                    guidance_scale=guidance)
+    if topology and tuple(topology) != (1, 1):
+        data, tp = topology
+        engine = ShardedDiffusionEngine(
+            runner, params, max_slots=slots, num_steps=steps,
+            guidance_scale=guidance, mesh=make_serving_mesh(data, tp),
+            async_admission=async_admission)
+    else:
+        engine = DiffusionServingEngine(runner, params, max_slots=slots,
+                                        num_steps=steps,
+                                        guidance_scale=guidance)
     reqs = _fresh_trace(trace)
     # warm the jitted serve_step so wall-time excludes compilation, then
     # rewind the clock so the trace's absolute arrival steps line up
@@ -60,19 +82,25 @@ def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
     # per-MODEL-step time: idle clock ticks cost no wall time, so dividing
     # by engine.clock would flatter whichever mode idles more
     model_step_ms = wall / max(1, engine.model_steps) * 1e3
-    return {
+    res = {
         "mode": "lockstep" if lockstep else "continuous",
         "policy": policy,
+        "topology": {"data": 1, "model": 1, "devices": 1},
         "requests": len(done),
         "engine_steps": engine.clock,
         "model_steps": engine.model_steps,
         "wall_s": wall,
         "requests_per_s": len(done) / wall if wall else 0.0,
+        "steps_per_s": engine.model_steps / wall if wall else 0.0,
         "model_step_ms": model_step_ms,
         "latency_steps_p50": float(np.percentile(lats, 50)),
         "latency_steps_p95": float(np.percentile(lats, 95)),
         "cache": engine.cache_stats(),
     }
+    if isinstance(engine, ShardedDiffusionEngine):
+        res["topology"] = engine.topology()
+        res["async_admission"] = engine.async_admission
+    return res, done
 
 
 def benchmark(*, dit: str = "dit-b2", policies=("nocache", "fastcache"),
@@ -90,9 +118,9 @@ def benchmark(*, dit: str = "dit-b2", policies=("nocache", "fastcache"),
     }
     for policy in policies:
         for lockstep in (True, False):
-            res = serve_once(model, params, trace, policy=policy,
-                             slots=slots, steps=steps, guidance=guidance,
-                             lockstep=lockstep)
+            res, _ = serve_once(model, params, trace, policy=policy,
+                                slots=slots, steps=steps, guidance=guidance,
+                                lockstep=lockstep)
             report["runs"].append(res)
     # headline: continuous must beat lockstep on p95 under queueing pressure
     for policy in policies:
@@ -101,6 +129,91 @@ def benchmark(*, dit: str = "dit-b2", policies=("nocache", "fastcache"),
         report[f"p95_speedup_steps_{policy}"] = (
             runs["lockstep"]["latency_steps_p95"]
             / max(runs["continuous"]["latency_steps_p95"], 1e-9))
+    return report
+
+
+def parse_topologies(spec: str) -> List[tuple]:
+    """'1x1,4x1,4x2' -> [(1, 1), (4, 1), (4, 2)] (data x model)."""
+    out = []
+    for part in spec.split(","):
+        if not part.strip():
+            continue
+        d, m = part.lower().split("x")
+        out.append((int(d), int(m)))
+    return out
+
+
+def benchmark_topologies(*, topologies, dit: str = "dit-b2",
+                         policies=("fastcache",), requests: int = 8,
+                         slots: int = 4, steps: int = 8,
+                         guidance: float = 4.0, rate: float = 0.25,
+                         seed: int = 0) -> Dict:
+    """Serve the SAME Poisson trace through every listed (data, model)
+    topology — (1, 1) is the single-device ``DiffusionServingEngine``,
+    everything else ``ShardedDiffusionEngine`` with async admission — for
+    every listed policy, reporting one row per (policy, topology).
+    Parity fields (``max_abs_diff_vs_single``,
+    ``schedule_identical_vs_single``) are emitted only when that policy's
+    (1, 1) run is in the sweep to compare against.  Topologies that need
+    more devices than available, or that the engine's numerics self-check
+    refuses, are reported as skipped rather than failing the sweep."""
+    import jax
+    cfg, model, params = build_dit(dit)
+    trace = poisson_trace(requests, rate, seed=seed,
+                          num_classes=cfg.dit.num_classes)
+    report: Dict = {
+        "config": {"dit": dit, "policies": list(policies),
+                   "requests": requests, "slots": slots, "steps": steps,
+                   "guidance": guidance, "poisson_rate": rate,
+                   "seed": seed, "device_count": jax.device_count()},
+        "topologies": [],
+    }
+    for policy in policies:
+        # parity baseline: strictly the single-device (1, 1) run
+        baseline: Dict[str, Dict] = {}
+        for topo in topologies:
+            need = topo[0] * topo[1]
+            topo_info = {"data": topo[0], "model": topo[1],
+                         "devices": need}
+            if need > jax.device_count():
+                report["topologies"].append(
+                    {"policy": policy, "topology": topo_info,
+                     "skipped": f"needs {need} devices, have "
+                                f"{jax.device_count()}"})
+                continue
+            try:
+                res, done = serve_once(model, params, trace, policy=policy,
+                                       slots=slots, steps=steps,
+                                       guidance=guidance, lockstep=False,
+                                       topology=topo)
+            except RuntimeError as e:
+                # e.g. the engine's startup numerics self-check refusing a
+                # mesh the backend's partitioner miscompiles
+                report["topologies"].append(
+                    {"policy": policy, "topology": topo_info,
+                     "skipped": str(e)})
+                continue
+            sched = {r.rid: (r.admit_step, r.finish_step) for r in done}
+            if tuple(topo) == (1, 1):
+                baseline = {"latents": {r.rid: r.latents for r in done},
+                            "sched": sched}
+                res["max_abs_diff_vs_single"] = 0.0
+                res["schedule_identical_vs_single"] = True
+            elif baseline:
+                # scheduling parity is exact (host bookkeeping is
+                # topology-independent); latents are compared by
+                # max-abs-diff because XLA:CPU gemms are batch-shape
+                # sensitive — a 2-row and an 8-row matmul differ in the
+                # last bits, which the recursive DDIM update then
+                # amplifies (bitwise-parity regime: see
+                # tests/test_sharded_serving.py)
+                res["max_abs_diff_vs_single"] = max(
+                    float(np.max(np.abs(np.asarray(r.latents)
+                                        - baseline["latents"][r.rid])))
+                    for r in done)
+                res["schedule_identical_vs_single"] = (
+                    sched == baseline["sched"])
+            report["topologies"].append(res)
     return report
 
 
@@ -132,15 +245,25 @@ def main() -> None:
     ap.add_argument("--guidance", type=float, default=4.0)
     ap.add_argument("--rate", type=float, default=0.25)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="",
+                    help="topology sweep instead of the mode comparison: "
+                         "comma list of DATAxMODEL meshes, e.g. 1x1,4x1,4x2")
     ap.add_argument("--json", default="",
                     help="write the JSON report here (default: stdout)")
     args = ap.parse_args()
-    report = benchmark(dit=args.dit,
-                       policies=tuple(p for p in args.policies.split(",")
-                                      if p),
-                       requests=args.requests, slots=args.slots,
-                       steps=args.steps, guidance=args.guidance,
-                       rate=args.rate, seed=args.seed)
+    if args.mesh:
+        report = benchmark_topologies(
+            topologies=parse_topologies(args.mesh), dit=args.dit,
+            policies=tuple(p for p in args.policies.split(",") if p),
+            requests=args.requests, slots=args.slots, steps=args.steps,
+            guidance=args.guidance, rate=args.rate, seed=args.seed)
+    else:
+        report = benchmark(dit=args.dit,
+                           policies=tuple(p for p in
+                                          args.policies.split(",") if p),
+                           requests=args.requests, slots=args.slots,
+                           steps=args.steps, guidance=args.guidance,
+                           rate=args.rate, seed=args.seed)
     text = json.dumps(report, indent=2)
     if args.json:
         with open(args.json, "w") as f:

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FastCacheConfig
 from repro.core import linear_approx, saliency, statcache, token_merge
+from repro.distributed.sharding import constrain
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kernel_ref
 from repro.models.dit import DiTModel
@@ -345,6 +346,10 @@ class CachedDiT:
                                        self.model.block_apply(bp, ops_[1],
                                                               c)),
                 (out, xm))
+            # keep the motion-stream carry on its slot shards (serving runs
+            # this scan under a (data, model) mesh; without the constraint
+            # GSPMD is free to gather the carry onto one device per layer)
+            xm_new = constrain(xm_new, "act_batch", "act_seq", "act_embed")
             # sliding-window variance tracker updates on recompute, per-sample
             new_sig, _ = statcache.update_sigma(
                 sig[lidx], ini[lidx], diff, nd, fc.background_momentum)
@@ -442,6 +447,7 @@ class CachedDiT:
                 masked,
                 lambda x: linear_approx.apply_linear(w_l, b_l, x),
                 lambda x: self.model.block_apply(bp, x, c), x)
+            x_new = constrain(x_new, "act_batch", "act_seq", "act_embed")
             comp = comp + jnp.where(masked, 0.0, 1.0)
             skip = skip + jnp.where(masked, 1.0, 0.0)
             return (x_new, comp, skip), x

@@ -8,7 +8,11 @@ dim of the same array.
 
 Rule tables are built per (step kind, shape) by ``make_rules`` — e.g.
 ``long_500k`` moves the ``data`` axis from batch (which is 1) to the KV-cache
-sequence dim.
+sequence dim.  ``kind="serve"`` is the diffusion-serving rule set: the slot
+batch (and every per-slot row of the FastCache state — cache payloads, sigma
+trackers, stat accumulators) shards over ``data`` while DiT weights stay
+tensor-parallel over ``model``; ``serve_state_shardings`` turns a
+``CachedDiT`` serving-state pytree into the matching NamedSharding tree.
 """
 from __future__ import annotations
 
@@ -48,6 +52,8 @@ def make_rules(kind: str = "train", *, long_context: bool = False,
         "state": None,
         "layers": None,
         "null": None,
+        # serving-slot batch rows (engine state); mapped under kind="serve"
+        "slot": None,
         # ---- activations
         "act_batch": ("pod", "data"),
         "act_seq": None,
@@ -67,6 +73,22 @@ def make_rules(kind: str = "train", *, long_context: bool = False,
         # sequence parallelism on the residual stream (perf knob)
         rules["act_seq"] = ("model",)
         rules["act_ffn"] = None
+    if kind == "serve":
+        # diffusion serving: the engine's slot batch — latents plus every
+        # per-slot row of the FastCache state (cache payloads, chi^2 sigma
+        # trackers, policy counters, stat accumulators) — shards over
+        # `data`; weights stay tensor-parallel over `model`.  Serving meshes
+        # are single-pod, so the batch axis is plain ("data",).
+        rules["slot"] = ("data",)
+        rules["act_batch"] = ("data",)
+        # inference replicates weights over `data` (no optimizer state, so
+        # FSDP buys nothing and costs an all-gather per step).  This is
+        # also a correctness matter: batch-over-data activations against
+        # data-sharded weight dims in one serving program led GSPMD to
+        # double-count the patch-embedding product on (data>1, model>1)
+        # meshes — weights touch `model` only.
+        rules["embed"] = None
+        rules["expert_embed"] = None
     if kind == "decode":
         # batch shards over data; spread the KV cache over `model` so the
         # per-device cache fits HBM (attention reductions over the sharded
@@ -163,6 +185,70 @@ def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
     spec = spec_for(x.shape, logical_axes, ctx)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(ctx.mesh, spec))
+
+
+# Logical axes of every leaf of the CachedDiT serving state, keyed by the
+# nearest dict key on the leaf's tree path.  The slot-batch dim of every
+# per-slot row (cache payloads, trackers, counters) carries "slot" so the
+# kind="serve" rules shard it over `data`; layer-stacked trackers keep the
+# layer dim replicated.  "gate" covers both GateState leaves (sigma2 and
+# initialized are each (L, B)).
+_SERVE_STATE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "prev_tokens_in": ("slot", "act_seq", "act_embed"),
+    "prev_hidden": ("layers", "slot", "act_seq", "act_embed"),
+    "prev_eps": ("slot", None, None, None),
+    "gate": ("layers", "slot"),
+    "step_count": ("slot",),
+    "have_cache": ("slot",),
+    "tea_acc": ("slot",),
+    "ada_skip_left": ("slot",),
+    # stat accumulators: per-slot counters shard with their rows; the
+    # scalar step counter is replicated
+    "blocks_computed": ("slot",),
+    "blocks_skipped": ("slot",),
+    "steps_reused": ("slot",),
+    "motion_frac_sum": ("slot",),
+    "steps": (),
+}
+
+# jax.tree.flatten_with_path only exists from jax 0.4.38 on; the pinned
+# 0.4.37 ships it under jax.tree_util (same shim as models/params.py).
+_flatten_with_path = getattr(jax.tree, "flatten_with_path", None) \
+    or jax.tree_util.tree_flatten_with_path
+
+
+def serve_state_specs(state, ctx: Optional[ShardingCtx] = None):
+    """Pytree of PartitionSpecs matching a ``CachedDiT`` serving-state tree
+    (``CachedDiT.init_state``), under the ``kind="serve"`` rules: slot rows
+    over ``data``, everything else replicated (with the usual divisibility
+    fallback)."""
+    ctx = ctx or current_ctx()
+    assert ctx is not None, "serve_state_specs requires a sharding ctx"
+    paths_leaves, treedef = _flatten_with_path(state)
+    specs = []
+    for path, leaf in paths_leaves:
+        name = None
+        for entry in reversed(path):
+            k = getattr(entry, "key", None)
+            if isinstance(k, str) and k in _SERVE_STATE_AXES:
+                name = k
+                break
+        if name is None:
+            raise KeyError(
+                f"serve_state_specs: no logical axes registered for state "
+                f"leaf at {jax.tree_util.keystr(path)} (shape "
+                f"{getattr(leaf, 'shape', None)}); extend _SERVE_STATE_AXES")
+        specs.append(spec_for(leaf.shape, _SERVE_STATE_AXES[name], ctx))
+    return jax.tree.unflatten(treedef, specs)
+
+
+def serve_state_shardings(state, ctx: Optional[ShardingCtx] = None):
+    """NamedSharding tree for a ``CachedDiT`` serving-state pytree."""
+    ctx = ctx or current_ctx()
+    assert ctx is not None, "serve_state_shardings requires a sharding ctx"
+    return jax.tree.map(lambda spec: NamedSharding(ctx.mesh, spec),
+                        serve_state_specs(state, ctx),
+                        is_leaf=lambda x: isinstance(x, P))
 
 
 def param_shardings(defs, ctx: Optional[ShardingCtx] = None):

@@ -19,3 +19,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh for CPU tests (axis names match production)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_serving_mesh(data=None, model: int = 1):
+    """(data, model) mesh for the sharded diffusion serving engine —
+    slots over `data`, DiT weights tensor-parallel over `model`.  The
+    implementation lives next to its consumer in
+    repro.serving.sharded_engine; the lazy import keeps `import
+    repro.launch.mesh` from pulling in the whole serving stack."""
+    from repro.serving.sharded_engine import make_serving_mesh as _make
+    return _make(data, model)

@@ -7,6 +7,16 @@ per-slot FastCache state (the image-generation twin of launch/serve.py).
 ``--lockstep`` switches to the fixed-wave baseline (admit a full batch only
 when every slot is free) for latency comparisons; ``--json`` emits the
 summary as JSON.
+
+``--mesh data,model`` serves through ``ShardedDiffusionEngine`` on a
+``(data, model)`` device mesh (slots over ``data``, DiT weights over
+``model``) with async host admission — disable the overlap with
+``--sync-admission``.  Multi-device CPU runs need
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before launch:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python -m repro.launch.serve_diffusion --arch dit-b2 \\
+        --reduced --requests 8 --slots 4 --steps 10 --mesh 4,2
 """
 from __future__ import annotations
 
@@ -21,11 +31,22 @@ from repro.configs import get_config, get_reduced
 from repro.configs.base import FastCacheConfig
 from repro.core import CachedDiT, POLICIES
 from repro.models import build_model
-from repro.serving import DiffusionServingEngine, poisson_trace
+from repro.launch.mesh import make_serving_mesh
+from repro.serving import (DiffusionServingEngine, ShardedDiffusionEngine,
+                           poisson_trace)
 
 
 def percentile(xs, p):
     return float(np.percentile(np.asarray(xs, np.float64), p)) if xs else -1.0
+
+
+def parse_mesh(spec: str):
+    """'data,model' (e.g. '4,2') -> (data, model) ints."""
+    try:
+        data, model = (int(v) for v in spec.split(","))
+    except ValueError:
+        raise SystemExit(f"--mesh expects 'data,model' ints, got {spec!r}")
+    return data, model
 
 
 def main() -> None:
@@ -42,6 +63,12 @@ def main() -> None:
                     help="Poisson arrival rate (requests per engine step)")
     ap.add_argument("--lockstep", action="store_true",
                     help="fixed-wave baseline instead of continuous admission")
+    ap.add_argument("--mesh", default="",
+                    help="serve sharded on a 'data,model' mesh (e.g. 4,2); "
+                         "empty = single-device engine")
+    ap.add_argument("--sync-admission", action="store_true",
+                    help="sharded engine only: disable the async admission/"
+                         "harvest overlap (sync per-completion fetches)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
@@ -54,9 +81,18 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     runner = CachedDiT(model, FastCacheConfig(), policy=args.policy)
-    engine = DiffusionServingEngine(runner, params, max_slots=args.slots,
-                                    num_steps=args.steps,
-                                    guidance_scale=args.guidance)
+    if args.mesh:
+        data, tp = parse_mesh(args.mesh)
+        engine = ShardedDiffusionEngine(
+            runner, params, max_slots=args.slots, num_steps=args.steps,
+            guidance_scale=args.guidance,
+            mesh=make_serving_mesh(data, tp),
+            async_admission=not args.sync_admission)
+    else:
+        engine = DiffusionServingEngine(runner, params,
+                                        max_slots=args.slots,
+                                        num_steps=args.steps,
+                                        guidance_scale=args.guidance)
     trace = poisson_trace(args.requests, args.rate, seed=args.seed,
                           num_classes=cfg.dit.num_classes)
     t0 = time.perf_counter()
@@ -66,6 +102,9 @@ def main() -> None:
     lats = [r.latency_steps for r in done]
     summary = {
         "mode": "lockstep" if args.lockstep else "continuous",
+        "topology": (engine.topology() if args.mesh
+                     else {"data": 1, "model": 1, "devices": 1}),
+        "async_admission": bool(args.mesh) and not args.sync_admission,
         "policy": args.policy,
         "requests": len(done),
         "engine_steps": engine.clock,

@@ -2,3 +2,5 @@ from repro.serving.diffusion_engine import DiffusionServingEngine  # noqa: F401
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
 from repro.serving.scheduler import (DiffusionRequest,  # noqa: F401
                                      RequestQueue, poisson_trace)
+from repro.serving.sharded_engine import (ShardedDiffusionEngine,  # noqa: F401
+                                          make_serving_mesh)

@@ -52,6 +52,7 @@ class DiffusionServingEngine:
         self.params = params
         self.S = max_slots
         self.num_steps = num_steps
+        self.num_train_steps = num_train_steps
         self.guidance_scale = guidance_scale
         self.use_cfg = guidance_scale != 1.0
         cfg = runner.model.cfg
@@ -75,8 +76,19 @@ class DiffusionServingEngine:
         # inside serve_step so the host never syncs per step
         self.acc = self._zero_acc()
 
-        self._step = jax.jit(self._serve_step_impl)
-        self._reset = jax.jit(self.runner.reset_slot)
+        self._place_and_compile()
+
+    def _place_and_compile(self) -> None:
+        """Jit the engine's device entry points.  State, latents and the
+        stat accumulators are DONATED: the cache state lives in device
+        buffers that are aliased step-over-step and never round-trip host
+        memory (asserted in tests via buffer deletion + a device-to-host
+        transfer guard).  ``ShardedDiffusionEngine`` overrides this to add
+        mesh placement and explicit in/out shardings."""
+        self._step = jax.jit(self._serve_step_impl,
+                             donate_argnums=(1, 2, 6))
+        self._reset = jax.jit(self.runner.reset_slot, donate_argnums=(0,))
+        self._admit = jax.jit(self._admit_impl, donate_argnums=(0, 1))
 
     @staticmethod
     def _zero_acc() -> Dict[str, jax.Array]:
@@ -106,6 +118,15 @@ class DiffusionServingEngine:
                                    * act_rows) for k in acc}
         return x_new, state, acc
 
+    def _admit_impl(self, state, x, rows, slot, noise):
+        """Admission writes for one slot, fused into a single donated call:
+        reset the slot's gate/cache rows and seed its latents.  Runs as one
+        device program so mid-flight admission costs one dispatch and no
+        state copy."""
+        state = self.runner.reset_slot(state, rows)
+        x = x.at[slot].set(noise)
+        return state, x
+
     # -- host orchestration ---------------------------------------------
 
     def _slot_rows(self, s: int) -> jnp.ndarray:
@@ -131,15 +152,23 @@ class DiffusionServingEngine:
         self.model_steps = 0
         self.acc = self._zero_acc()
 
+    def _staged_noise(self, req: DiffusionRequest) -> jax.Array:
+        """Initial latents staged for an admission write.  The sharded
+        engine overrides this to land the noise via ``jax.device_put`` with
+        the slot's shard spec (overlapping the in-flight step)."""
+        return self.request_noise(req)
+
     def add_request(self, req: DiffusionRequest) -> bool:
         """Admit one request into a free slot (mid-flight is fine): seed its
-        latents and fully reset the slot's gate/cache state."""
+        latents and fully reset the slot's gate/cache state — one donated
+        device call, bitwise-invisible to resident slots."""
         free = self.free_slots()
         if not free:
             return False
         s = free[0]
-        self.state = self._reset(self.state, self._slot_rows(s))
-        self.x = self.x.at[s].set(self.request_noise(req))
+        self.state, self.x = self._admit(
+            self.state, self.x, self._slot_rows(s),
+            jnp.asarray(s, jnp.int32), self._staged_noise(req))
         self.slots[s] = req
         self.slot_step[s] = 0
         self.slot_label[s] = req.label
@@ -166,10 +195,9 @@ class DiffusionServingEngine:
             if self.slot_step[s] >= self.num_steps:
                 done_slots.append(int(s))
         if done_slots:
-            x_host = np.asarray(self.x)
+            self._harvest(done_slots)
             for s in done_slots:
                 req = self.slots[s]
-                req.latents = x_host[s].copy()
                 req.finish_step = self.clock
                 req.done = True
                 finished.append(req)
@@ -182,6 +210,15 @@ class DiffusionServingEngine:
                 # worth that once-per-completion cost)
                 self.state = self._reset(self.state, self._slot_rows(s))
         return finished
+
+    def _harvest(self, done_slots: List[int]) -> None:
+        """Fill ``req.latents`` for finished slots.  Synchronous by default
+        (one blocking device->host fetch per completion step); the async
+        sharded engine overrides this with a deferred device-side copy so
+        the dispatch loop never blocks on the in-flight step."""
+        x_host = np.asarray(self.x)
+        for s in done_slots:
+            self.slots[s].latents = x_host[s].copy()
 
     def run(self, requests: Union[List[DiffusionRequest], RequestQueue],
             *, lockstep: bool = False, max_steps: int = 100_000

@@ -68,11 +68,25 @@ class RequestQueue:
         return bool(self._q)
 
 
-def poisson_trace(num_requests: int, rate: float, *, seed: int = 0,
+def poisson_trace(num_requests: int, rate: float, *,
+                  seed: Optional[int] = None, key=None,
                   num_classes: int = 10) -> List[DiffusionRequest]:
     """Poisson arrival process: exponential inter-arrival times with mean
     ``1 / rate`` (requests per engine step), floored onto the step clock.
-    Labels and noise seeds are drawn deterministically from ``seed``."""
+
+    Exactly one of ``seed`` (an int) or ``key`` (a ``jax.random`` PRNG key)
+    is required — there is deliberately no default, so every call site pins
+    its trace explicitly and benchmark runs replay the identical request
+    stream across topologies (single-device vs sharded sweeps).  Labels and
+    per-request noise seeds are drawn deterministically from it."""
+    if (seed is None) == (key is None):
+        raise TypeError(
+            "poisson_trace: pass exactly one of seed= (int) or key= "
+            "(jax.random PRNG key)")
+    if key is not None:
+        import jax
+        seed = int(jax.random.randint(key, (), 0,
+                                      np.iinfo(np.int32).max))
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(scale=1.0 / max(rate, 1e-9), size=num_requests)
     arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)

@@ -1,0 +1,269 @@
+"""Mesh-parallel diffusion serving: the multi-device runtime layer over
+``DiffusionServingEngine``.
+
+``ShardedDiffusionEngine`` places the slot batch on a ``(data, model)``
+mesh:
+
+- **slots over data** — the latent batch (S, H, W, C) and every per-slot
+  row of the FastCache state (cache payloads, chi^2 sigma trackers, policy
+  counters, stat accumulators) shard over the ``data`` axis via the
+  ``kind="serve"`` rule set in ``distributed/sharding.py``
+  (``serve_state_shardings``);
+- **weights over model** — DiT params shard tensor-parallel through the
+  same ``param_shardings`` tables the training launcher uses;
+- the jitted ``serve_step`` takes **donated** state buffers with explicit
+  in/out shardings, so cache state is aliased device-resident step over
+  step and never round-trips host memory.
+
+On top sits an **async dispatch loop**: JAX dispatch is already
+asynchronous, so the host races ahead of the accelerator as long as nothing
+forces a sync.  The two host syncs of the single-device engine are removed:
+
+- *admission*: queue pops, slot assignment and noise generation happen on
+  the host while step k is in flight; the noise lands through a per-slot
+  ``jax.device_put`` with the slot's shard spec (the x-spec minus the slot
+  axis, i.e. the layout of one resident row), and the fused
+  ``reset+seed`` admission program is enqueued *behind* step k — double
+  buffering: the device always has step k+1's work queued before step k
+  retires, and mid-flight admission stays bitwise-invisible to resident
+  samples (``CachedDiT._fastcache_mixed_step`` warms the cold rows);
+- *completion*: finished slots' latents are captured as device-side row
+  copies (enqueued, not fetched); the single blocking device->host
+  transfer happens once per ``run()`` after the trace drains.
+
+Because admission decisions depend only on host bookkeeping (slot
+occupancy and per-slot step counters), the async loop schedules the exact
+same (request, slot, step) trace as the synchronous engine — the sharded
+engine is bitwise-identical to ``DiffusionServingEngine`` per policy,
+which ``tests/test_sharded_serving.py`` asserts on an 8-virtual-device CPU
+mesh (``make test-sharded``).
+
+**Numerics self-check.**  SPMD partitioning is a compiler transform, and a
+wrong partition is *silent* — during bring-up on this jax/XLA version the
+CPU backend was caught both double-counting a matmul product (weight dims
+sharded over ``data`` against batch-over-``data`` activations) and
+NaN-ing the serve_step outright on any ``model > 1`` mesh, while every
+``model == 1`` topology is bitwise-exact.  The engine therefore runs a
+startup self-check whenever the model axis is wider than one device (or
+``numerics_check=True``): two synthetic serve_steps on the mesh, compared
+leaf-by-leaf against a single-device reference, raising ``RuntimeError``
+on NaN or out-of-tolerance drift instead of serving garbage.  Real-TPU
+validation of the tensor-parallel path is tracked in ROADMAP.md.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.runner import CachedDiT
+from repro.distributed.sharding import (ShardingCtx, make_rules,
+                                        param_shardings,
+                                        serve_state_shardings, spec_for,
+                                        use_sharding)
+from repro.serving.diffusion_engine import DiffusionServingEngine
+from repro.serving.scheduler import DiffusionRequest, RequestQueue
+
+
+def make_serving_mesh(data: Optional[int] = None, model: int = 1) -> Mesh:
+    """A ``(data, model)`` serving mesh over the available devices.
+    ``data`` defaults to ``device_count // model``."""
+    n = jax.device_count()
+    if data is None:
+        data = max(1, n // model)
+    if data * model > n:
+        raise ValueError(f"mesh ({data}, {model}) needs {data * model} "
+                        f"devices, have {n}")
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+class ShardedDiffusionEngine(DiffusionServingEngine):
+    """``DiffusionServingEngine`` on a ``(data, model)`` mesh with an async
+    host-admission dispatch loop.  Host orchestration (slots, queue,
+    lockstep baseline, stats conventions) is inherited unchanged — the
+    subsystem replaces the device runtime underneath it."""
+
+    def __init__(self, runner: CachedDiT, params, *, max_slots: int,
+                 mesh: Optional[Mesh] = None, num_steps: int = 50,
+                 guidance_scale: float = 4.0, num_train_steps: int = 1000,
+                 async_admission: bool = True,
+                 numerics_check: Optional[bool] = None):
+        self.mesh = mesh if mesh is not None else make_serving_mesh()
+        self.rules = make_rules("serve")
+        self._ctx = ShardingCtx(self.mesh, self.rules)
+        self.async_admission = async_admission
+        super().__init__(runner, params, max_slots=max_slots,
+                         num_steps=num_steps, guidance_scale=guidance_scale,
+                         num_train_steps=num_train_steps)
+        # default: self-check exactly the regime where the partitioner has
+        # been caught miscompiling (a model axis wider than one device);
+        # model==1 topologies are covered bitwise by the parity tests
+        if numerics_check is None:
+            numerics_check = self.topology()["model"] > 1
+        if numerics_check:
+            self._verify_step_numerics()
+
+    # -- placement + compilation ----------------------------------------
+
+    def _place_and_compile(self) -> None:
+        mesh, rules, ctx = self.mesh, self.rules, self._ctx
+        rep = NamedSharding(mesh, P())
+        # pre-placement params, kept for the numerics self-check's
+        # single-device reference engine (a reference, not a copy)
+        self._unplaced_params = self.params
+
+        # shardings: weights via the model's ParamDef tree, state via the
+        # kind="serve" cache-state tables, latents slot-major over `data`
+        self._params_sh = param_shardings(self.runner.model.param_defs(),
+                                          ctx)
+        self._state_sh = serve_state_shardings(self.state, ctx)
+        x_spec = spec_for(self.x.shape, ("slot", None, None, None), ctx)
+        self._x_sh = NamedSharding(mesh, x_spec)
+        # one slot's row = the x spec minus the slot axis: admission noise
+        # lands with this spec so the staged write matches the resident
+        # layout (no resharding inside the admission program)
+        self._slot_row_sh = NamedSharding(mesh, P(*x_spec[1:]))
+        self._acc_sh = {k: rep for k in self.acc}
+
+        self.params = jax.device_put(self.params, self._params_sh)
+        self.state = jax.device_put(self.state, self._state_sh)
+        self.x = jax.device_put(self.x, self._x_sh)
+        self.acc = jax.device_put(self.acc, self._acc_sh)
+        # schedule constants ride along replicated so the jitted programs
+        # never see mixed device commitments
+        self.ts = jax.device_put(self.ts, rep)
+        self.ts_prev = jax.device_put(self.ts_prev, rep)
+        self.sched = jax.device_put(self.sched, rep)
+
+        # trace under the serve sharding ctx so `constrain` calls in the
+        # model blocks and the fastcache scan carry bind to this mesh
+        def step_fn(params, state, x, step_idx, labels, active, acc):
+            with use_sharding(mesh, rules):
+                return self._serve_step_impl(params, state, x, step_idx,
+                                             labels, active, acc)
+
+        def reset_fn(state, rows):
+            with use_sharding(mesh, rules):
+                return self.runner.reset_slot(state, rows)
+
+        def admit_fn(state, x, rows, slot, noise):
+            with use_sharding(mesh, rules):
+                return self._admit_impl(state, x, rows, slot, noise)
+
+        self._step = jax.jit(
+            step_fn,
+            in_shardings=(self._params_sh, self._state_sh, self._x_sh,
+                          rep, rep, rep, self._acc_sh),
+            out_shardings=(self._x_sh, self._state_sh, self._acc_sh),
+            donate_argnums=(1, 2, 6))
+        self._reset = jax.jit(
+            reset_fn, in_shardings=(self._state_sh, rep),
+            out_shardings=self._state_sh, donate_argnums=(0,))
+        self._admit = jax.jit(
+            admit_fn,
+            in_shardings=(self._state_sh, self._x_sh, rep, rep,
+                          self._slot_row_sh),
+            out_shardings=(self._state_sh, self._x_sh),
+            donate_argnums=(0, 1))
+
+    # -- async admission / harvest --------------------------------------
+
+    def _staged_noise(self, req: DiffusionRequest) -> jax.Array:
+        # per-slot device_put with the slot's shard spec: the transfer is
+        # staged while the current step is in flight, and the admission
+        # program consumes it without resharding
+        return jax.device_put(self.request_noise(req), self._slot_row_sh)
+
+    def _harvest(self, done_slots: List[int]) -> None:
+        if not self.async_admission:
+            return super()._harvest(done_slots)
+        # deferred: enqueue a device-side row copy (the donated next step
+        # cannot clobber it — the runtime orders the copy before reuse) and
+        # materialize once after the trace drains
+        for s in done_slots:
+            self.slots[s].latents = self.x[s]
+
+    def run(self, requests: Union[List[DiffusionRequest], RequestQueue],
+            *, lockstep: bool = False, max_steps: int = 100_000
+            ) -> List[DiffusionRequest]:
+        finished = super().run(requests, lockstep=lockstep,
+                               max_steps=max_steps)
+        if self.async_admission:
+            # the run's single sync point: fetch all deferred latents
+            for r in finished:
+                if isinstance(r.latents, jax.Array):
+                    r.latents = np.asarray(r.latents).copy()
+        return finished
+
+    # -- numerics self-check --------------------------------------------
+
+    def _verify_step_numerics(self, *, rtol: float = 1e-2,
+                              atol: float = 1e-2) -> None:
+        """Run two synthetic serve_steps through the compiled SPMD program
+        and compare every output leaf against a single-device reference
+        engine.  A silently mis-partitioned program (double-counted
+        reductions, NaNs — both observed on model>1 CPU meshes during
+        bring-up) fails loudly here instead of corrupting served requests.
+        Tolerances allow legitimate reduction-order drift from tensor
+        parallelism; int/bool leaves must match exactly."""
+        ref_eng = DiffusionServingEngine(
+            self.runner, self._unplaced_params, max_slots=self.S,
+            num_steps=self.num_steps, guidance_scale=self.guidance_scale,
+            num_train_steps=self.num_train_steps)
+        eff = 2 * self.S if self.use_cfg else self.S
+        x0 = jax.random.normal(jax.random.PRNGKey(0), self.x.shape,
+                               jnp.float32)
+        labels = jnp.zeros((self.S,), jnp.int32)
+        active = jnp.ones((self.S,), bool)
+        ref = (ref_eng.params, self.runner.init_state(eff), x0)
+        got = (self.params,
+               jax.device_put(self.runner.init_state(eff), self._state_sh),
+               jax.device_put(x0, self._x_sh))
+        ref_acc = self._zero_acc()
+        got_acc = jax.device_put(self._zero_acc(), self._acc_sh)
+        flat = getattr(jax.tree, "flatten_with_path", None) \
+            or jax.tree_util.tree_flatten_with_path
+        for step in range(2):
+            idx = jnp.full((self.S,), step, jnp.int32)
+            rx, rs, ref_acc = ref_eng._step(ref[0], ref[1], ref[2], idx,
+                                            labels, active, ref_acc)
+            gx, gs, got_acc = self._step(got[0], got[1], got[2], idx,
+                                         labels, active, got_acc)
+            ref, got = (ref_eng.params, rs, rx), (self.params, gs, gx)
+            for (path, a), b in zip(flat((rx, rs, ref_acc))[0],
+                                    jax.tree.leaves((gx, gs, got_acc))):
+                name = jax.tree_util.keystr(path)
+                a, b = np.asarray(a), np.asarray(b)
+                if np.issubdtype(a.dtype, np.floating):
+                    bad = (not np.isfinite(b).all()
+                           or not np.allclose(a, b, rtol=rtol, atol=atol))
+                    diff = np.abs(a - b)
+                    maxdiff = (float(np.nanmax(diff))
+                               if np.isfinite(diff).any() else float("nan"))
+                    detail = (f"max|diff|={maxdiff:.3e}"
+                              f" nan={bool(np.isnan(b).any())}")
+                else:
+                    bad = not np.array_equal(a, b)
+                    detail = "integer/bool mismatch"
+                if bad:
+                    topo = self.topology()
+                    raise RuntimeError(
+                        f"ShardedDiffusionEngine numerics self-check "
+                        f"failed on mesh (data={topo['data']}, "
+                        f"model={topo['model']}) at step {step}, leaf "
+                        f"{name}: {detail}.  The SPMD partitioner "
+                        f"miscompiled the serve_step on this backend "
+                        f"(known for model>1 on this jax/XLA CPU "
+                        f"version — see ROADMAP.md).  Use a model=1 "
+                        f"topology here, or pass numerics_check=False "
+                        f"to override.")
+
+    # -- reporting ------------------------------------------------------
+
+    def topology(self) -> Dict[str, int]:
+        shape = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        return {"data": shape.get("data", 1), "model": shape.get("model", 1),
+                "devices": int(self.mesh.devices.size)}
