@@ -31,6 +31,10 @@ SUITES = {
                         "Sharded vs single-device diffusion serving across "
                         "(data, model) mesh topologies (8-virtual-device "
                         "CPU subprocess)"),
+    "serving_hetero": ("benchmarks.serving_hetero",
+                       "Heterogeneous sampling plans (mixed step budgets/"
+                       "guidance) under Poisson arrivals: FIFO vs SJF, "
+                       "cache ratio by step budget"),
     "kernels": ("benchmarks.kernels_bench", "Kernel microbenchmarks"),
     "roofline": ("benchmarks.roofline", "Roofline from dry-run artifacts"),
 }

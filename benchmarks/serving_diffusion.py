@@ -44,28 +44,33 @@ from repro.serving import (DiffusionRequest, DiffusionServingEngine,
 
 def _fresh_trace(trace: List[DiffusionRequest]) -> List[DiffusionRequest]:
     """Engines mutate requests in place; each mode gets its own copies."""
-    return [dataclasses.replace(r, latents=None, admit_step=-1,
+    return [dataclasses.replace(r, latents=None, cache=None, admit_step=-1,
                                 finish_step=-1, done=False) for r in trace]
 
 
 def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
                guidance: float, lockstep: bool, topology=None,
-               async_admission: bool = True
+               async_admission: bool = True, max_steps=None,
+               sched_policy: str = "fifo"
                ) -> Tuple[Dict, List[DiffusionRequest]]:
     """One engine run over a fresh copy of ``trace``; returns (result row,
     finished requests).  ``topology`` (data, model) != (1, 1) serves
-    through the sharded engine on that mesh."""
+    through the sharded engine on that mesh.  ``max_steps`` sizes the plan
+    tables for heterogeneous traces (defaults to ``steps``);
+    ``sched_policy`` picks the admission order (fifo / sjf)."""
     runner = CachedDiT(model, FastCacheConfig(), policy=policy)
     if topology and tuple(topology) != (1, 1):
         data, tp = topology
         engine = ShardedDiffusionEngine(
             runner, params, max_slots=slots, num_steps=steps,
-            guidance_scale=guidance, mesh=make_serving_mesh(data, tp),
+            guidance_scale=guidance, max_steps=max_steps,
+            mesh=make_serving_mesh(data, tp),
             async_admission=async_admission)
     else:
         engine = DiffusionServingEngine(runner, params, max_slots=slots,
                                         num_steps=steps,
-                                        guidance_scale=guidance)
+                                        guidance_scale=guidance,
+                                        max_steps=max_steps)
     reqs = _fresh_trace(trace)
     # warm the jitted serve_step so wall-time excludes compilation, then
     # rewind the clock so the trace's absolute arrival steps line up
@@ -75,7 +80,7 @@ def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
     engine.run(warm)
     engine.reset_clock()
     t0 = time.perf_counter()
-    done = engine.run(reqs, lockstep=lockstep)
+    done = engine.run(reqs, lockstep=lockstep, sched_policy=sched_policy)
     wall = time.perf_counter() - t0
     assert len(done) == len(trace), (len(done), len(trace))
     lats = np.array([r.latency_steps for r in done], np.float64)
@@ -84,6 +89,7 @@ def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
     model_step_ms = wall / max(1, engine.model_steps) * 1e3
     res = {
         "mode": "lockstep" if lockstep else "continuous",
+        "sched_policy": sched_policy,
         "policy": policy,
         "topology": {"data": 1, "model": 1, "devices": 1},
         "requests": len(done),

@@ -15,7 +15,7 @@ timestep vector so requests at different schedule positions share one batch.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -25,18 +25,28 @@ from repro.diffusion import schedule as sch
 
 F32 = jnp.float32
 
+GuidanceLike = Union[float, int, jax.Array]
+
 
 def denoise_step(runner: CachedDiT, params, sched: sch.Schedule, state,
                  x: jax.Array, t: jax.Array, t_prev: jax.Array,
-                 labels: jax.Array, *, guidance_scale: float = 4.0
+                 labels: jax.Array, *, guidance_scale: GuidanceLike = 4.0
                  ) -> Tuple[jax.Array, Dict]:
     """One denoising step x_t -> x_{t_prev} for a (possibly heterogeneous)
     batch: per-sample integer timesteps ``t``/``t_prev`` (B,), per-sample
     ``labels`` (B,).  With guidance the model batch is doubled internally
     (cond rows then uncond rows) and ``state`` must be sized 2B; the split
     matches ``CachedDiT.init_state(2 * B)``.  ``t_prev < 0`` marks the final
-    step (x0 prediction).  Returns (x_next, new_state)."""
-    use_cfg = guidance_scale != 1.0
+    step (x0 prediction).  Returns (x_next, new_state).
+
+    ``guidance_scale`` may be a Python scalar (shared across the batch; the
+    value 1.0 statically disables CFG, and ``state`` is sized B) or a (B,)
+    array of per-sample scales.  The array form ALWAYS materializes the CFG
+    rows — heterogeneity is expressed in the blend weights, with
+    ``scale == 1.0`` rows selecting the conditional eps outright so they
+    stay bitwise-equal to an unguided run of that sample."""
+    per_sample = not isinstance(guidance_scale, (int, float))
+    use_cfg = per_sample or guidance_scale != 1.0
     b = x.shape[0]
     if use_cfg:
         null_label = runner.model.cfg.dit.num_classes
@@ -49,14 +59,24 @@ def denoise_step(runner: CachedDiT, params, sched: sch.Schedule, state,
     eps, state = runner.step(params, state, x_in, t_in, lab)
     if use_cfg:
         eps_c, eps_u = jnp.split(eps, 2, axis=0)
-        eps = eps_u + guidance_scale * (eps_c - eps_u)
+        if per_sample:
+            g = jnp.broadcast_to(
+                jnp.asarray(guidance_scale, F32), (b,)
+            ).reshape((b,) + (1,) * (x.ndim - 1))
+            # scale==1.0 must reduce to eps_c EXACTLY: the algebraic form
+            # eps_u + 1.0*(eps_c - eps_u) re-associates in float32 and
+            # would break bitwise parity with an unguided solo run
+            eps = jnp.where(g == 1.0, eps_c,
+                            eps_u + g * (eps_c - eps_u))
+        else:
+            eps = eps_u + guidance_scale * (eps_c - eps_u)
     x = sch.ddim_step(sched, x, eps, t, t_prev)
     return x, state
 
 
 def sample(runner: CachedDiT, params, key: jax.Array, *, batch: int,
            labels: Optional[jax.Array] = None, num_steps: int = 50,
-           guidance_scale: float = 4.0, num_train_steps: int = 1000,
+           guidance_scale: GuidanceLike = 4.0, num_train_steps: int = 1000,
            jit_step: bool = True, t_offsets: Optional[jax.Array] = None,
            x_init: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
     """Returns (samples (B, H, W, C) latents, cache stats state).
@@ -70,7 +90,10 @@ def sample(runner: CachedDiT, params, key: jax.Array, *, batch: int,
     img, ch = cfg.dit.image_size, cfg.dit.in_channels
     if labels is None:
         labels = jnp.zeros((batch,), jnp.int32)
-    use_cfg = guidance_scale != 1.0
+    # per-sample guidance vectors always run the doubled CFG batch (see
+    # denoise_step); scalar 1.0 statically disables CFG
+    use_cfg = (not isinstance(guidance_scale, (int, float))
+               or guidance_scale != 1.0)
 
     sched = sch.linear_schedule(num_train_steps)
     ts = sch.ddim_timesteps(num_train_steps, num_steps)

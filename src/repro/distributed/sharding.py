@@ -251,6 +251,35 @@ def serve_state_shardings(state, ctx: Optional[ShardingCtx] = None):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+# Logical axes of the diffusion engine's per-slot sampling-plan tables
+# (``DiffusionServingEngine.plan``): the (S, max_steps) ts/ts_prev timestep
+# tables and the (S,) guidance vector all carry their slot dim on "slot",
+# so under the kind="serve" rules a slot's plan rows live with the rest of
+# that slot's state on the same `data` shard.
+_SERVE_PLAN_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "ts": ("slot", None),
+    "ts_prev": ("slot", None),
+    "guidance": ("slot",),
+}
+
+
+def serve_plan_specs(plan, ctx: Optional[ShardingCtx] = None):
+    """PartitionSpecs for the engine's sampling-plan tables, keyed like the
+    ``plan`` dict (ts / ts_prev / guidance): slot rows over ``data``."""
+    ctx = ctx or current_ctx()
+    assert ctx is not None, "serve_plan_specs requires a sharding ctx"
+    return {k: spec_for(v.shape, _SERVE_PLAN_AXES[k], ctx)
+            for k, v in plan.items()}
+
+
+def serve_plan_shardings(plan, ctx: Optional[ShardingCtx] = None):
+    """NamedSharding dict for the engine's sampling-plan tables."""
+    ctx = ctx or current_ctx()
+    assert ctx is not None, "serve_plan_shardings requires a sharding ctx"
+    return {k: NamedSharding(ctx.mesh, spec)
+            for k, spec in serve_plan_specs(plan, ctx).items()}
+
+
 def param_shardings(defs, ctx: Optional[ShardingCtx] = None):
     """Pytree of NamedShardings matching a pytree of ParamDef."""
     from repro.models.params import ParamDef  # local to avoid cycle

@@ -8,6 +8,13 @@ per-slot FastCache state (the image-generation twin of launch/serve.py).
 when every slot is free) for latency comparisons; ``--json`` emits the
 summary as JSON.
 
+``--steps-mix 20,50`` / ``--guidance-mix 1.0,4.0`` make the workload
+heterogeneous: each request draws its own sampling plan (DDIM step budget,
+guidance scale) from the mix and one engine batch serves them side by side
+— the engine's plan tables are sized to the largest budget in the mix.
+``--sched sjf`` switches the admission queue from FIFO to
+shortest-job-first (smallest step budget among arrived requests first).
+
 ``--mesh data,model`` serves through ``ShardedDiffusionEngine`` on a
 ``(data, model)`` device mesh (slots over ``data``, DiT weights over
 ``model``) with async host admission — disable the overlap with
@@ -33,7 +40,7 @@ from repro.core import CachedDiT, POLICIES
 from repro.models import build_model
 from repro.launch.mesh import make_serving_mesh
 from repro.serving import (DiffusionServingEngine, ShardedDiffusionEngine,
-                           poisson_trace)
+                           poisson_trace, summarize_by_steps)
 
 
 def percentile(xs, p):
@@ -56,8 +63,18 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--steps", type=int, default=10,
-                    help="DDIM steps per request")
-    ap.add_argument("--guidance", type=float, default=4.0)
+                    help="default DDIM steps per request")
+    ap.add_argument("--guidance", type=float, default=4.0,
+                    help="default guidance scale per request")
+    ap.add_argument("--steps-mix", default="",
+                    help="comma list of DDIM step budgets; each request "
+                         "draws its own (e.g. 20,50)")
+    ap.add_argument("--guidance-mix", default="",
+                    help="comma list of guidance scales; each request "
+                         "draws its own (e.g. 1.0,4.0)")
+    ap.add_argument("--sched", default="fifo", choices=("fifo", "sjf"),
+                    help="admission order among arrived requests: FIFO or "
+                         "shortest-job-first")
     ap.add_argument("--policy", default="fastcache", choices=POLICIES)
     ap.add_argument("--rate", type=float, default=0.5,
                     help="Poisson arrival rate (requests per engine step)")
@@ -81,44 +98,58 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     runner = CachedDiT(model, FastCacheConfig(), policy=args.policy)
+    steps_mix = [int(v) for v in args.steps_mix.split(",") if v.strip()]
+    guidance_mix = [float(v) for v in args.guidance_mix.split(",")
+                    if v.strip()]
+    # plan tables must fit the largest step budget in the workload
+    max_steps = max(steps_mix + [args.steps])
     if args.mesh:
         data, tp = parse_mesh(args.mesh)
         engine = ShardedDiffusionEngine(
             runner, params, max_slots=args.slots, num_steps=args.steps,
-            guidance_scale=args.guidance,
+            guidance_scale=args.guidance, max_steps=max_steps,
             mesh=make_serving_mesh(data, tp),
             async_admission=not args.sync_admission)
     else:
         engine = DiffusionServingEngine(runner, params,
                                         max_slots=args.slots,
                                         num_steps=args.steps,
-                                        guidance_scale=args.guidance)
+                                        guidance_scale=args.guidance,
+                                        max_steps=max_steps)
     trace = poisson_trace(args.requests, args.rate, seed=args.seed,
-                          num_classes=cfg.dit.num_classes)
+                          num_classes=cfg.dit.num_classes,
+                          steps_mix=steps_mix or None,
+                          guidance_mix=guidance_mix or None)
     t0 = time.perf_counter()
-    done = engine.run(trace, lockstep=args.lockstep)
+    done = engine.run(trace, lockstep=args.lockstep,
+                      sched_policy=args.sched)
     dt = time.perf_counter() - t0
 
     lats = [r.latency_steps for r in done]
     summary = {
         "mode": "lockstep" if args.lockstep else "continuous",
+        "sched_policy": args.sched,
         "topology": (engine.topology() if args.mesh
                      else {"data": 1, "model": 1, "devices": 1}),
         "async_admission": bool(args.mesh) and not args.sync_admission,
         "policy": args.policy,
         "requests": len(done),
+        "steps_mix": steps_mix or [args.steps],
+        "guidance_mix": guidance_mix or [args.guidance],
         "engine_steps": engine.clock,
         "model_steps": engine.model_steps,
         "wall_s": dt,
         "requests_per_s": len(done) / dt if dt else 0.0,
         "latency_steps_p50": percentile(lats, 50),
         "latency_steps_p95": percentile(lats, 95),
+        "latency_by_steps": summarize_by_steps(done),
         "cache": engine.cache_stats(),
     }
     if args.json:
         print(json.dumps(summary, indent=2))
     else:
-        print(f"[serve-diffusion] {summary['mode']} policy={args.policy}: "
+        print(f"[serve-diffusion] {summary['mode']} sched={args.sched} "
+              f"policy={args.policy}: "
               f"{len(done)} requests in {dt:.2f}s "
               f"({summary['requests_per_s']:.2f} req/s incl. compile), "
               f"{engine.clock} engine steps")

@@ -1,6 +1,8 @@
 from repro.serving.diffusion_engine import DiffusionServingEngine  # noqa: F401
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
-from repro.serving.scheduler import (DiffusionRequest,  # noqa: F401
-                                     RequestQueue, poisson_trace)
+from repro.serving.scheduler import (SCHED_POLICIES,  # noqa: F401
+                                     DiffusionRequest, RequestQueue,
+                                     SamplingPlan, poisson_trace,
+                                     summarize_by_steps)
 from repro.serving.sharded_engine import (ShardedDiffusionEngine,  # noqa: F401
                                           make_serving_mesh)

@@ -2,29 +2,43 @@
 FastCache state — the diffusion twin of ``serving/engine.py``'s slot pattern.
 
 The engine owns a fixed batch of ``max_slots`` generation slots.  Each slot
-holds one request: its class label, its own DDIM step index, its CFG pair
-(cond row ``s`` + uncond row ``S + s`` of the doubled model batch) and its
-per-slot cache state inside the shared ``CachedDiT`` state (gate variance
-trackers, cache payloads, policy counters — all (batch,)-indexed).  One
-jitted ``serve_step`` advances every active slot one denoising step over a
-per-sample timestep vector (slots sit at *different* schedule positions);
-finished slots emit latents and free immediately; queued requests are
-admitted into free slots mid-flight.
+holds one request: its class label, its own **sampling plan** (DDIM step
+budget + guidance scale), its own DDIM step index, its CFG pair (cond row
+``s`` + uncond row ``S + s`` of the doubled model batch) and its per-slot
+cache state inside the shared ``CachedDiT`` state (gate variance trackers,
+cache payloads, policy counters — all (batch,)-indexed).  One jitted
+``serve_step`` advances every active slot one denoising step; finished
+slots emit latents and free immediately; queued requests are admitted into
+free slots mid-flight.
+
+**Heterogeneous plans.**  The denoising schedule is per-slot state, not
+engine config: the engine keeps device-resident ``(S, max_steps)``
+``ts``/``ts_prev`` plan tables plus a per-slot ``(S,)`` guidance vector,
+and admission writes the request's plan rows inside the same fused
+``_admit`` call that resets the slot's cache state and seeds its latents.
+One batch therefore mixes 20-step and 50-step jobs at different guidance
+scales; CFG rows are always materialized, with ``guidance == 1.0``
+expressed per-sample by the blend weights (bitwise-equal to an unguided
+solo run — see ``sampler.denoise_step``).  Finish detection is per-slot:
+slot ``s`` completes after its own ``slot_budget[s]`` steps.
 
 Safety of mid-flight admission rests on two properties of ``CachedDiT``:
 every cache decision is per-sample (one slot's state never influences a
 batchmate's outputs), and a mixed warm/cold batch warms the cold sample up
 with a full forward while warm samples keep their gated path — so a request
-admitted at engine step k reproduces its solo run from step 0, and resident
-requests are untouched by the admission.
+admitted at engine step k reproduces its solo run from step 0 *under its
+own plan*, and resident requests are untouched by the admission.
 
 Headline cache counters accumulate only ACTIVE slots' decisions (idle slots
 re-feed frozen latents, trivially skip, and would inflate the ratio) —
-matching the ``serving/engine.py`` convention.
+matching the ``serving/engine.py`` convention.  A second, request-scoped
+per-slot accumulator is zeroed at admission and harvested into
+``req.cache`` at completion, so workload analyses (e.g. cache ratio by step
+budget) never need a per-step host sync.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +47,8 @@ import numpy as np
 from repro.core.runner import CachedDiT
 from repro.diffusion import sampler
 from repro.diffusion import schedule as sch
-from repro.serving.scheduler import DiffusionRequest, RequestQueue
+from repro.serving.scheduler import (DiffusionRequest, RequestQueue,
+                                     SamplingPlan)
 
 F32 = jnp.float32
 
@@ -41,7 +56,8 @@ F32 = jnp.float32
 class DiffusionServingEngine:
     def __init__(self, runner: CachedDiT, params, *, max_slots: int,
                  num_steps: int = 50, guidance_scale: float = 4.0,
-                 num_train_steps: int = 1000):
+                 num_train_steps: int = 1000,
+                 max_steps: Optional[int] = None):
         # the bitwise admission-invariance contract needs per-sample gating:
         # global mode reduces the chi^2 statistic over the whole batch, so
         # an admission would silently change residents' gate decisions
@@ -51,44 +67,63 @@ class DiffusionServingEngine:
         self.runner = runner
         self.params = params
         self.S = max_slots
+        # (num_steps, guidance_scale) is the DEFAULT plan, applied to
+        # requests that don't carry their own; max_steps is the plan-table
+        # width — the largest per-request step budget this engine admits
         self.num_steps = num_steps
-        self.num_train_steps = num_train_steps
         self.guidance_scale = guidance_scale
-        self.use_cfg = guidance_scale != 1.0
+        self.default_plan = SamplingPlan(num_steps, guidance_scale)
+        self.max_steps = max_steps if max_steps is not None else num_steps
+        if self.max_steps < num_steps:
+            raise ValueError(f"max_steps={self.max_steps} < default "
+                             f"num_steps={num_steps}")
+        self.num_train_steps = num_train_steps
         cfg = runner.model.cfg
         self.img = cfg.dit.image_size
         self.ch = cfg.dit.in_channels
 
         self.sched = sch.linear_schedule(num_train_steps)
-        ts = sch.ddim_timesteps(num_train_steps, num_steps)
-        self.ts = ts
-        self.ts_prev = jnp.concatenate([ts[1:], jnp.array([-1], jnp.int32)])
+        # per-slot plan tables: row s is slot s's padded DDIM schedule (a
+        # plan's rows land here inside the fused _admit call); every slot
+        # starts on the default plan so idle rows still hold valid indices
+        ts_row, prev_row = self.default_plan.rows(self.max_steps,
+                                                  num_train_steps)
+        self.plan = {
+            "ts": jnp.tile(jnp.asarray(ts_row)[None], (max_slots, 1)),
+            "ts_prev": jnp.tile(jnp.asarray(prev_row)[None], (max_slots, 1)),
+            "guidance": jnp.full((max_slots,), guidance_scale, F32),
+        }
 
-        eff = 2 * max_slots if self.use_cfg else max_slots
-        self.state = runner.init_state(eff)
+        # CFG rows are ALWAYS materialized (guidance==1.0 is a per-sample
+        # blend weight), so the state batch is fixed at 2S and slots never
+        # resize when a different-guidance request lands
+        self.state = runner.init_state(2 * max_slots)
         self.x = jnp.zeros((max_slots, self.img, self.img, self.ch), F32)
         self.slots: List[Optional[DiffusionRequest]] = [None] * max_slots
         self.slot_step = np.full((max_slots,), -1, np.int32)
+        self.slot_budget = np.full((max_slots,), num_steps, np.int32)
         self.slot_label = np.zeros((max_slots,), np.int32)
         self.clock = 0                      # engine steps taken
         self.model_steps = 0                # steps that actually ran the DiT
         # active-slot-only counters (PR 1 convention), accumulated on-device
-        # inside serve_step so the host never syncs per step
+        # inside serve_step so the host never syncs per step; slot_acc is
+        # the request-scoped view (zeroed at admission, harvested on finish)
         self.acc = self._zero_acc()
+        self.slot_acc = self._zero_slot_acc()
 
         self._place_and_compile()
 
     def _place_and_compile(self) -> None:
-        """Jit the engine's device entry points.  State, latents and the
-        stat accumulators are DONATED: the cache state lives in device
+        """Jit the engine's device entry points.  State, latents, plan
+        tables and the stat accumulators are DONATED: they live in device
         buffers that are aliased step-over-step and never round-trip host
         memory (asserted in tests via buffer deletion + a device-to-host
         transfer guard).  ``ShardedDiffusionEngine`` overrides this to add
         mesh placement and explicit in/out shardings."""
         self._step = jax.jit(self._serve_step_impl,
-                             donate_argnums=(1, 2, 6))
+                             donate_argnums=(1, 2, 7, 8))
         self._reset = jax.jit(self.runner.reset_slot, donate_argnums=(0,))
-        self._admit = jax.jit(self._admit_impl, donate_argnums=(0, 1))
+        self._admit = jax.jit(self._admit_impl, donate_argnums=(0, 1, 2, 3))
 
     @staticmethod
     def _zero_acc() -> Dict[str, jax.Array]:
@@ -96,43 +131,59 @@ class DiffusionServingEngine:
                 for k in ("blocks_skipped", "blocks_computed",
                           "steps_reused")}
 
+    def _zero_slot_acc(self) -> Dict[str, jax.Array]:
+        return {k: jnp.zeros((self.S,), F32)
+                for k in ("blocks_skipped", "blocks_computed",
+                          "steps_reused")}
+
     # -- jitted body ----------------------------------------------------
 
-    def _serve_step_impl(self, params, state, x, step_idx, labels, active,
-                         acc):
+    def _serve_step_impl(self, params, state, x, plan, step_idx, labels,
+                         active, acc, slot_acc):
         """Advance all slots one denoising step.  ``step_idx`` (S,) is each
-        slot's DDIM schedule position; idle slots (active=False) run through
-        the model as padding but their latents are frozen and their cache
-        decisions are excluded from the ``acc`` headline counters."""
-        idx = jnp.clip(step_idx, 0, self.num_steps - 1)
-        t = self.ts[idx]
-        t_prev = self.ts_prev[idx]
+        slot's position in ITS OWN plan row of the ``(S, max_steps)``
+        tables; idle slots (active=False) run through the model as padding
+        but their latents are frozen and their cache decisions are excluded
+        from the ``acc`` headline counters."""
+        idx = jnp.clip(step_idx, 0, self.max_steps - 1)
+        t = jnp.take_along_axis(plan["ts"], idx[:, None], axis=1)[:, 0]
+        t_prev = jnp.take_along_axis(plan["ts_prev"], idx[:, None],
+                                     axis=1)[:, 0]
         before = state["stats"]
         x_new, state = sampler.denoise_step(
             self.runner, params, self.sched, state, x, t, t_prev, labels,
-            guidance_scale=self.guidance_scale)
+            guidance_scale=plan["guidance"])
         x_new = jnp.where(active[:, None, None, None], x_new, x)
-        act_rows = (jnp.concatenate([active, active]) if self.use_cfg
-                    else active)
-        acc = {k: acc[k] + jnp.sum((state["stats"][k] - before[k])
-                                   * act_rows) for k in acc}
-        return x_new, state, acc
+        act_rows = jnp.concatenate([active, active])
+        delta = {k: (state["stats"][k] - before[k]) * act_rows
+                 for k in acc}
+        acc = {k: acc[k] + jnp.sum(delta[k]) for k in acc}
+        slot_acc = {k: slot_acc[k] + delta[k][:self.S] + delta[k][self.S:]
+                    for k in slot_acc}
+        return x_new, state, acc, slot_acc
 
-    def _admit_impl(self, state, x, rows, slot, noise):
+    def _admit_impl(self, state, x, plan, slot_acc, rows, slot, noise,
+                    ts_row, ts_prev_row, guid):
         """Admission writes for one slot, fused into a single donated call:
-        reset the slot's gate/cache rows and seed its latents.  Runs as one
-        device program so mid-flight admission costs one dispatch and no
-        state copy."""
+        reset the slot's gate/cache rows, seed its latents, land its plan
+        rows (timestep table rows + guidance scale) and zero its
+        request-scoped counters.  Runs as one device program so mid-flight
+        admission costs one dispatch and no state copy."""
         state = self.runner.reset_slot(state, rows)
         x = x.at[slot].set(noise)
-        return state, x
+        plan = {
+            "ts": plan["ts"].at[slot].set(ts_row),
+            "ts_prev": plan["ts_prev"].at[slot].set(ts_prev_row),
+            "guidance": plan["guidance"].at[slot].set(guid),
+        }
+        slot_acc = {k: v.at[slot].set(0.0) for k, v in slot_acc.items()}
+        return state, x, plan, slot_acc
 
     # -- host orchestration ---------------------------------------------
 
     def _slot_rows(self, s: int) -> jnp.ndarray:
         """State rows owned by slot s (the CFG cond/uncond pair)."""
-        rows = [s, self.S + s] if self.use_cfg else [s]
-        return jnp.array(rows, jnp.int32)
+        return jnp.array([s, self.S + s], jnp.int32)
 
     def request_noise(self, req: DiffusionRequest) -> jax.Array:
         """The request's deterministic initial latents, (img, img, ch) —
@@ -152,47 +203,79 @@ class DiffusionServingEngine:
         self.model_steps = 0
         self.acc = self._zero_acc()
 
+    def resolve_plan(self, req: DiffusionRequest) -> SamplingPlan:
+        """The request's concrete sampling plan: its own
+        ``num_steps``/``guidance_scale`` where set, the engine defaults
+        otherwise.  The resolved values are written back onto the request
+        so a finished request records the exact plan it ran under (solo
+        replays read them)."""
+        n = req.num_steps if req.num_steps is not None else self.num_steps
+        g = (req.guidance_scale if req.guidance_scale is not None
+             else self.guidance_scale)
+        if n > self.max_steps:
+            raise ValueError(
+                f"request rid={req.rid} wants num_steps={n} but this "
+                f"engine's plan tables are max_steps={self.max_steps} "
+                f"wide; construct the engine with max_steps>={n}")
+        req.num_steps, req.guidance_scale = n, float(g)
+        return SamplingPlan(n, float(g))
+
     def _staged_noise(self, req: DiffusionRequest) -> jax.Array:
         """Initial latents staged for an admission write.  The sharded
         engine overrides this to land the noise via ``jax.device_put`` with
         the slot's shard spec (overlapping the in-flight step)."""
         return self.request_noise(req)
 
+    def _staged_plan(self, ts_row: np.ndarray, ts_prev_row: np.ndarray
+                     ) -> Tuple[jax.Array, jax.Array]:
+        """Plan-table rows staged for an admission write; the sharded
+        engine lands them via the same per-slot ``device_put`` mechanism as
+        the noise."""
+        return jnp.asarray(ts_row), jnp.asarray(ts_prev_row)
+
     def add_request(self, req: DiffusionRequest) -> bool:
         """Admit one request into a free slot (mid-flight is fine): seed its
-        latents and fully reset the slot's gate/cache state — one donated
-        device call, bitwise-invisible to resident slots."""
+        latents, land its plan rows and fully reset the slot's gate/cache
+        state — one donated device call, bitwise-invisible to resident
+        slots."""
         free = self.free_slots()
         if not free:
             return False
         s = free[0]
-        self.state, self.x = self._admit(
-            self.state, self.x, self._slot_rows(s),
-            jnp.asarray(s, jnp.int32), self._staged_noise(req))
+        plan = self.resolve_plan(req)
+        ts_row, prev_row = plan.rows(self.max_steps, self.num_train_steps)
+        self.state, self.x, self.plan, self.slot_acc = self._admit(
+            self.state, self.x, self.plan, self.slot_acc,
+            self._slot_rows(s), jnp.asarray(s, jnp.int32),
+            self._staged_noise(req), *self._staged_plan(ts_row, prev_row),
+            jnp.asarray(plan.guidance_scale, F32))
         self.slots[s] = req
         self.slot_step[s] = 0
+        self.slot_budget[s] = plan.num_steps
         self.slot_label[s] = req.label
         req.admit_step = self.clock
         return True
 
     def step(self) -> List[DiffusionRequest]:
         """One engine step: advance all active slots one denoising step.
-        Returns the requests that finished on this step (slots freed)."""
+        Returns the requests that finished on this step (slots freed) —
+        each after its OWN plan's step budget."""
         active = np.array([r is not None for r in self.slots])
         self.clock += 1
         if not active.any():            # idle tick: time passes, no compute
             return []
-        self.x, self.state, self.acc = self._step(
-            self.params, self.state, self.x,
+        self.x, self.state, self.acc, self.slot_acc = self._step(
+            self.params, self.state, self.x, self.plan,
             jnp.asarray(np.where(active, self.slot_step, 0).astype(np.int32)),
-            jnp.asarray(self.slot_label), jnp.asarray(active), self.acc)
+            jnp.asarray(self.slot_label), jnp.asarray(active), self.acc,
+            self.slot_acc)
         self.model_steps += 1
 
         finished: List[DiffusionRequest] = []
         done_slots = []
         for s in np.flatnonzero(active):
             self.slot_step[s] += 1
-            if self.slot_step[s] >= self.num_steps:
+            if self.slot_step[s] >= self.slot_budget[s]:
                 done_slots.append(int(s))
         if done_slots:
             self._harvest(done_slots)
@@ -212,26 +295,33 @@ class DiffusionServingEngine:
         return finished
 
     def _harvest(self, done_slots: List[int]) -> None:
-        """Fill ``req.latents`` for finished slots.  Synchronous by default
-        (one blocking device->host fetch per completion step); the async
-        sharded engine overrides this with a deferred device-side copy so
-        the dispatch loop never blocks on the in-flight step."""
+        """Fill ``req.latents`` and ``req.cache`` (the request-scoped cache
+        counters) for finished slots.  Synchronous by default (one blocking
+        device->host fetch per completion step); the async sharded engine
+        overrides this with deferred device-side copies so the dispatch
+        loop never blocks on the in-flight step."""
         x_host = np.asarray(self.x)
+        acc_host = {k: np.asarray(v) for k, v in self.slot_acc.items()}
         for s in done_slots:
-            self.slots[s].latents = x_host[s].copy()
+            req = self.slots[s]
+            req.latents = x_host[s].copy()
+            req.cache = {k: float(v[s]) for k, v in acc_host.items()}
 
     def run(self, requests: Union[List[DiffusionRequest], RequestQueue],
-            *, lockstep: bool = False, max_steps: int = 100_000
-            ) -> List[DiffusionRequest]:
+            *, lockstep: bool = False, sched_policy: str = "fifo",
+            max_engine_steps: int = 100_000) -> List[DiffusionRequest]:
         """Drive a whole trace.  ``lockstep=False`` (continuous batching)
         admits arrived requests into free slots every step; ``lockstep=True``
         is the fixed-batch baseline — a new wave is admitted only once every
-        slot is free (the classic ``sample()``-per-batch serving pattern)."""
+        slot is free (the classic ``sample()``-per-batch serving pattern).
+        ``sched_policy`` ("fifo" or "sjf") picks the admission order among
+        arrived requests when ``requests`` is a plain list; pass a
+        ``RequestQueue`` to control the policy yourself."""
         queue = (requests if isinstance(requests, RequestQueue)
-                 else RequestQueue(list(requests)))
+                 else RequestQueue(list(requests), policy=sched_policy))
         finished: List[DiffusionRequest] = []
         while (queue or any(r is not None for r in self.slots)):
-            if self.clock >= max_steps:
+            if self.clock >= max_engine_steps:
                 break
             if not lockstep or all(r is None for r in self.slots):
                 while (len(self.free_slots())

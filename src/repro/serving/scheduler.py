@@ -1,32 +1,100 @@
-"""Request scheduling for the diffusion serving engine: a FIFO admission
-queue gated on arrival time, plus Poisson arrival-trace generation for
-benchmarks.
+"""Request scheduling for the diffusion serving engine: per-request
+``SamplingPlan``s (heterogeneous DDIM step counts + guidance scales), an
+arrival-gated queue with pluggable scheduling policies (FIFO and
+shortest-job-first), plus Poisson arrival-trace generation for benchmarks.
 
 Time is measured in *engine steps* (one ``serve_step`` = one clock tick):
 arrival traces, admission decisions and request latencies all live on that
 discrete clock, which makes lockstep-vs-continuous comparisons exact and
 hardware-independent (wall-clock throughput is reported separately by the
 benchmark from the measured per-step time).
+
+A ``SamplingPlan`` is the request's *denoising schedule*: its DDIM step
+budget and guidance scale, from which the per-slot ``(t, t_prev)`` timestep
+rows of the engine's ``(S, max_steps)`` plan tables are derived.  Plans are
+per-request state, not engine config — one engine batch mixes 20-step and
+50-step jobs at different guidance scales, and each finished request still
+replays bitwise against a solo ``sample()`` run under its own plan.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import List, Optional
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+SCHED_POLICIES = ("fifo", "sjf")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingPlan:
+    """One request's denoising schedule: DDIM step budget + CFG guidance.
+
+    ``rows(max_steps, num_train_steps)`` derives the padded per-slot
+    timestep rows the serving engines keep device-resident: entry ``i`` of
+    the ``ts`` row is exactly the ``t`` that ``diffusion.sampler.sample()``
+    uses on its ``i``-th step under the same ``num_steps`` (and ``ts_prev``
+    likewise, ``-1`` marking the final x0-prediction step), so engine
+    requests stay bitwise-replayable solo."""
+    num_steps: int
+    guidance_scale: float = 4.0
+
+    def __post_init__(self):
+        if self.num_steps < 1:
+            raise ValueError(f"SamplingPlan needs num_steps >= 1, got "
+                             f"{self.num_steps}")
+
+    def rows(self, max_steps: int,
+             num_train_steps: int = 1000) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded ``(ts, ts_prev)`` rows, each ``(max_steps,)`` int32.
+        Positions past ``num_steps`` are padding (``t=0, t_prev=-1``) that
+        an active slot never reads — the engine clips its step index to the
+        slot's budget.
+
+        When ``num_steps`` divides ``num_train_steps`` the last executed
+        step has ``t_prev = -1`` (the x0-prediction step).  For
+        non-divisor budgets ``ddim_timesteps`` yields more than
+        ``num_steps`` entries and — exactly like ``sample()``'s
+        ``range(num_steps)`` loop, which this row layout must replay
+        bitwise — the final entries past the budget are truncated, so the
+        last executed step ends at a small positive timestep instead of an
+        explicit x0 prediction."""
+        if self.num_steps > max_steps:
+            raise ValueError(
+                f"plan has num_steps={self.num_steps} > the engine's "
+                f"max_steps={max_steps} table width")
+        # same arithmetic as diffusion.schedule.ddim_timesteps (numpy here
+        # so queue/trace code never imports jax)
+        stride = num_train_steps // self.num_steps
+        ts_full = np.arange(num_train_steps - 1, -1, -stride, dtype=np.int32)
+        prev_full = np.append(ts_full[1:], np.int32(-1))
+        ts = np.zeros((max_steps,), np.int32)
+        prev = np.full((max_steps,), -1, np.int32)
+        ts[:self.num_steps] = ts_full[:self.num_steps]
+        prev[:self.num_steps] = prev_full[:self.num_steps]
+        return ts, prev
 
 
 @dataclasses.dataclass(eq=False)
 class DiffusionRequest:
     """One image-generation request.  ``seed`` determines the initial noise
     (so an engine run can be replayed solo for parity checks); ``label`` is
-    the class condition."""
+    the class condition.  ``num_steps``/``guidance_scale`` are the request's
+    sampling plan — ``None`` means "use the engine's default", and the
+    engine writes the resolved values back at admission so a finished
+    request always records the exact plan it ran under."""
     rid: int
     label: int
     seed: int = 0
     arrival_step: int = 0
+    # sampling plan (None = engine default, resolved at admission)
+    num_steps: Optional[int] = None
+    guidance_scale: Optional[float] = None
     # filled by the engine
     latents: Optional[np.ndarray] = None
+    cache: Optional[Dict] = None      # request-scoped cache counters
     admit_step: int = -1
     finish_step: int = -1
     done: bool = False
@@ -38,39 +106,106 @@ class DiffusionRequest:
                 if self.finish_step >= 0 else -1)
 
 
-class RequestQueue:
-    """FIFO queue gated on arrival time: ``pop_arrived(now)`` hands out the
-    oldest request whose arrival_step has passed, preserving submission
-    order (no request overtakes an earlier arrival)."""
+def _arrival_key(req: DiffusionRequest) -> Tuple[int, int]:
+    return (req.arrival_step, req.rid)
 
-    def __init__(self, requests: Optional[List[DiffusionRequest]] = None):
-        self._q: List[DiffusionRequest] = sorted(
-            requests or [], key=lambda r: (r.arrival_step, r.rid))
+
+class RequestQueue:
+    """Arrival-gated admission queue with a pluggable scheduling policy.
+
+    Requests become *eligible* once their ``arrival_step`` has passed; among
+    eligible requests the policy picks the next one to hand out:
+
+    - ``"fifo"`` (default): oldest ``(arrival_step, rid)`` first — no
+      request overtakes an earlier arrival;
+    - ``"sjf"``: shortest job first — smallest ``num_steps`` budget among
+      the eligible requests (requests without an explicit plan sort as
+      longest), ties broken deterministically by ``(arrival_step, rid)``.
+
+    Internally: not-yet-arrived requests live in a list kept sorted
+    *descending* by ``(arrival_step, rid)`` (``push`` is a single
+    ``bisect.insort``, and draining the next arrival is an O(1) pop from
+    the tail — no full re-sort per insert); arrived requests move to a
+    policy-keyed ready heap, so ``pop_arrived`` is O(1) for the common
+    already-drained FIFO case and O(log n) otherwise."""
+
+    def __init__(self, requests: Optional[List[DiffusionRequest]] = None,
+                 *, policy: str = "fifo"):
+        if policy not in SCHED_POLICIES:
+            raise ValueError(f"unknown scheduling policy {policy!r}; "
+                             f"expected one of {SCHED_POLICIES}")
+        self.policy = policy
+        self._pending: List[DiffusionRequest] = sorted(
+            requests or [], key=_arrival_key, reverse=True)
+        # heap entries are (key..., seq, req): the monotonic seq breaks any
+        # residual tie (e.g. a retry sharing its original's (arrival, rid))
+        # before comparison ever reaches the non-orderable request object
+        self._ready: List[Tuple] = []
+        self._seq = 0
+
+    def _ready_key(self, req: DiffusionRequest) -> Tuple:
+        if self.policy == "sjf":
+            steps = (req.num_steps if req.num_steps is not None
+                     else float("inf"))
+            return (steps, req.arrival_step, req.rid)
+        return (req.arrival_step, req.rid)
 
     def push(self, req: DiffusionRequest) -> None:
-        self._q.append(req)
-        self._q.sort(key=lambda r: (r.arrival_step, r.rid))
+        # descending order = ascending order of the negated key
+        bisect.insort(self._pending, req,
+                      key=lambda r: (-r.arrival_step, -r.rid))
+
+    def _drain(self, now: int) -> None:
+        while self._pending and self._pending[-1].arrival_step <= now:
+            req = self._pending.pop()
+            heapq.heappush(self._ready,
+                           self._ready_key(req) + (self._seq, req))
+            self._seq += 1
 
     def peek_arrived(self, now: int) -> Optional[DiffusionRequest]:
-        if self._q and self._q[0].arrival_step <= now:
-            return self._q[0]
-        return None
+        self._drain(now)
+        return self._ready[0][-1] if self._ready else None
 
     def pop_arrived(self, now: int) -> Optional[DiffusionRequest]:
-        if self._q and self._q[0].arrival_step <= now:
-            return self._q.pop(0)
-        return None
+        self._drain(now)
+        return heapq.heappop(self._ready)[-1] if self._ready else None
 
     def __len__(self) -> int:
-        return len(self._q)
+        return len(self._pending) + len(self._ready)
 
     def __bool__(self) -> bool:
-        return bool(self._q)
+        return bool(self._pending) or bool(self._ready)
+
+
+def summarize_by_steps(done: List[DiffusionRequest]) -> Dict[str, Dict]:
+    """Group finished requests by their resolved step budget: request
+    count and p50/p95 latency per budget, plus the cache ratio aggregated
+    from the requests' request-scoped counters when every request in the
+    group carries them (``req.cache``).  Shared by the serving launcher's
+    summary and the heterogeneous-workload benchmark."""
+    out: Dict[str, Dict] = {}
+    for n in sorted({r.num_steps for r in done}):
+        grp = [r for r in done if r.num_steps == n]
+        lats = np.array([r.latency_steps for r in grp], np.float64)
+        row = {"requests": len(grp),
+               "latency_steps_p50": float(np.percentile(lats, 50)),
+               "latency_steps_p95": float(np.percentile(lats, 95))}
+        if all(r.cache is not None for r in grp):
+            skipped = sum(r.cache["blocks_skipped"] for r in grp)
+            computed = sum(r.cache["blocks_computed"] for r in grp)
+            tot = skipped + computed
+            row["cache_ratio"] = skipped / tot if tot else 0.0
+            row["steps_reused"] = sum(r.cache["steps_reused"] for r in grp)
+        out[str(n)] = row
+    return out
 
 
 def poisson_trace(num_requests: int, rate: float, *,
                   seed: Optional[int] = None, key=None,
-                  num_classes: int = 10) -> List[DiffusionRequest]:
+                  num_classes: int,
+                  steps_mix: Optional[Sequence[int]] = None,
+                  guidance_mix: Optional[Sequence[float]] = None
+                  ) -> List[DiffusionRequest]:
     """Poisson arrival process: exponential inter-arrival times with mean
     ``1 / rate`` (requests per engine step), floored onto the step clock.
 
@@ -78,7 +213,14 @@ def poisson_trace(num_requests: int, rate: float, *,
     is required — there is deliberately no default, so every call site pins
     its trace explicitly and benchmark runs replay the identical request
     stream across topologies (single-device vs sharded sweeps).  Labels and
-    per-request noise seeds are drawn deterministically from it."""
+    per-request noise seeds are drawn deterministically from it.
+
+    ``num_classes`` is required and must come from the model config at the
+    call site (no hard-coded default — an out-of-range label would index
+    past the class-embedding table).  ``steps_mix``/``guidance_mix`` make
+    the trace heterogeneous: each request's plan is drawn uniformly from
+    the mix (``None`` leaves the plan fields unset, i.e. engine defaults).
+    """
     if (seed is None) == (key is None):
         raise TypeError(
             "poisson_trace: pass exactly one of seed= (int) or key= "
@@ -90,8 +232,13 @@ def poisson_trace(num_requests: int, rate: float, *,
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(scale=1.0 / max(rate, 1e-9), size=num_requests)
     arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)
-    return [DiffusionRequest(rid=i,
-                             label=int(rng.integers(0, num_classes)),
-                             seed=int(1000 + i),
-                             arrival_step=int(arrivals[i]))
+    return [DiffusionRequest(
+                rid=i,
+                label=int(rng.integers(0, num_classes)),
+                seed=int(1000 + i),
+                arrival_step=int(arrivals[i]),
+                num_steps=(int(rng.choice(np.asarray(steps_mix)))
+                           if steps_mix else None),
+                guidance_scale=(float(rng.choice(np.asarray(guidance_mix)))
+                                if guidance_mix else None))
             for i in range(num_requests)]

@@ -62,6 +62,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.runner import CachedDiT
 from repro.distributed.sharding import (ShardingCtx, make_rules,
                                         param_shardings,
+                                        serve_plan_shardings,
                                         serve_state_shardings, spec_for,
                                         use_sharding)
 from repro.serving.diffusion_engine import DiffusionServingEngine
@@ -89,6 +90,7 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
     def __init__(self, runner: CachedDiT, params, *, max_slots: int,
                  mesh: Optional[Mesh] = None, num_steps: int = 50,
                  guidance_scale: float = 4.0, num_train_steps: int = 1000,
+                 max_steps: Optional[int] = None,
                  async_admission: bool = True,
                  numerics_check: Optional[bool] = None):
         self.mesh = mesh if mesh is not None else make_serving_mesh()
@@ -97,7 +99,8 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         self.async_admission = async_admission
         super().__init__(runner, params, max_slots=max_slots,
                          num_steps=num_steps, guidance_scale=guidance_scale,
-                         num_train_steps=num_train_steps)
+                         num_train_steps=num_train_steps,
+                         max_steps=max_steps)
         # default: self-check exactly the regime where the partitioner has
         # been caught miscompiling (a model axis wider than one device);
         # model==1 topologies are covered bitwise by the parity tests
@@ -116,58 +119,77 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         self._unplaced_params = self.params
 
         # shardings: weights via the model's ParamDef tree, state via the
-        # kind="serve" cache-state tables, latents slot-major over `data`
+        # kind="serve" cache-state tables, latents + sampling-plan tables
+        # slot-major over `data`
         self._params_sh = param_shardings(self.runner.model.param_defs(),
                                           ctx)
         self._state_sh = serve_state_shardings(self.state, ctx)
+        self._plan_sh = serve_plan_shardings(self.plan, ctx)
+        self._slot_acc_sh = {
+            k: NamedSharding(mesh, spec_for((self.S,), ("slot",), ctx))
+            for k in self.slot_acc}
         x_spec = spec_for(self.x.shape, ("slot", None, None, None), ctx)
         self._x_sh = NamedSharding(mesh, x_spec)
         # one slot's row = the x spec minus the slot axis: admission noise
         # lands with this spec so the staged write matches the resident
         # layout (no resharding inside the admission program)
         self._slot_row_sh = NamedSharding(mesh, P(*x_spec[1:]))
+        # one slot's plan row likewise: the ts-table spec minus the slot
+        # axis — admission plan rows land through the same per-slot
+        # device_put mechanism as the noise
+        self._plan_row_sh = NamedSharding(
+            mesh, P(*self._plan_sh["ts"].spec[1:]))
         self._acc_sh = {k: rep for k in self.acc}
 
         self.params = jax.device_put(self.params, self._params_sh)
         self.state = jax.device_put(self.state, self._state_sh)
+        self.plan = jax.device_put(self.plan, self._plan_sh)
         self.x = jax.device_put(self.x, self._x_sh)
         self.acc = jax.device_put(self.acc, self._acc_sh)
+        self.slot_acc = jax.device_put(self.slot_acc, self._slot_acc_sh)
         # schedule constants ride along replicated so the jitted programs
         # never see mixed device commitments
-        self.ts = jax.device_put(self.ts, rep)
-        self.ts_prev = jax.device_put(self.ts_prev, rep)
         self.sched = jax.device_put(self.sched, rep)
 
         # trace under the serve sharding ctx so `constrain` calls in the
         # model blocks and the fastcache scan carry bind to this mesh
-        def step_fn(params, state, x, step_idx, labels, active, acc):
+        def step_fn(params, state, x, plan, step_idx, labels, active, acc,
+                    slot_acc):
             with use_sharding(mesh, rules):
-                return self._serve_step_impl(params, state, x, step_idx,
-                                             labels, active, acc)
+                return self._serve_step_impl(params, state, x, plan,
+                                             step_idx, labels, active, acc,
+                                             slot_acc)
 
         def reset_fn(state, rows):
             with use_sharding(mesh, rules):
                 return self.runner.reset_slot(state, rows)
 
-        def admit_fn(state, x, rows, slot, noise):
+        def admit_fn(state, x, plan, slot_acc, rows, slot, noise, ts_row,
+                     ts_prev_row, guid):
             with use_sharding(mesh, rules):
-                return self._admit_impl(state, x, rows, slot, noise)
+                return self._admit_impl(state, x, plan, slot_acc, rows,
+                                        slot, noise, ts_row, ts_prev_row,
+                                        guid)
 
         self._step = jax.jit(
             step_fn,
             in_shardings=(self._params_sh, self._state_sh, self._x_sh,
-                          rep, rep, rep, self._acc_sh),
-            out_shardings=(self._x_sh, self._state_sh, self._acc_sh),
-            donate_argnums=(1, 2, 6))
+                          self._plan_sh, rep, rep, rep, self._acc_sh,
+                          self._slot_acc_sh),
+            out_shardings=(self._x_sh, self._state_sh, self._acc_sh,
+                           self._slot_acc_sh),
+            donate_argnums=(1, 2, 7, 8))
         self._reset = jax.jit(
             reset_fn, in_shardings=(self._state_sh, rep),
             out_shardings=self._state_sh, donate_argnums=(0,))
         self._admit = jax.jit(
             admit_fn,
-            in_shardings=(self._state_sh, self._x_sh, rep, rep,
-                          self._slot_row_sh),
-            out_shardings=(self._state_sh, self._x_sh),
-            donate_argnums=(0, 1))
+            in_shardings=(self._state_sh, self._x_sh, self._plan_sh,
+                          self._slot_acc_sh, rep, rep, self._slot_row_sh,
+                          self._plan_row_sh, self._plan_row_sh, rep),
+            out_shardings=(self._state_sh, self._x_sh, self._plan_sh,
+                           self._slot_acc_sh),
+            donate_argnums=(0, 1, 2, 3))
 
     # -- async admission / harvest --------------------------------------
 
@@ -177,25 +199,39 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         # program consumes it without resharding
         return jax.device_put(self.request_noise(req), self._slot_row_sh)
 
+    def _staged_plan(self, ts_row, ts_prev_row):
+        # plan rows land through the same per-slot device_put mechanism as
+        # the admission noise: staged with one slot's table-row spec while
+        # the in-flight step runs, consumed by _admit without resharding
+        return (jax.device_put(jnp.asarray(ts_row), self._plan_row_sh),
+                jax.device_put(jnp.asarray(ts_prev_row), self._plan_row_sh))
+
     def _harvest(self, done_slots: List[int]) -> None:
         if not self.async_admission:
             return super()._harvest(done_slots)
-        # deferred: enqueue a device-side row copy (the donated next step
-        # cannot clobber it — the runtime orders the copy before reuse) and
-        # materialize once after the trace drains
+        # deferred: enqueue device-side row copies (the donated next step
+        # cannot clobber them — the runtime orders the copy before reuse)
+        # and materialize once after the trace drains
         for s in done_slots:
             self.slots[s].latents = self.x[s]
+            self.slots[s].cache = {k: v[s]
+                                   for k, v in self.slot_acc.items()}
 
     def run(self, requests: Union[List[DiffusionRequest], RequestQueue],
-            *, lockstep: bool = False, max_steps: int = 100_000
-            ) -> List[DiffusionRequest]:
+            *, lockstep: bool = False, sched_policy: str = "fifo",
+            max_engine_steps: int = 100_000) -> List[DiffusionRequest]:
         finished = super().run(requests, lockstep=lockstep,
-                               max_steps=max_steps)
+                               sched_policy=sched_policy,
+                               max_engine_steps=max_engine_steps)
         if self.async_admission:
-            # the run's single sync point: fetch all deferred latents
+            # the run's single sync point: fetch all deferred latents and
+            # request-scoped cache counters
             for r in finished:
                 if isinstance(r.latents, jax.Array):
                     r.latents = np.asarray(r.latents).copy()
+                if r.cache is not None:
+                    r.cache = {k: float(np.asarray(v))
+                               for k, v in r.cache.items()}
         return finished
 
     # -- numerics self-check --------------------------------------------
@@ -212,8 +248,8 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         ref_eng = DiffusionServingEngine(
             self.runner, self._unplaced_params, max_slots=self.S,
             num_steps=self.num_steps, guidance_scale=self.guidance_scale,
-            num_train_steps=self.num_train_steps)
-        eff = 2 * self.S if self.use_cfg else self.S
+            num_train_steps=self.num_train_steps, max_steps=self.max_steps)
+        eff = 2 * self.S          # CFG rows are always materialized
         x0 = jax.random.normal(jax.random.PRNGKey(0), self.x.shape,
                                jnp.float32)
         labels = jnp.zeros((self.S,), jnp.int32)
@@ -222,19 +258,23 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         got = (self.params,
                jax.device_put(self.runner.init_state(eff), self._state_sh),
                jax.device_put(x0, self._x_sh))
-        ref_acc = self._zero_acc()
+        ref_acc, ref_sacc = self._zero_acc(), ref_eng._zero_slot_acc()
         got_acc = jax.device_put(self._zero_acc(), self._acc_sh)
+        got_sacc = jax.device_put(self._zero_slot_acc(), self._slot_acc_sh)
         flat = getattr(jax.tree, "flatten_with_path", None) \
             or jax.tree_util.tree_flatten_with_path
         for step in range(2):
             idx = jnp.full((self.S,), step, jnp.int32)
-            rx, rs, ref_acc = ref_eng._step(ref[0], ref[1], ref[2], idx,
-                                            labels, active, ref_acc)
-            gx, gs, got_acc = self._step(got[0], got[1], got[2], idx,
-                                         labels, active, got_acc)
+            rx, rs, ref_acc, ref_sacc = ref_eng._step(
+                ref[0], ref[1], ref[2], ref_eng.plan, idx, labels, active,
+                ref_acc, ref_sacc)
+            gx, gs, got_acc, got_sacc = self._step(
+                got[0], got[1], got[2], self.plan, idx, labels, active,
+                got_acc, got_sacc)
             ref, got = (ref_eng.params, rs, rx), (self.params, gs, gx)
-            for (path, a), b in zip(flat((rx, rs, ref_acc))[0],
-                                    jax.tree.leaves((gx, gs, got_acc))):
+            for (path, a), b in zip(flat((rx, rs, ref_acc, ref_sacc))[0],
+                                    jax.tree.leaves((gx, gs, got_acc,
+                                                     got_sacc))):
                 name = jax.tree_util.keystr(path)
                 a, b = np.asarray(a), np.asarray(b)
                 if np.issubdtype(a.dtype, np.floating):

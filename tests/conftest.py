@@ -21,3 +21,26 @@ def f32_cfg(cfg, *, big_capacity: bool = True):
         cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
                                                   capacity_factor=8.0))
     return cfg
+
+
+def assert_solo_replay_parity(eng, model, params, policy, done):
+    """Serving contract shared by the single-device and sharded suites:
+    every finished request must match a solo ``sample()`` replay under ITS
+    OWN resolved (num_steps, guidance_scale) bitwise.  ``params`` must be
+    the UNPLACED tree (sharded engines hold device_put copies whose
+    committed shardings would leak into the solo jit)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.configs.base import FastCacheConfig
+    from repro.core import CachedDiT
+    from repro.diffusion import sample
+    for r in done:
+        solo = CachedDiT(model, FastCacheConfig(), policy=policy)
+        x, _ = sample(solo, params, jax.random.PRNGKey(0), batch=1,
+                      labels=jnp.array([r.label]), num_steps=r.num_steps,
+                      guidance_scale=r.guidance_scale,
+                      x_init=np.asarray(eng.request_noise(r))[None])
+        np.testing.assert_array_equal(
+            np.asarray(x[0]), np.asarray(r.latents),
+            err_msg=f"policy={policy} rid={r.rid} plan=({r.num_steps}, "
+                    f"{r.guidance_scale}) admit_step={r.admit_step}")

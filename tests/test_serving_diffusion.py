@@ -1,8 +1,10 @@
 """Continuous-batching diffusion serving: mid-flight admission must be
-invisible — an admitted request reproduces its solo run bitwise, resident
-requests keep their cache decisions, and per-slot gate/cache state is fully
-reset on admission and on free.  Plus scheduler/queue semantics and the
-engine's active-slot-only stats convention."""
+invisible — an admitted request reproduces its solo run bitwise *under its
+own sampling plan* (per-request DDIM step budget + guidance scale),
+resident requests keep their cache decisions, and per-slot gate/cache
+state is fully reset on admission and on free.  Plus scheduler/queue
+semantics (FIFO no-overtake, SJF ordering, deterministic tie-breaks) and
+the engine's active-slot-only stats convention."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,8 +16,8 @@ from repro.core import CachedDiT, POLICIES, summarize_stats
 from repro.diffusion import sample
 from repro.models import build_model
 from repro.serving import (DiffusionRequest, DiffusionServingEngine,
-                           RequestQueue, poisson_trace)
-from tests.conftest import f32_cfg
+                           RequestQueue, SamplingPlan, poisson_trace)
+from tests.conftest import assert_solo_replay_parity, f32_cfg
 
 pytestmark = pytest.mark.serving
 
@@ -30,10 +32,12 @@ def dit():
     return cfg, model, params
 
 
-def _engine(model, params, policy, *, slots=2, guidance=4.0):
+def _engine(model, params, policy, *, slots=2, guidance=4.0,
+            max_steps=None):
     runner = CachedDiT(model, FastCacheConfig(), policy=policy)
     return DiffusionServingEngine(runner, params, max_slots=slots,
-                                  num_steps=STEPS, guidance_scale=guidance)
+                                  num_steps=STEPS, guidance_scale=guidance,
+                                  max_steps=max_steps)
 
 
 def _staggered_trace():
@@ -42,6 +46,20 @@ def _staggered_trace():
     return [DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0),
             DiffusionRequest(rid=1, label=2, seed=11, arrival_step=2),
             DiffusionRequest(rid=2, label=3, seed=12, arrival_step=3)]
+
+
+def _mixed_plan_trace():
+    """Heterogeneous plans admitted mid-flight: a 7-step guided request
+    next to a 3-step unguided one, plus a 5-step mid-guidance request that
+    queues until a slot frees — one batch, three different schedules."""
+    return [DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0,
+                             num_steps=7, guidance_scale=4.0),
+            DiffusionRequest(rid=1, label=2, seed=11, arrival_step=2,
+                             num_steps=3, guidance_scale=1.0),
+            DiffusionRequest(rid=2, label=3, seed=12, arrival_step=3,
+                             num_steps=5, guidance_scale=2.0)]
+
+
 
 
 # ---------------------------------------------------------------------------
@@ -56,21 +74,48 @@ def test_midflight_admission_parity(dit, policy):
     eng = _engine(model, params, policy)
     done = eng.run(_staggered_trace())
     assert len(done) == 3
+    # requests without explicit plans resolve to the engine defaults
+    assert all(r.num_steps == STEPS and r.guidance_scale == 4.0
+               for r in done)
+    assert_solo_replay_parity(eng, model, params, policy, done)
+    assert all(r.latency_steps >= STEPS for r in done)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_mixed_plan_batch_parity(dit, policy):
+    """Tentpole: one batch mixes per-request step budgets AND guidance
+    scales (7-step g=4, 3-step g=1, 5-step g=2; the last admitted
+    mid-flight next to slots running different plans) — every finished
+    request must be bitwise-equal to its solo replay under its own plan,
+    for every cache policy."""
+    cfg, model, params = dit
+    eng = _engine(model, params, policy, max_steps=7)
+    done = eng.run(_mixed_plan_trace())
+    assert len(done) == 3
+    # each request finishes after ITS plan's budget, not the engine default
+    assert {r.rid: r.finish_step - r.admit_step for r in done} == \
+        {0: 7, 1: 3, 2: 5}
+    assert_solo_replay_parity(eng, model, params, policy, done)
+    # request-scoped cache counters were harvested per completion
     for r in done:
-        solo_runner = CachedDiT(model, FastCacheConfig(), policy=policy)
-        x, _ = sample(solo_runner, params, jax.random.PRNGKey(0), batch=1,
-                      labels=jnp.array([r.label]), num_steps=STEPS,
-                      guidance_scale=4.0,
-                      x_init=np.asarray(eng.request_noise(r))[None])
-        np.testing.assert_array_equal(
-            np.asarray(x[0]), r.latents,
-            err_msg=f"policy={policy} rid={r.rid} "
-                    f"admit_step={r.admit_step}")
-        assert r.latency_steps >= STEPS
+        assert r.cache is not None
+        assert r.cache["blocks_computed"] > 0
+
+
+def test_plan_exceeding_table_width_is_rejected(dit):
+    cfg, model, params = dit
+    eng = _engine(model, params, "nocache")        # max_steps == STEPS
+    with pytest.raises(ValueError, match="max_steps"):
+        eng.add_request(DiffusionRequest(rid=0, label=1, seed=1,
+                                         num_steps=STEPS + 1))
+    with pytest.raises(ValueError):
+        SamplingPlan(0)
 
 
 def test_no_cfg_engine_matches_solo(dit):
-    """guidance=1.0 path: single-stream slots (no CFG pair)."""
+    """guidance=1.0 engine: CFG rows are still materialized, but the
+    per-sample blend selects eps_cond outright, so every request stays
+    bitwise-equal to a solo run on the static no-CFG sample() path."""
     cfg, model, params = dit
     eng = _engine(model, params, "fastcache", guidance=1.0)
     done = eng.run(_staggered_trace())
@@ -190,15 +235,29 @@ def test_auto_fused_gate_backend_default(dit):
 # ---------------------------------------------------------------------------
 
 def test_poisson_trace_is_sorted_and_deterministic():
-    a = poisson_trace(20, 0.5, seed=7)
-    b = poisson_trace(20, 0.5, seed=7)
+    a = poisson_trace(20, 0.5, seed=7, num_classes=10)
+    b = poisson_trace(20, 0.5, seed=7, num_classes=10)
     arr = [r.arrival_step for r in a]
     assert arr == sorted(arr)
     assert arr == [r.arrival_step for r in b]
     assert [r.seed for r in a] == [r.seed for r in b]
     # higher rate => denser arrivals
-    dense = poisson_trace(20, 5.0, seed=7)
+    dense = poisson_trace(20, 5.0, seed=7, num_classes=10)
     assert dense[-1].arrival_step <= a[-1].arrival_step
+
+
+def test_poisson_trace_draws_plans_from_mix():
+    a = poisson_trace(40, 0.5, seed=7, num_classes=10,
+                      steps_mix=(20, 50), guidance_mix=(1.0, 4.0))
+    assert {r.num_steps for r in a} == {20, 50}
+    assert {r.guidance_scale for r in a} == {1.0, 4.0}
+    b = poisson_trace(40, 0.5, seed=7, num_classes=10,
+                      steps_mix=(20, 50), guidance_mix=(1.0, 4.0))
+    assert [(r.num_steps, r.guidance_scale) for r in a] == \
+        [(r.num_steps, r.guidance_scale) for r in b]
+    # no mix -> plan fields stay unset (engine defaults apply)
+    c = poisson_trace(4, 0.5, seed=7, num_classes=10)
+    assert all(r.num_steps is None and r.guidance_scale is None for r in c)
 
 
 def test_request_queue_gates_on_arrival():
@@ -209,6 +268,102 @@ def test_request_queue_gates_on_arrival():
     assert q.peek_arrived(2) is None          # rid 1 not arrived yet
     assert q.pop_arrived(4).rid == 1
     assert not q
+
+
+def test_fifo_no_overtake_even_with_late_push():
+    """FIFO hands out strictly by (arrival_step, rid) — a request pushed
+    late but with an earlier arrival still pops first, and nothing
+    overtakes an earlier arrival that is already eligible."""
+    q = RequestQueue([DiffusionRequest(rid=2, label=0, arrival_step=5),
+                      DiffusionRequest(rid=1, label=0, arrival_step=3)])
+    assert q.peek_arrived(6).rid == 1
+    # late push of an EARLIER arrival (e.g. a retried request)
+    q.push(DiffusionRequest(rid=0, label=0, arrival_step=1))
+    assert [q.pop_arrived(6).rid for _ in range(3)] == [0, 1, 2]
+    assert q.pop_arrived(6) is None
+
+
+def test_sjf_orders_by_step_budget_under_equal_arrivals():
+    """SJF pops the smallest step budget among ARRIVED requests; arrival
+    gating still applies (a short job that hasn't arrived can't jump)."""
+    q = RequestQueue([
+        DiffusionRequest(rid=0, label=0, arrival_step=0, num_steps=50),
+        DiffusionRequest(rid=1, label=0, arrival_step=0, num_steps=20),
+        DiffusionRequest(rid=2, label=0, arrival_step=4, num_steps=5),
+    ], policy="sjf")
+    assert q.pop_arrived(0).rid == 1          # shortest arrived job
+    assert q.pop_arrived(0).rid == 0          # rid2 not arrived yet
+    assert q.pop_arrived(0) is None
+    assert q.pop_arrived(4).rid == 2
+
+
+def test_sjf_tie_breaks_are_deterministic():
+    """Equal budgets fall back to (arrival_step, rid); requests without an
+    explicit plan sort as longest."""
+    q = RequestQueue([
+        DiffusionRequest(rid=3, label=0, arrival_step=0),  # no plan: longest
+        DiffusionRequest(rid=2, label=0, arrival_step=0, num_steps=20),
+        DiffusionRequest(rid=1, label=0, arrival_step=0, num_steps=20),
+        DiffusionRequest(rid=0, label=0, arrival_step=1, num_steps=20),
+    ], policy="sjf")
+    assert [q.pop_arrived(2).rid for _ in range(4)] == [1, 2, 0, 3]
+
+
+def test_unknown_sched_policy_rejected():
+    with pytest.raises(ValueError, match="scheduling policy"):
+        RequestQueue([], policy="lifo")
+
+
+@pytest.mark.parametrize("policy", ("fifo", "sjf"))
+def test_queue_tolerates_duplicate_keys(policy):
+    """Two requests sharing (arrival_step, rid) — e.g. a retry pushed while
+    the original is still queued — must not crash heap ordering (requests
+    are not comparable; the internal seq counter breaks the tie)."""
+    a = DiffusionRequest(rid=1, label=0, arrival_step=0, num_steps=20)
+    b = DiffusionRequest(rid=1, label=0, arrival_step=0, num_steps=20)
+    q = RequestQueue([a], policy=policy)
+    q.push(b)
+    assert {q.pop_arrived(0), q.pop_arrived(0)} == {a, b}
+    assert q.pop_arrived(0) is None
+
+
+def test_sampling_plan_rows_match_solo_schedule():
+    """A plan's padded ts/ts_prev rows agree with diffusion.schedule's DDIM
+    timestep math for its own budget; padding is never a valid step."""
+    from repro.diffusion import schedule as sch
+    plan = SamplingPlan(5, 2.0)
+    ts, prev = plan.rows(8, num_train_steps=1000)
+    ref = np.asarray(sch.ddim_timesteps(1000, 5))
+    np.testing.assert_array_equal(ts[:5], ref[:5])
+    np.testing.assert_array_equal(prev[:4], ref[1:5])
+    assert prev[4] == ref[5] if len(ref) > 5 else prev[4] == -1
+    np.testing.assert_array_equal(ts[5:], 0)
+    np.testing.assert_array_equal(prev[5:], -1)
+    with pytest.raises(ValueError, match="max_steps"):
+        SamplingPlan(9).rows(8)
+
+
+def test_engine_run_respects_sjf_policy(dit):
+    """End-to-end: with one slot and a long resident, SJF admits the short
+    queued job before the long one; FIFO preserves arrival order."""
+    cfg, model, params = dit
+
+    def trace():
+        return [DiffusionRequest(rid=0, label=1, seed=30, arrival_step=0,
+                                 num_steps=4),
+                DiffusionRequest(rid=1, label=2, seed=31, arrival_step=1,
+                                 num_steps=5),
+                DiffusionRequest(rid=2, label=3, seed=32, arrival_step=2,
+                                 num_steps=2)]
+
+    order = {}
+    for sched in ("fifo", "sjf"):
+        eng = _engine(model, params, "nocache", slots=1, max_steps=5)
+        done = eng.run(trace(), sched_policy=sched)
+        order[sched] = [r.rid for r in sorted(done,
+                                              key=lambda r: r.admit_step)]
+    assert order["fifo"] == [0, 1, 2]
+    assert order["sjf"] == [0, 2, 1]
 
 
 # ---------------------------------------------------------------------------

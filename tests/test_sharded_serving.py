@@ -27,7 +27,7 @@ from repro.models import build_model
 from repro.serving import (DiffusionRequest, DiffusionServingEngine,
                            ShardedDiffusionEngine, make_serving_mesh,
                            poisson_trace)
-from tests.conftest import f32_cfg
+from tests.conftest import assert_solo_replay_parity, f32_cfg
 
 pytestmark = [pytest.mark.serving, pytest.mark.distributed]
 
@@ -48,13 +48,19 @@ def dit():
 
 
 def _staggered_trace():
-    """Mid-flight admission AND straggler warm-up: r0/r1 start, r2 and r3
-    queue and are admitted next to warm residents once slots free."""
-    return [DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0),
-            DiffusionRequest(rid=1, label=2, seed=11, arrival_step=1),
-            DiffusionRequest(rid=2, label=3, seed=12, arrival_step=2),
+    """Mid-flight admission AND straggler warm-up AND heterogeneous
+    sampling plans: r0/r1 start (different step budgets + guidance), r2-r4
+    queue and are admitted next to warm residents running different plans
+    once slots free (r3 keeps the engine defaults)."""
+    return [DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0,
+                             num_steps=4, guidance_scale=4.0),
+            DiffusionRequest(rid=1, label=2, seed=11, arrival_step=1,
+                             num_steps=2, guidance_scale=1.0),
+            DiffusionRequest(rid=2, label=3, seed=12, arrival_step=2,
+                             num_steps=3, guidance_scale=2.0),
             DiffusionRequest(rid=3, label=4, seed=13, arrival_step=3),
-            DiffusionRequest(rid=4, label=5, seed=14, arrival_step=3)]
+            DiffusionRequest(rid=4, label=5, seed=14, arrival_step=3,
+                             num_steps=3, guidance_scale=1.0)]
 
 
 def _base(model, params, policy, *, slots=4):
@@ -79,9 +85,10 @@ def _run_latents(eng):
 
 def _assert_same_serving(base_eng, sharded_eng):
     """Bitwise parity of latents, headline cache stats AND the full
-    per-slot cache/gate state (payloads, chi^2 trackers, counters) — the
-    state comparison keeps this meaningful even where latents alone would
-    be insensitive to caching decisions."""
+    per-slot cache/gate state (payloads, chi^2 trackers, counters, plan
+    tables, request-scoped accumulators) — the state comparison keeps this
+    meaningful even where latents alone would be insensitive to caching
+    decisions."""
     a = _run_latents(base_eng)
     b = _run_latents(sharded_eng)
     for rid in a:
@@ -92,8 +99,9 @@ def _assert_same_serving(base_eng, sharded_eng):
         assert sa[k] == sb[k], (k, sa[k], sb[k])
     flat = getattr(jax.tree, "flatten_with_path", None) \
         or jax.tree_util.tree_flatten_with_path
-    for (path, la), lb in zip(flat(base_eng.state)[0],
-                              jax.tree.leaves(sharded_eng.state)):
+    tree_a = (base_eng.state, base_eng.plan, base_eng.slot_acc)
+    tree_b = (sharded_eng.state, sharded_eng.plan, sharded_eng.slot_acc)
+    for (path, la), lb in zip(flat(tree_a)[0], jax.tree.leaves(tree_b)):
         np.testing.assert_array_equal(
             np.asarray(la), np.asarray(lb),
             err_msg=f"state leaf {jax.tree_util.keystr(path)}")
@@ -130,6 +138,20 @@ def test_serve_state_specs_cover_every_leaf(dit):
     sh = serve_state_shardings(state, ctx)
     assert jax.tree.structure(jax.tree.map(lambda _: 0, state)) == \
         jax.tree.structure(jax.tree.map(lambda _: 0, sh))
+
+
+def test_serve_plan_specs_shard_slot_rows():
+    from repro.distributed.sharding import serve_plan_specs
+    ctx = ShardingCtx(jax.make_mesh((1, 1), ("data", "model")),
+                      make_rules("serve"))
+    plan = {"ts": jnp.zeros((4, 8), jnp.int32),
+            "ts_prev": jnp.zeros((4, 8), jnp.int32),
+            "guidance": jnp.zeros((4,), jnp.float32)}
+    specs = serve_plan_specs(plan, ctx)
+    assert set(specs) == {"ts", "ts_prev", "guidance"}
+    # slot dim carries the "slot" logical axis -> `data` on serve meshes
+    # (this (1,1) mesh collapses it, but the spec rank must match)
+    assert all(len(specs[k]) == plan[k].ndim for k in specs)
 
 
 # ---------------------------------------------------------------------------
@@ -202,12 +224,31 @@ def test_admission_noise_lands_with_slot_spec(dit):
 @multi_device
 @pytest.mark.parametrize("policy", POLICIES)
 def test_sharded_parity_data4(dit, policy):
-    """(data=4, model=1): slots and all per-slot cache/gate/stat rows shard
-    4-way; latents and cache-ratio stats must match the single-device
-    engine bitwise, mid-flight admissions included."""
+    """(data=4, model=1): slots and all per-slot cache/gate/stat rows —
+    including the (S, max_steps) sampling-plan tables — shard 4-way;
+    latents and cache-ratio stats must match the single-device engine
+    bitwise, mid-flight admissions of HETEROGENEOUS plans included (the
+    shared trace mixes 2/3/4-step budgets and guidance 1.0/2.0/4.0)."""
     cfg, model, params = dit
     _assert_same_serving(_base(model, params, policy),
                          _sharded(model, params, policy, topo=(4, 1)))
+
+
+@multi_device
+@pytest.mark.parametrize("policy", POLICIES)
+def test_sharded_mixed_plans_match_solo_replay(dit, policy):
+    """Tentpole acceptance on the mesh: every request of a mixed-plan batch
+    served by the (4, 1) sharded engine is bitwise-equal to a solo
+    ``sample()`` replay under its own resolved (num_steps,
+    guidance_scale)."""
+    cfg, model, params = dit
+    eng = _sharded(model, params, policy, topo=(4, 1))
+    done = eng.run(_staggered_trace())
+    assert len(done) == 5
+    # per-request budgets resolved (rid 3 fell back to the engine default)
+    assert {r.rid: r.num_steps for r in done} == \
+        {0: 4, 1: 2, 2: 3, 3: STEPS, 4: 3}
+    assert_solo_replay_parity(eng, model, params, policy, done)
 
 
 @multi_device
@@ -238,7 +279,30 @@ def test_state_is_actually_sharded(dit):
     assert eng.state["gate"].sigma2.sharding.spec[1] == "data"
     assert eng.state["stats"]["blocks_skipped"].sharding.spec[0] == "data"
     assert eng.x.sharding.spec[0] == "data"
+    # sampling-plan tables shard with the slot rows over `data`
+    assert eng.plan["ts"].sharding.spec[0] == "data"
+    assert eng.plan["ts_prev"].sharding.spec[0] == "data"
+    assert eng.plan["guidance"].sharding.spec[0] == "data"
+    assert all(v.sharding.spec[0] == "data"
+               for v in eng.slot_acc.values())
     assert eng.topology() == {"data": 4, "model": 1, "devices": 4}
+
+
+def test_admission_plan_rows_land_with_table_row_spec(dit):
+    """Plan rows ride the same per-slot device_put mechanism as the
+    admission noise: staged with one table-row's spec (the plan spec minus
+    the slot axis), consumed by the fused _admit without resharding."""
+    cfg, model, params = dit
+    eng = _sharded(model, params, "fastcache", topo=(1, 1))
+    assert eng._plan_row_sh.spec == P(*eng._plan_sh["ts"].spec[1:])
+    req = DiffusionRequest(rid=0, label=1, seed=5, num_steps=3,
+                           guidance_scale=2.0)
+    plan = eng.resolve_plan(req)
+    ts_row, prev_row = plan.rows(eng.max_steps, eng.num_train_steps)
+    staged = eng._staged_plan(ts_row, prev_row)
+    assert all(s.sharding == eng._plan_row_sh for s in staged)
+    eng.add_request(req)
+    assert eng.plan["ts"].sharding.spec == eng._plan_sh["ts"].spec
 
 
 @multi_device
@@ -288,16 +352,20 @@ def test_sharded_lockstep_mode(dit):
 
 def test_poisson_trace_requires_explicit_seed_or_key():
     with pytest.raises(TypeError):
-        poisson_trace(4, 0.5)
+        poisson_trace(4, 0.5, num_classes=10)
     with pytest.raises(TypeError):
-        poisson_trace(4, 0.5, seed=1, key=jax.random.PRNGKey(1))
+        poisson_trace(4, 0.5, seed=1, key=jax.random.PRNGKey(1),
+                      num_classes=10)
+    # num_classes has no default either: it must come from the model config
+    with pytest.raises(TypeError):
+        poisson_trace(4, 0.5, seed=1)
 
 
 def test_poisson_trace_key_is_deterministic():
-    a = poisson_trace(16, 0.5, key=jax.random.PRNGKey(42))
-    b = poisson_trace(16, 0.5, key=jax.random.PRNGKey(42))
+    a = poisson_trace(16, 0.5, key=jax.random.PRNGKey(42), num_classes=10)
+    b = poisson_trace(16, 0.5, key=jax.random.PRNGKey(42), num_classes=10)
     assert [(r.arrival_step, r.label, r.seed) for r in a] == \
         [(r.arrival_step, r.label, r.seed) for r in b]
-    c = poisson_trace(16, 0.5, key=jax.random.PRNGKey(43))
+    c = poisson_trace(16, 0.5, key=jax.random.PRNGKey(43), num_classes=10)
     assert [r.arrival_step for r in a] != [r.arrival_step for r in c] or \
         [r.label for r in a] != [r.label for r in c]
