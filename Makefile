@@ -1,16 +1,24 @@
 # One-command verify/bench entry points (the tier-1 command of ROADMAP.md).
-.PHONY: test test-fast test-serving test-sharded bench-smoke bench-serve bench
+.PHONY: test test-fast test-serving test-sharded test-policies bench-smoke \
+	bench-serve bench
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
 
-# skip the slow dry-run subprocess compiles (~4 min) and the serving suites
+# skip the slow dry-run subprocess compiles (~4 min) and the serving +
+# per-policy suites (each has its own target/CI job)
 test-fast:
-	PYTHONPATH=src python -m pytest -x -q -m "not slow and not serving"
+	PYTHONPATH=src python -m pytest -x -q \
+		-m "not slow and not serving and not policies"
 
 # the continuous-batching engine suites (AR decode + diffusion)
 test-serving:
 	PYTHONPATH=src python -m pytest -x -q -m serving
+
+# the cache-policy plugin suite across the registry: per-policy state
+# minimality + bitwise parity against the pre-refactor golden run
+test-policies:
+	PYTHONPATH=src python -m pytest -x -q -m policies
 
 # sharded-vs-single-device bitwise parity on an 8-virtual-device CPU mesh
 # (XLA only honors the flag at first jax init, so it must be in the env

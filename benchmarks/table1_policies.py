@@ -2,18 +2,24 @@
 
 Per (DiT variant x policy): sampling wall-time, per-step latency, block cache
 ratio, steps reused, and quality proxies vs the exact sampler.
+
+The policy column is driven by the plugin registry (``repro.core.POLICIES``)
+minus l2c (whose default mask skips nothing — it needs offline calibration
+to say anything), so a newly registered policy lands a Table 1 row with no
+edit here: the SmoothCache-style layer-schedule policy arrived exactly that
+way.
 """
 from __future__ import annotations
 
 from typing import List
 
 from repro.configs.base import FastCacheConfig
+from repro.core import POLICIES as REGISTERED
 
 from benchmarks.common import (build_dit, frechet_proxy, rel_err,
                                timed_sample)
 
-POLICIES = ("nocache", "teacache", "adacache", "fora", "fbcache",
-            "fastcache")
+POLICIES = tuple(p for p in REGISTERED if p != "l2c")
 
 
 def run(models=("dit-b2", "dit-xl2"), steps: int = 12) -> List[dict]:

@@ -4,11 +4,24 @@ saliency.py      spatial-temporal token saliency + static/motion partition
 statcache.py     chi^2 statistical cache gate (Eqs. 4-9)
 linear_approx.py learnable linear approximators + least-squares calibration
 token_merge.py   local-clustering token merge (CTM, Eqs. 10-13 / Alg. 2)
-runner.py        CachedDiT — Alg. 1 around a DiT stack + baseline policies
+policies/        the CachePolicy plugin registry — one module per cache
+                 method (fastcache proper + the Table 1/12 baselines +
+                 SmoothCache-style layer schedules); see policies/base.py
+runner.py        CachedDiT — thin shell resolving a policy from the registry
 decode_runner.py CachedDecoder — the gate applied to AR decode (beyond-paper)
 chi2.py          host-side chi-square quantiles
+
+``POLICIES`` is derived from the policy registry on attribute access.
 """
 from repro.core.chi2 import cache_threshold, chi2_ppf, error_bound  # noqa
 from repro.core.decode_runner import CachedDecoder  # noqa: F401
-from repro.core.runner import (CachedDiT, POLICIES,  # noqa: F401
+from repro.core.runner import (CachedDiT,  # noqa: F401
                                l2c_mask_from_deltas, summarize_stats)
+from repro.core.policies import (CachePolicy, get_policy_class,  # noqa: F401
+                                 register, registered_policies)
+
+
+def __getattr__(name: str):
+    if name == "POLICIES":
+        return registered_policies()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,20 @@
+"""Cache-policy plugin registry.
+
+Each module below registers one policy; the import order here IS the
+``repro.core.POLICIES`` order (the tuple is derived from the registry, so
+it can never drift from what is actually registered).  Adding a cache
+method = adding one module here — the ``CachedDiT`` shell, the serving
+engines and the sharding state walker pick it up unchanged (see
+``base.py`` for the protocol and README "Writing a cache policy").
+"""
+from repro.core.policies.base import (CachePolicy, get_policy_class,  # noqa: F401
+                                      register, registered_policies,
+                                      summarize_stats)
+from repro.core.policies import nocache  # noqa: F401,E402
+from repro.core.policies import fora  # noqa: F401,E402
+from repro.core.policies import teacache  # noqa: F401,E402
+from repro.core.policies import adacache  # noqa: F401,E402
+from repro.core.policies import fbcache  # noqa: F401,E402
+from repro.core.policies import l2c  # noqa: F401,E402
+from repro.core.policies import fastcache  # noqa: F401,E402
+from repro.core.policies import smoothcache  # noqa: F401,E402

@@ -1,0 +1,58 @@
+"""adacache: content-adaptive step-skip schedule — the input distance picks
+a skip budget (large change: recompute now; small change: coast for the
+next few steps on the cached output) (AdaCache).
+
+State: the previous step's token embeddings, the cached eps, the per-sample
+remaining-skip budget and the warm-up flag.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.policies.base import CachePolicy, register
+
+
+@register("adacache")
+class AdaCache(CachePolicy):
+    def __init__(self, model, fc, fc_params, *,
+                 ada_thresholds: Tuple[float, float] = (0.05, 0.15), **kw):
+        super().__init__(model, fc, fc_params, **kw)
+        self.thresholds = ada_thresholds
+
+    def init_state(self, batch: int) -> Dict:
+        m = self.model
+        dt = self._state_dtype()
+        return {
+            "prev_tokens_in": jnp.zeros((batch, m.num_tokens,
+                                         m.cfg.d_model), dt),
+            "prev_eps": jnp.zeros(self._eps_shape(batch), dt),
+            "ada_skip_left": jnp.zeros((batch,), jnp.int32),
+            "have_cache": jnp.zeros((batch,), bool),
+            "stats": self.init_stats(batch),
+        }
+
+    def reset_rows(self, state, rows):
+        st = dict(state)
+        st["prev_tokens_in"] = state["prev_tokens_in"].at[rows].set(0.0)
+        st["prev_eps"] = state["prev_eps"].at[rows].set(0.0)
+        st["ada_skip_left"] = state["ada_skip_left"].at[rows].set(0)
+        st["have_cache"] = state["have_cache"].at[rows].set(False)
+        return st
+
+    def step(self, params, state, x_in, c):
+        rel = self._rel_change(x_in, state["prev_tokens_in"])
+        lo, hi = self.thresholds
+        budget = jnp.where(rel < lo, 3, jnp.where(rel < hi, 1, 0))
+        skip = (state["ada_skip_left"] > 0) & state["have_cache"]
+
+        def store(out, st, inputs, x_out):
+            out["prev_tokens_in"] = jnp.where(skip[:, None, None],
+                                              st["prev_tokens_in"], x_in)
+
+        eps, st = self.masked_step(params, state, x_in, c, skip,
+                                   store=store)
+        st["ada_skip_left"] = jnp.where(
+            skip, state["ada_skip_left"] - 1, budget).astype(jnp.int32)
+        return eps, st

@@ -1,0 +1,56 @@
+"""fbcache: first-block gate — run block 0 as a probe; if its output moved
+less than ``rdt`` relative to the previous step, reuse the previous step's
+model output (FBCache / ParaAttention).
+
+State: block 0's previous output (the probe reference — NOT the full
+(L+1, B, N, D) hidden stack the monolith carried), the cached eps and the
+warm-up flag.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies.base import CachePolicy, register
+
+
+@register("fbcache")
+class FirstBlockCache(CachePolicy):
+    def __init__(self, model, fc, fc_params, *, fb_rdt: float = 0.08, **kw):
+        super().__init__(model, fc, fc_params, **kw)
+        self.rdt = fb_rdt
+
+    def init_state(self, batch: int) -> Dict:
+        m = self.model
+        dt = self._state_dtype()
+        return {
+            "prev_h1": jnp.zeros((batch, m.num_tokens, m.cfg.d_model), dt),
+            "prev_eps": jnp.zeros(self._eps_shape(batch), dt),
+            "have_cache": jnp.zeros((batch,), bool),
+            "stats": self.init_stats(batch),
+        }
+
+    def reset_rows(self, state, rows):
+        st = dict(state)
+        st["prev_h1"] = state["prev_h1"].at[rows].set(0.0)
+        st["prev_eps"] = state["prev_eps"].at[rows].set(0.0)
+        st["have_cache"] = state["have_cache"].at[rows].set(False)
+        return st
+
+    def step(self, params, state, x_in, c):
+        bp0 = jax.tree.map(lambda a: a[0], params["blocks"])
+        h1 = self.model.block_apply(bp0, x_in, c)
+        rel = self._rel_change(h1, state["prev_h1"])
+        skip = (rel < self.rdt) & state["have_cache"]
+
+        def store(out, st, inputs, x_out):
+            # block 0's output = block 1's input (or the final output when
+            # the stack is a single block)
+            h1_new = inputs[1] if self.L > 1 else x_out
+            out["prev_h1"] = jnp.where(skip[:, None, None], st["prev_h1"],
+                                       h1_new)
+
+        return self.masked_step(params, state, x_in, c, skip,
+                                computed_on_skip=1.0, store=store)

@@ -1,0 +1,46 @@
+"""fora: static-interval step cache — recompute every N-th step, else reuse
+the previous step's model output (FORA).
+
+State: the cached eps, a per-sample step counter (the interval counts from
+0 for every request, so serving slots admitted mid-flight keep their own
+schedule phase) and the warm-up flag.  No hidden stacks, no chi^2 sigma
+trackers — the gate is purely positional.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core.policies.base import CachePolicy, register
+
+
+@register("fora")
+class FORA(CachePolicy):
+    def __init__(self, model, fc, fc_params, *, fora_interval: int = 3,
+                 **kw):
+        super().__init__(model, fc, fc_params, **kw)
+        self.interval = fora_interval
+
+    def init_state(self, batch: int) -> Dict:
+        return {
+            "prev_eps": jnp.zeros(self._eps_shape(batch),
+                                  self._state_dtype()),
+            "step_count": jnp.zeros((batch,), jnp.int32),
+            "have_cache": jnp.zeros((batch,), bool),
+            "stats": self.init_stats(batch),
+        }
+
+    def reset_rows(self, state, rows):
+        st = dict(state)
+        st["prev_eps"] = state["prev_eps"].at[rows].set(0.0)
+        st["step_count"] = state["step_count"].at[rows].set(0)
+        st["have_cache"] = state["have_cache"].at[rows].set(False)
+        return st
+
+    def step(self, params, state, x_in, c):
+        recompute = state["step_count"] % self.interval == 0      # (B,)
+        skip = ~recompute & state["have_cache"]
+        eps, st = self.masked_step(params, state, x_in, c, skip)
+        st["step_count"] = st["step_count"] + 1
+        return eps, st

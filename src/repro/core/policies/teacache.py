@@ -1,0 +1,56 @@
+"""teacache: accumulated input-change gate — skip whole steps while the
+accumulated relative change of the token embeddings stays under a
+threshold (TeaCache).
+
+State: the previous step's token embeddings (the statistic's reference),
+the cached eps, the per-sample change accumulator and the warm-up flag.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core.policies.base import F32, CachePolicy, register
+
+
+@register("teacache")
+class TeaCache(CachePolicy):
+    def __init__(self, model, fc, fc_params, *, tea_threshold: float = 0.15,
+                 **kw):
+        super().__init__(model, fc, fc_params, **kw)
+        self.threshold = tea_threshold
+
+    def init_state(self, batch: int) -> Dict:
+        m = self.model
+        dt = self._state_dtype()
+        return {
+            "prev_tokens_in": jnp.zeros((batch, m.num_tokens,
+                                         m.cfg.d_model), dt),
+            "prev_eps": jnp.zeros(self._eps_shape(batch), dt),
+            "tea_acc": jnp.zeros((batch,), F32),
+            "have_cache": jnp.zeros((batch,), bool),
+            "stats": self.init_stats(batch),
+        }
+
+    def reset_rows(self, state, rows):
+        st = dict(state)
+        st["prev_tokens_in"] = state["prev_tokens_in"].at[rows].set(0.0)
+        st["prev_eps"] = state["prev_eps"].at[rows].set(0.0)
+        st["tea_acc"] = state["tea_acc"].at[rows].set(0.0)
+        st["have_cache"] = state["have_cache"].at[rows].set(False)
+        return st
+
+    def step(self, params, state, x_in, c):
+        rel = self._rel_change(x_in, state["prev_tokens_in"])
+        acc = state["tea_acc"] + rel
+        skip = (acc < self.threshold) & state["have_cache"]
+
+        def store(out, st, inputs, x_out):
+            out["prev_tokens_in"] = jnp.where(skip[:, None, None],
+                                              st["prev_tokens_in"], x_in)
+
+        eps, st = self.masked_step(params, state, x_in, c, skip,
+                                   store=store)
+        st["tea_acc"] = jnp.where(skip, acc, 0.0)
+        return eps, st

@@ -1,59 +1,64 @@
-"""CachedDiT: the FastCache execution engine around a DiT block stack, plus
-the baseline cache policies the paper compares against (Table 1/12).
+"""CachedDiT: a thin shell around the pluggable cache-policy registry.
 
-Policies (all jit-compatible):
+The execution engines for each cache method live in ``core/policies/``
+(one module per policy — the paper's FastCache plus the Table 1/12
+baselines; ``core/policies/base.py`` documents the ``CachePolicy``
+protocol and the state-pytree contract).  ``CachedDiT`` resolves a policy
+by name, embeds the DiT model into it, and forwards:
 
-  nocache    full compute every step (reference)
-  fora       static-interval layer cache: recompute every N-th step, else
-             reuse the previous step's model output (FORA, Lindsay-style)
-  teacache   accumulated input-change gate: skip whole steps while the
-             accumulated relative change stays under a threshold (TeaCache)
-  adacache   content-adaptive step-skip schedule from the input distance
-             (AdaCache)
-  fbcache    first-block gate: run block 0; if its output moved less than
-             `rdt`, reuse the previous step's output (FBCache/ParaAttention)
-  l2c        learned static layer subset replaced by linear approximations
-             (Learning-to-Cache, offline-calibrated mask)
-  fastcache  the paper: STR token partition + per-block chi^2 statistical
-             gate + learnable linear approximation + motion-aware blending
+  init_state(batch)            -> policy.init_state       (minimal,
+                                  policy-owned state pytree)
+  reset_slot(state, slot)      -> policy.reset_rows       (re-arm serving
+                                  slot rows; stats stay cumulative)
+  step(params, state, latents, t, labels)
+                               -> tokens_in + conditioning, then
+                                  policy.step(params, state, x, c)
+  stats(state)                 -> policy.stats
 
-Gating is **per-sample**: every data-dependent cache decision is a (batch,)
-boolean gate, and cached vs freshly computed activations are blended with
-``jnp.where`` masking, so one moving sample never invalidates its batchmates'
-caches.  The transformer stack itself only runs when at least one sample
-recomputes (``lax.cond`` on the all-skip fast path), which preserves the
-whole-batch speedup when every sample is static.  Per-sample statistics
-(``blocks_skipped``, ``steps_reused``, ...) are kept as (batch,) accumulators.
-``FastCacheConfig.gate_mode="global"`` restores the pre-refactor whole-batch
-decision (the statistic is reduced over the batch) for ablations.
+Gating is **per-sample** in every shipped policy: data-dependent cache
+decisions are (batch,) gates blended with ``jnp.where`` masking, so one
+moving sample never invalidates its batchmates' caches — the serving
+engines' bitwise mid-flight-admission contract rests on this.
+``FastCacheConfig.gate_mode="global"`` restores the whole-batch decision
+(the statistic is reduced over the batch) for ablations.
 
-The FastCache state carries the previous step's per-block input hiddens
-(H_{t-1,l-1} in Eq. 4), the previous token embeddings (Eq. 1) and the
-previous model output (for step-level baselines and MB blending).
+``POLICIES`` is derived from the registry on attribute access (module
+``__getattr__``), so the tuple can never drift from what is actually
+registered; unknown names raise ``ValueError`` listing the registry.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import FastCacheConfig
-from repro.core import linear_approx, saliency, statcache, token_merge
-from repro.distributed.sharding import constrain
+from repro.core import linear_approx
+from repro.core import policies as _policies  # registers the built-ins
+from repro.core.policies.base import (get_policy_class, registered_policies,
+                                      summarize_stats)  # noqa: F401  (re-export)
+from repro.core.policies.l2c import l2c_mask_from_deltas  # noqa: F401
 from repro.kernels import ops as kernel_ops
-from repro.kernels import ref as kernel_ref
 from repro.models.dit import DiTModel
 
-F32 = jnp.float32
-
-POLICIES = ("nocache", "fora", "teacache", "adacache", "fbcache", "l2c",
-            "fastcache")
 GATE_MODES = ("per_sample", "global")
 
 
+def __getattr__(name: str):
+    if name == "POLICIES":
+        return registered_policies()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 class CachedDiT:
+    """DiT sampling under a named cache policy.
+
+    The constructor keeps the historical per-policy knobs as explicit
+    kwargs; together with ``**policy_kwargs`` the full set is handed to
+    the resolved policy, which keeps the knobs it knows and ignores the
+    rest — so registering a new policy (with its own kwargs) requires no
+    edit here."""
+
     def __init__(self, model: DiTModel, fc: FastCacheConfig,
                  policy: str = "fastcache",
                  fc_params: Optional[Dict] = None,
@@ -61,9 +66,12 @@ class CachedDiT:
                  tea_threshold: float = 0.15,
                  ada_thresholds: Tuple[float, float] = (0.05, 0.15),
                  fb_rdt: float = 0.08,
-                 l2c_mask: Optional[jax.Array] = None):
-        assert policy in POLICIES, policy
-        assert fc.gate_mode in GATE_MODES, fc.gate_mode
+                 l2c_mask: Optional[jax.Array] = None,
+                 **policy_kwargs):
+        cls = get_policy_class(policy)     # ValueError on unknown names
+        if fc.gate_mode not in GATE_MODES:
+            raise ValueError(f"unknown gate_mode {fc.gate_mode!r}; "
+                             f"expected one of {GATE_MODES}")
         self.model = model
         self.fc = fc
         self.policy = policy
@@ -71,439 +79,43 @@ class CachedDiT:
         self.use_fused = (kernel_ops.default_use_fused()
                           if fc.use_fused_gate is None else fc.use_fused_gate)
         self.L = model.cfg.num_layers
-        d = model.cfg.d_model
         self.fc_params = fc_params or linear_approx.init_linear_params(
-            self.L, d)
-        self.fora_interval = fora_interval
-        self.tea_threshold = tea_threshold
-        self.ada_thresholds = ada_thresholds
-        self.fb_rdt = fb_rdt
-        self.l2c_mask = (l2c_mask if l2c_mask is not None
-                         else jnp.zeros((self.L,), bool))
-        n = model.num_tokens
-        self.gate_nd = n * d  # ND of Eq. 5 (full token grid, one sample)
-        self.threshold = statcache.make_threshold(fc.alpha, self.gate_nd)
-        self.capacity = max(1, int(round(fc.motion_capacity * n)))
+            self.L, model.cfg.d_model)
+        self.impl = cls(model, fc, self.fc_params,
+                        gate_mode=self.gate_mode, use_fused=self.use_fused,
+                        fora_interval=fora_interval,
+                        tea_threshold=tea_threshold,
+                        ada_thresholds=ada_thresholds, fb_rdt=fb_rdt,
+                        l2c_mask=l2c_mask, **policy_kwargs)
 
     # ------------------------------------------------------------------
 
     def init_state(self, batch: int) -> Dict:
-        m = self.model
-        cfg = m.cfg
-        n, d = m.num_tokens, cfg.d_model
-        dt = jnp.dtype(cfg.dtype)
-        img = cfg.dit.image_size
-        return {
-            "prev_tokens_in": jnp.zeros((batch, n, d), dt),
-            "prev_hidden": jnp.zeros((self.L + 1, batch, n, d), dt),
-            "prev_eps": jnp.zeros((batch, img, img, cfg.dit.in_channels), dt),
-            "gate": statcache.init_gate_state(self.L, batch),
-            # per-sample step phase: serving slots admitted mid-flight keep
-            # their own schedule position (fora's interval counts from 0 for
-            # every request, not from the engine's global step)
-            "step_count": jnp.zeros((batch,), jnp.int32),
-            "have_cache": jnp.zeros((batch,), bool),
-            "tea_acc": jnp.zeros((batch,), F32),
-            "ada_skip_left": jnp.zeros((batch,), jnp.int32),
-            "stats": {
-                "blocks_computed": jnp.zeros((batch,), F32),
-                "blocks_skipped": jnp.zeros((batch,), F32),
-                "steps_reused": jnp.zeros((batch,), F32),
-                "motion_frac_sum": jnp.zeros((batch,), F32),
-                "steps": jnp.zeros((), F32),
-            },
-        }
+        """The policy's own state pytree for ``batch`` samples — only that
+        policy's buffers (plus the standard ``stats`` block)."""
+        return self.impl.init_state(batch)
 
     def reset_slot(self, state: Dict, slot) -> Dict:
         """Re-arm one sample (or an index array of samples, e.g. a CFG
-        cond/uncond pair) for a new request: drop its cache payload, variance
-        trackers and policy counters without disturbing its batchmates.
-        Stats stay cumulative (engine-lifetime counters)."""
-        st = dict(state)
-        st["have_cache"] = state["have_cache"].at[slot].set(False)
-        st["gate"] = statcache.reset_gate_slot(state["gate"], slot)
-        st["prev_tokens_in"] = state["prev_tokens_in"].at[slot].set(0.0)
-        st["prev_hidden"] = state["prev_hidden"].at[:, slot].set(0.0)
-        st["prev_eps"] = state["prev_eps"].at[slot].set(0.0)
-        st["step_count"] = state["step_count"].at[slot].set(0)
-        st["tea_acc"] = state["tea_acc"].at[slot].set(0.0)
-        st["ada_skip_left"] = state["ada_skip_left"].at[slot].set(0)
-        return st
+        cond/uncond pair) for a new request: drop its cache payload and
+        policy counters without disturbing its batchmates.  Stats stay
+        cumulative (engine-lifetime counters)."""
+        return self.impl.reset_rows(state, slot)
 
-    # ------------------------------------------------------------------
-    # Full forward that records per-block inputs (the cache payload)
-    # ------------------------------------------------------------------
-
-    def _full_forward(self, params, x, c):
-        def body(x, bp):
-            return self.model.block_apply(bp, x, c), x
-
-        x_out, inputs = jax.lax.scan(body, x, params["blocks"])
-        hidden = jnp.concatenate([inputs, x_out[None]], axis=0)  # (L+1,B,N,D)
-        return x_out, hidden
-
-    def _eps(self, params, hidden_final, c, latents_shape):
-        out = self.model.final_layer(params, hidden_final, c)
-        p = self.model.cfg.dit.patch_size
-        from repro.models.common import unpatchify
-        return unpatchify(out[..., :self.model.patch_dim], p, self.model.grid)
-
-    # ------------------------------------------------------------------
-    # Step-level per-sample gate
-    # ------------------------------------------------------------------
-
-    def _rel_change(self, x: jax.Array, prev: jax.Array) -> jax.Array:
-        """Per-sample relative Frobenius change, (B,).  In global mode the
-        statistic is reduced over the batch and broadcast."""
-        diff, prevsq = statcache.delta_stats_per_sample(x, prev)
-        if self.gate_mode == "global":
-            rel = jnp.sqrt(jnp.sum(diff)
-                           / jnp.maximum(jnp.sum(prevsq), 1e-12))
-            return jnp.broadcast_to(rel, diff.shape)
-        return jnp.sqrt(diff / jnp.maximum(prevsq, 1e-12))
-
-    def _masked_step(self, params, state, x_in, c, skip: jax.Array,
-                     computed_on_skip: float = 0.0):
-        """One step under a per-sample step-level gate.  ``skip`` (B,) bool:
-        True reuses that sample's cached eps and leaves its cache payload
-        untouched; False recomputes and refreshes it.  The block stack only
-        runs when at least one sample recomputes.  ``computed_on_skip``
-        counts probe blocks (fbcache's block 0) charged to skipped samples.
-        """
-        def reuse_all(st):
-            return st["prev_eps"].astype(F32).astype(x_in.dtype), dict(st)
-
-        def mixed(st):
-            x_out, hidden = self._full_forward(params, x_in, c)
-            eps = self._eps(params, x_out, c, None)
-            out = dict(st)
-            out["prev_tokens_in"] = jnp.where(skip[:, None, None],
-                                              st["prev_tokens_in"], x_in)
-            out["prev_hidden"] = jnp.where(skip[None, :, None, None],
-                                           st["prev_hidden"], hidden)
-            eps_sel = jnp.where(skip[:, None, None, None],
-                                st["prev_eps"].astype(eps.dtype), eps)
-            out["prev_eps"] = eps_sel.astype(st["prev_eps"].dtype)
-            return eps_sel, out
-
-        eps, st = jax.lax.cond(jnp.all(skip), reuse_all, mixed, state)
-        st["have_cache"] = jnp.ones_like(state["have_cache"])
-        skf = skip.astype(F32)
-        stats = dict(st["stats"])
-        stats["blocks_computed"] = (stats["blocks_computed"]
-                                    + (1.0 - skf) * self.L
-                                    + skf * computed_on_skip)
-        stats["blocks_skipped"] = (stats["blocks_skipped"]
-                                   + skf * (self.L - computed_on_skip))
-        stats["steps_reused"] = stats["steps_reused"] + skf
-        stats["motion_frac_sum"] = stats["motion_frac_sum"] + (1.0 - skf)
-        st["stats"] = stats
-        return eps, st
-
-    # ------------------------------------------------------------------
-
-    def step(self, params, state, latents, t, labels):
+    def step(self, params, state: Dict, latents, t, labels
+             ) -> Tuple[jax.Array, Dict]:
         """One denoising-model evaluation under the cache policy.
         ``t`` and ``labels`` are (B,) and may be heterogeneous across the
         batch.  Returns (eps, new_state)."""
-        m = self.model
-        x_in = m.tokens_in(params, latents)
-        c = m.conditioning(params, t, labels)
-        b = x_in.shape[0]
-        have = state["have_cache"]
-
-        p = self.policy
-        if p == "nocache":
-            eps, state = self._masked_step(params, state, x_in, c,
-                                           jnp.zeros((b,), bool))
-        elif p == "fora":
-            recompute = state["step_count"] % self.fora_interval == 0  # (B,)
-            skip = ~recompute & have
-            eps, state = self._masked_step(params, state, x_in, c, skip)
-        elif p == "teacache":
-            rel = self._rel_change(x_in, state["prev_tokens_in"])
-            acc = state["tea_acc"] + rel
-            skip = (acc < self.tea_threshold) & have
-            eps, state = self._masked_step(params, state, x_in, c, skip)
-            state["tea_acc"] = jnp.where(skip, acc, 0.0)
-        elif p == "adacache":
-            rel = self._rel_change(x_in, state["prev_tokens_in"])
-            lo, hi = self.ada_thresholds
-            budget = jnp.where(rel < lo, 3, jnp.where(rel < hi, 1, 0))
-            skip = (state["ada_skip_left"] > 0) & have
-            eps, state = self._masked_step(params, state, x_in, c, skip)
-            state["ada_skip_left"] = jnp.where(
-                skip, state["ada_skip_left"] - 1,
-                budget).astype(jnp.int32)
-        elif p == "fbcache":
-            bp0 = jax.tree.map(lambda a: a[0], params["blocks"])
-            h1 = m.block_apply(bp0, x_in, c)
-            rel = self._rel_change(h1, state["prev_hidden"][1])
-            skip = (rel < self.fb_rdt) & have
-            eps, state = self._masked_step(params, state, x_in, c, skip,
-                                           computed_on_skip=1.0)
-        elif p == "l2c":
-            eps, state = self._layerwise_step(
-                params, state, x_in, c,
-                forced_mask=self.l2c_mask, use_gate=False, use_str=False)
-        else:  # fastcache
-            # Per-block gating needs a sample's cache payload.  All-warm
-            # batches take the pure gated path; all-cold batches (the first
-            # sampling step) take one full forward.  A MIXED batch — a
-            # request admitted into a running serving batch — warms up the
-            # cold samples with a full forward while the warm samples keep
-            # their per-sample gate decisions, cache payloads and trackers
-            # (their outputs and state match an admission-free run exactly).
-            eps, state = jax.lax.cond(
-                jnp.all(have),
-                lambda s: self._fastcache_step(params, s, x_in, c),
-                lambda s: jax.lax.cond(
-                    jnp.any(have),
-                    lambda s2: self._fastcache_mixed_step(params, s2, x_in,
-                                                          c, have),
-                    lambda s2: self._masked_step(params, s2, x_in, c,
-                                                 jnp.zeros((b,), bool)),
-                    s),
-                state)
+        x_in = self.model.tokens_in(params, latents)
+        c = self.model.conditioning(params, t, labels)
+        eps, state = self.impl.step(params, state, x_in, c)
         state = dict(state)
-        state["step_count"] = state["step_count"] + 1
         stats = dict(state["stats"])
         stats["steps"] = stats["steps"] + 1.0
         state["stats"] = stats
         return eps, state
 
-    # ------------------------------------------------------------------
-    # FastCache proper (Alg. 1), per-sample block gates
-    # ------------------------------------------------------------------
-
-    def _fastcache_step(self, params, state, x_in, c):
-        fc = self.fc
-        fcp = self.fc_params
-        b, n, d = x_in.shape
-
-        # ---- STR: token partition (Eqs. 1-2), per-sample
-        if fc.use_str:
-            sal = saliency.token_saliency(x_in, state["prev_tokens_in"])
-            part = saliency.partition_tokens(sal, fc.motion_threshold,
-                                             self.capacity)
-        else:
-            sal = jnp.full((b, n), jnp.inf, F32)
-            part = saliency.partition_tokens(sal, -1.0, n)
-        mfrac = saliency.motion_fraction(part)               # (B,)
-
-        # ---- static bypass (Eq. 3) + MB blend with previous final hidden
-        h_static = linear_approx.apply_linear(fcp["W_c"], fcp["b_c"], x_in)
-        if fc.use_mb:
-            h_static = linear_approx.blend(h_static, state["prev_hidden"][-1],
-                                           fc.blend_gamma)
-
-        # ---- motion stream through gated blocks
-        xm = saliency.gather_motion(x_in, part)              # (B,C,D)
-        gate = state["gate"]
-        # df of the chi^2 statistic = observed elements of ONE sample (static
-        # at trace time; the paper's ND with the motion capacity applied)
-        nd = int(xm.shape[1] * xm.shape[2])
-        threshold = statcache.make_threshold(fc.alpha, nd)
-        if self.gate_mode == "global":
-            threshold_g = statcache.make_threshold(fc.alpha, nd * b)
-        use_sc = bool(fc.use_sc)
-
-        def body(carry, xs):
-            xm, sig, ini, comp, skip = carry
-            bp, w_l, b_l, prev_in, prev_out, lidx = xs
-            prev_m = saliency.gather_motion(prev_in, part)
-            prev_om = saliency.gather_motion(prev_out, part)
-            eligible = ini[lidx] & use_sc                    # (B,)
-
-            if self.gate_mode == "global":
-                diff, prevsq = statcache.delta_stats_per_sample(xm, prev_m)
-                do_cache = jnp.broadcast_to(
-                    statcache.gate_decision_global(diff, sig[lidx], nd * b,
-                                                   threshold_g)
-                    & jnp.all(eligible), (b,))
-                approx = linear_approx.apply_linear(w_l, b_l, xm)
-                if fc.use_mb:
-                    approx = linear_approx.blend(approx, prev_om,
-                                                 fc.blend_gamma)
-                out = jnp.where(do_cache[:, None, None], approx, xm)
-            elif self.use_fused:
-                out, do_cache, diff, prevsq = kernel_ops.fused_gate(
-                    xm, prev_m, prev_om, w_l, b_l, sig[lidx], eligible,
-                    threshold=threshold, gamma=fc.blend_gamma,
-                    use_blend=fc.use_mb)
-            else:
-                out, do_cache, diff, prevsq = kernel_ref.fused_gate(
-                    xm, prev_m, prev_om, w_l, b_l, sig[lidx], eligible,
-                    threshold=threshold, gamma=fc.blend_gamma,
-                    use_blend=fc.use_mb)
-
-            # skip the MXU block entirely when every sample caches; otherwise
-            # compute it once for the batch and keep cached samples' approx
-            xm_new = jax.lax.cond(
-                jnp.all(do_cache),
-                lambda ops_: ops_[0],
-                lambda ops_: jnp.where(do_cache[:, None, None], ops_[0],
-                                       self.model.block_apply(bp, ops_[1],
-                                                              c)),
-                (out, xm))
-            # keep the motion-stream carry on its slot shards (serving runs
-            # this scan under a (data, model) mesh; without the constraint
-            # GSPMD is free to gather the carry onto one device per layer)
-            xm_new = constrain(xm_new, "act_batch", "act_seq", "act_embed")
-            # sliding-window variance tracker updates on recompute, per-sample
-            new_sig, _ = statcache.update_sigma(
-                sig[lidx], ini[lidx], diff, nd, fc.background_momentum)
-            sig = sig.at[lidx].set(jnp.where(do_cache, sig[lidx], new_sig))
-            ini = ini.at[lidx].set(jnp.ones_like(ini[lidx]))
-            dc = do_cache.astype(F32)
-            comp = comp + (1.0 - dc)
-            skip = skip + dc
-            # cache payload: this block's input scattered over prev full grid
-            new_prev_in = saliency.scatter_motion(prev_in, xm, part)
-            return (xm_new, sig, ini, comp, skip), new_prev_in
-
-        lidx = jnp.arange(self.L)
-        prev_in_stack = state["prev_hidden"][:-1]            # (L,B,N,D)
-        prev_out_stack = state["prev_hidden"][1:]            # (L,B,N,D)
-        carry0 = (xm, gate.sigma2, gate.initialized,
-                  jnp.zeros((b,), F32), jnp.zeros((b,), F32))
-        (xm, sig, ini, comp, skip), new_prev_in = jax.lax.scan(
-            body, carry0,
-            (params["blocks"], fcp["W_l"], fcp["b_l"], prev_in_stack,
-             prev_out_stack, lidx))
-
-        # ---- reassemble full grid (concat of Eq. 2 sets)
-        h_final = saliency.scatter_motion(h_static, xm, part)
-        eps = self._eps(params, h_final, c, None)
-
-        st = dict(state)
-        st["prev_tokens_in"] = x_in
-        st["prev_hidden"] = jnp.concatenate([new_prev_in, h_final[None]], 0)
-        st["prev_eps"] = eps.astype(state["prev_eps"].dtype)
-        st["gate"] = statcache.GateState(sigma2=sig, initialized=ini)
-        stats = dict(st["stats"])
-        stats["blocks_computed"] = stats["blocks_computed"] + comp
-        stats["blocks_skipped"] = stats["blocks_skipped"] + skip
-        stats["motion_frac_sum"] = stats["motion_frac_sum"] + mfrac
-        st["stats"] = stats
-        return eps, st
-
-    def _fastcache_mixed_step(self, params, state, x_in, c, have):
-        """Mixed warm/cold batch (a request admitted mid-flight): cold
-        samples take a full forward (their warm-up step — the STR static
-        bypass is only valid with a real cache payload), warm samples take
-        the gated fastcache path.  Results and state are selected per-sample,
-        so a warm sample's outputs, cache payload, variance trackers and
-        stats are bit-identical to a run where the admission never happened,
-        and a cold sample's match its own solo warm-up step."""
-        warm = have                                          # (B,)
-        x_out, hidden = self._full_forward(params, x_in, c)
-        eps_full = self._eps(params, x_out, c, None)
-        eps_fc, st_fc = self._fastcache_step(params, state, x_in, c)
-
-        w3 = warm[:, None, None]
-        w4 = warm[:, None, None, None]
-        eps = jnp.where(w4, eps_fc, eps_full.astype(eps_fc.dtype))
-        st = dict(st_fc)
-        st["prev_tokens_in"] = jnp.where(w3, st_fc["prev_tokens_in"], x_in)
-        st["prev_hidden"] = jnp.where(warm[None, :, None, None],
-                                      st_fc["prev_hidden"],
-                                      hidden.astype(st_fc["prev_hidden"].dtype))
-        st["prev_eps"] = jnp.where(w4, st_fc["prev_eps"],
-                                   eps_full.astype(st_fc["prev_eps"].dtype))
-        # cold samples' warm-up leaves the gate untouched (matching
-        # _masked_step): trackers first observe a delta on the NEXT step,
-        # against the real payload installed here
-        st["gate"] = statcache.GateState(
-            sigma2=jnp.where(warm[None, :], st_fc["gate"].sigma2,
-                             state["gate"].sigma2),
-            initialized=jnp.where(warm[None, :], st_fc["gate"].initialized,
-                                  state["gate"].initialized))
-        st["have_cache"] = jnp.ones_like(have)
-        old = state["stats"]
-        stats = dict(st_fc["stats"])
-        stats["blocks_computed"] = jnp.where(
-            warm, stats["blocks_computed"], old["blocks_computed"] + self.L)
-        for k in ("blocks_skipped", "steps_reused"):
-            stats[k] = jnp.where(warm, stats[k], old[k])
-        stats["motion_frac_sum"] = jnp.where(
-            warm, stats["motion_frac_sum"], old["motion_frac_sum"] + 1.0)
-        st["stats"] = stats
-        return eps, st
-
-    # ------------------------------------------------------------------
-    # Layerwise forced-mask path (L2C)
-    # ------------------------------------------------------------------
-
-    def _layerwise_step(self, params, state, x_in, c, forced_mask,
-                        use_gate: bool, use_str: bool):
-        fcp = self.fc_params
-
-        def body(carry, xs):
-            x, comp, skip = carry
-            bp, w_l, b_l, masked = xs
-
-            x_new = jax.lax.cond(
-                masked,
-                lambda x: linear_approx.apply_linear(w_l, b_l, x),
-                lambda x: self.model.block_apply(bp, x, c), x)
-            x_new = constrain(x_new, "act_batch", "act_seq", "act_embed")
-            comp = comp + jnp.where(masked, 0.0, 1.0)
-            skip = skip + jnp.where(masked, 1.0, 0.0)
-            return (x_new, comp, skip), x
-
-        (x_out, comp, skip), inputs = jax.lax.scan(
-            body, (x_in, jnp.zeros((), F32), jnp.zeros((), F32)),
-            (params["blocks"], fcp["W_l"], fcp["b_l"], forced_mask))
-        eps = self._eps(params, x_out, c, None)
-        st = dict(state)
-        st["prev_tokens_in"] = x_in
-        st["prev_hidden"] = jnp.concatenate([inputs, x_out[None]], 0)
-        st["prev_eps"] = eps.astype(state["prev_eps"].dtype)
-        st["have_cache"] = jnp.ones_like(state["have_cache"])
-        stats = dict(st["stats"])
-        stats["blocks_computed"] = stats["blocks_computed"] + comp
-        stats["blocks_skipped"] = stats["blocks_skipped"] + skip
-        stats["motion_frac_sum"] = stats["motion_frac_sum"] + 1.0
-        st["stats"] = stats
-        return eps, st
-
-
-def summarize_stats(state) -> Dict[str, float]:
-    """Batch-mean view of the (batch,) per-sample accumulators, so the
-    reported numbers stay in per-sample units (steps reused per sample,
-    blocks skipped per sample, ...) regardless of batch size.  The raw
-    per-sample counts are under ``per_sample``."""
-    s = state["stats"]
-
-    def mean(a):
-        return float(jnp.mean(jnp.asarray(a, F32)))
-
-    steps = float(s["steps"])
-    computed = mean(s["blocks_computed"])
-    skipped = mean(s["blocks_skipped"])
-    reused = mean(s["steps_reused"])
-    total = computed + skipped
-    out = {
-        "steps": steps,
-        "steps_reused": reused,
-        "blocks_computed": computed,
-        "blocks_skipped": skipped,
-        "block_cache_ratio": skipped / total if total else 0.0,
-        "mean_motion_fraction": (mean(s["motion_frac_sum"])
-                                 / max(1.0, steps - reused)),
-    }
-    if jnp.ndim(s["blocks_skipped"]):
-        out["per_sample"] = {
-            k: [float(v) for v in jnp.asarray(s[k])]
-            for k in ("blocks_computed", "blocks_skipped", "steps_reused",
-                      "motion_frac_sum")}
-    return out
-
-
-def l2c_mask_from_deltas(deltas: jax.Array, n_skip: int) -> jax.Array:
-    """Learning-to-Cache proxy: skip the n layers whose outputs move the
-    residual stream least (offline calibration)."""
-    order = jnp.argsort(deltas)
-    mask = jnp.zeros(deltas.shape, bool)
-    return mask.at[order[:n_skip]].set(True)
+    def stats(self, state: Dict) -> Dict[str, float]:
+        """Host-side summary of the cache counters (``summarize_stats``)."""
+        return self.impl.stats(state)

@@ -9,10 +9,12 @@ dim of the same array.
 Rule tables are built per (step kind, shape) by ``make_rules`` — e.g.
 ``long_500k`` moves the ``data`` axis from batch (which is 1) to the KV-cache
 sequence dim.  ``kind="serve"`` is the diffusion-serving rule set: the slot
-batch (and every per-slot row of the FastCache state — cache payloads, sigma
-trackers, stat accumulators) shards over ``data`` while DiT weights stay
-tensor-parallel over ``model``; ``serve_state_shardings`` turns a
-``CachedDiT`` serving-state pytree into the matching NamedSharding tree.
+batch (and every per-slot row of the cache-policy state — cache payloads,
+sigma trackers, stat accumulators) shards over ``data`` while DiT weights
+stay tensor-parallel over ``model``; ``serve_state_shardings`` turns any
+policy's serving-state pytree into the matching NamedSharding tree by
+walking the OPAQUE pytree with rank/leading-axis rules (``_slot_axis``) —
+no state keys are named, so new cache policies shard without edits here.
 """
 from __future__ import annotations
 
@@ -187,67 +189,58 @@ def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
         x, NamedSharding(ctx.mesh, spec))
 
 
-# Logical axes of every leaf of the CachedDiT serving state, keyed by the
-# nearest dict key on the leaf's tree path.  The slot-batch dim of every
-# per-slot row (cache payloads, trackers, counters) carries "slot" so the
-# kind="serve" rules shard it over `data`; layer-stacked trackers keep the
-# layer dim replicated.  "gate" covers both GateState leaves (sigma2 and
-# initialized are each (L, B)).
-_SERVE_STATE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
-    "prev_tokens_in": ("slot", "act_seq", "act_embed"),
-    "prev_hidden": ("layers", "slot", "act_seq", "act_embed"),
-    "prev_eps": ("slot", None, None, None),
-    "gate": ("layers", "slot"),
-    "step_count": ("slot",),
-    "have_cache": ("slot",),
-    "tea_acc": ("slot",),
-    "ada_skip_left": ("slot",),
-    # stat accumulators: per-slot counters shard with their rows; the
-    # scalar step counter is replicated
-    "blocks_computed": ("slot",),
-    "blocks_skipped": ("slot",),
-    "steps_reused": ("slot",),
-    "motion_frac_sum": ("slot",),
-    "steps": (),
-}
-
-# jax.tree.flatten_with_path only exists from jax 0.4.38 on; the pinned
-# 0.4.37 ships it under jax.tree_util (same shim as models/params.py).
-_flatten_with_path = getattr(jax.tree, "flatten_with_path", None) \
-    or jax.tree_util.tree_flatten_with_path
+def _slot_axis(shape: Tuple[int, ...], batch: int,
+               layers: Optional[int]) -> Optional[int]:
+    """Which dim of a state leaf is the sample/slot batch dim, by the
+    rank/leading-axis contract of ``core/policies/base.py``: the slot dim
+    is the leading axis, except for layer-stacked trackers — a leading
+    axis of extent ``layers`` or ``layers + 1`` followed by the batch
+    extent puts the slot dim on axis 1.  Leaves without a batch-extent
+    dim (scalars, schedule constants) replicate.  The layer rule is
+    checked FIRST so (L, B) trackers resolve correctly even when
+    ``L == batch``."""
+    if (layers is not None and len(shape) >= 2
+            and shape[0] in (layers, layers + 1) and shape[1] == batch):
+        return 1
+    if len(shape) >= 1 and shape[0] == batch:
+        return 0
+    return None
 
 
-def serve_state_specs(state, ctx: Optional[ShardingCtx] = None):
-    """Pytree of PartitionSpecs matching a ``CachedDiT`` serving-state tree
-    (``CachedDiT.init_state``), under the ``kind="serve"`` rules: slot rows
-    over ``data``, everything else replicated (with the usual divisibility
-    fallback)."""
+def serve_state_specs(state, ctx: Optional[ShardingCtx] = None, *,
+                      batch: int, layers: Optional[int] = None):
+    """Pytree of PartitionSpecs matching any cache policy's serving-state
+    pytree (``CachedDiT.init_state(batch)``), under the ``kind="serve"``
+    rules: slot rows over ``data``, everything else replicated (with the
+    usual divisibility fallback).
+
+    The walker names no state keys — it derives each leaf's spec from its
+    rank and dim extents alone (``_slot_axis``), so a newly registered
+    policy's state shards correctly without touching this module.
+    ``batch`` is the state's sample-row count (the engine's slot rows,
+    CFG pairs included); ``layers`` enables the layer-stacked rule and
+    should be the model's block count."""
     ctx = ctx or current_ctx()
     assert ctx is not None, "serve_state_specs requires a sharding ctx"
-    paths_leaves, treedef = _flatten_with_path(state)
-    specs = []
-    for path, leaf in paths_leaves:
-        name = None
-        for entry in reversed(path):
-            k = getattr(entry, "key", None)
-            if isinstance(k, str) and k in _SERVE_STATE_AXES:
-                name = k
-                break
-        if name is None:
-            raise KeyError(
-                f"serve_state_specs: no logical axes registered for state "
-                f"leaf at {jax.tree_util.keystr(path)} (shape "
-                f"{getattr(leaf, 'shape', None)}); extend _SERVE_STATE_AXES")
-        specs.append(spec_for(leaf.shape, _SERVE_STATE_AXES[name], ctx))
-    return jax.tree.unflatten(treedef, specs)
+
+    def one(leaf):
+        axis = _slot_axis(leaf.shape, batch, layers)
+        logical = [None] * leaf.ndim
+        if axis is not None:
+            logical[axis] = "slot"
+        return spec_for(leaf.shape, logical, ctx)
+
+    return jax.tree.map(one, state)
 
 
-def serve_state_shardings(state, ctx: Optional[ShardingCtx] = None):
-    """NamedSharding tree for a ``CachedDiT`` serving-state pytree."""
+def serve_state_shardings(state, ctx: Optional[ShardingCtx] = None, *,
+                          batch: int, layers: Optional[int] = None):
+    """NamedSharding tree for any cache policy's serving-state pytree."""
     ctx = ctx or current_ctx()
     assert ctx is not None, "serve_state_shardings requires a sharding ctx"
     return jax.tree.map(lambda spec: NamedSharding(ctx.mesh, spec),
-                        serve_state_specs(state, ctx),
+                        serve_state_specs(state, ctx, batch=batch,
+                                          layers=layers),
                         is_leaf=lambda x: isinstance(x, P))
 
 

@@ -15,6 +15,10 @@ guidance scale) from the mix and one engine batch serves them side by side
 ``--sched sjf`` switches the admission queue from FIFO to
 shortest-job-first (smallest step budget among arrived requests first).
 
+``--no-cfg`` opts a guidance==1.0-only deployment into the static no-CFG
+fast path: single-row slots, no materialized uncond half — the model batch
+is S instead of 2S.
+
 ``--mesh data,model`` serves through ``ShardedDiffusionEngine`` on a
 ``(data, model)`` device mesh (slots over ``data``, DiT weights over
 ``model``) with async host admission — disable the overlap with
@@ -75,6 +79,12 @@ def main() -> None:
     ap.add_argument("--sched", default="fifo", choices=("fifo", "sjf"),
                     help="admission order among arrived requests: FIFO or "
                          "shortest-job-first")
+    ap.add_argument("--no-cfg", action="store_true",
+                    help="static no-CFG fast path for guidance==1.0-only "
+                         "deployments: single-row slots, no materialized "
+                         "uncond half (model batch S instead of 2S); "
+                         "requires --guidance 1.0 and an all-1.0 "
+                         "--guidance-mix")
     ap.add_argument("--policy", default="fastcache", choices=POLICIES)
     ap.add_argument("--rate", type=float, default=0.5,
                     help="Poisson arrival rate (requests per engine step)")
@@ -103,19 +113,25 @@ def main() -> None:
                     if v.strip()]
     # plan tables must fit the largest step budget in the workload
     max_steps = max(steps_mix + [args.steps])
+    if args.no_cfg and (args.guidance != 1.0
+                        or any(g != 1.0 for g in guidance_mix)):
+        raise SystemExit("--no-cfg serves guidance==1.0 only; pass "
+                         "--guidance 1.0 and an all-1.0 --guidance-mix")
     if args.mesh:
         data, tp = parse_mesh(args.mesh)
         engine = ShardedDiffusionEngine(
             runner, params, max_slots=args.slots, num_steps=args.steps,
             guidance_scale=args.guidance, max_steps=max_steps,
             mesh=make_serving_mesh(data, tp),
-            async_admission=not args.sync_admission)
+            async_admission=not args.sync_admission,
+            cfg_rows=not args.no_cfg)
     else:
         engine = DiffusionServingEngine(runner, params,
                                         max_slots=args.slots,
                                         num_steps=args.steps,
                                         guidance_scale=args.guidance,
-                                        max_steps=max_steps)
+                                        max_steps=max_steps,
+                                        cfg_rows=not args.no_cfg)
     trace = poisson_trace(args.requests, args.rate, seed=args.seed,
                           num_classes=cfg.dit.num_classes,
                           steps_mix=steps_mix or None,
@@ -132,6 +148,7 @@ def main() -> None:
         "topology": (engine.topology() if args.mesh
                      else {"data": 1, "model": 1, "devices": 1}),
         "async_admission": bool(args.mesh) and not args.sync_admission,
+        "cfg_rows": not args.no_cfg,
         "policy": args.policy,
         "requests": len(done),
         "steps_mix": steps_mix or [args.steps],

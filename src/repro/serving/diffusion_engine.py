@@ -17,10 +17,24 @@ engine config: the engine keeps device-resident ``(S, max_steps)``
 and admission writes the request's plan rows inside the same fused
 ``_admit`` call that resets the slot's cache state and seeds its latents.
 One batch therefore mixes 20-step and 50-step jobs at different guidance
-scales; CFG rows are always materialized, with ``guidance == 1.0``
+scales; CFG rows are materialized by default, with ``guidance == 1.0``
 expressed per-sample by the blend weights (bitwise-equal to an unguided
 solo run — see ``sampler.denoise_step``).  Finish detection is per-slot:
 slot ``s`` completes after its own ``slot_budget[s]`` steps.
+
+**Static no-CFG fast path.**  ``cfg_rows=False`` opts a
+guidance==1.0-only deployment out of the uncond half entirely: slots are
+single state rows, the model batch is S instead of 2S (the pre-plan-table
+cost for homogeneous unguided traffic), and requests carrying any other
+guidance scale are rejected at admission.  Latents stay bitwise-equal to
+the default engine at guidance 1.0 (the scalar-1.0 path in
+``denoise_step`` statically skips CFG).
+
+**Policy-agnostic state.**  The engine never names cache-state keys: the
+policy's state is an opaque pytree (``CachedDiT.init_state``), slot resets
+go through ``reset_slot``, and the per-request counters it accumulates are
+whatever ``(batch,)`` stat keys the policy's ``stats`` block carries — so
+a newly registered cache policy serves without edits here.
 
 Safety of mid-flight admission rests on two properties of ``CachedDiT``:
 every cache decision is per-sample (one slot's state never influences a
@@ -57,13 +71,25 @@ class DiffusionServingEngine:
     def __init__(self, runner: CachedDiT, params, *, max_slots: int,
                  num_steps: int = 50, guidance_scale: float = 4.0,
                  num_train_steps: int = 1000,
-                 max_steps: Optional[int] = None):
+                 max_steps: Optional[int] = None,
+                 cfg_rows: bool = True):
         # the bitwise admission-invariance contract needs per-sample gating:
         # global mode reduces the chi^2 statistic over the whole batch, so
         # an admission would silently change residents' gate decisions
-        assert runner.gate_mode == "per_sample", (
-            "DiffusionServingEngine requires FastCacheConfig("
-            f"gate_mode='per_sample'); got {runner.gate_mode!r}")
+        if runner.gate_mode != "per_sample":
+            raise ValueError(
+                "DiffusionServingEngine requires FastCacheConfig("
+                f"gate_mode='per_sample'); got {runner.gate_mode!r}")
+        # static no-CFG fast path: a deployment that will only ever serve
+        # guidance==1.0 opts out of the uncond half entirely — single-row
+        # slots, model batch S instead of 2S (requests asking for any other
+        # guidance are rejected at resolve_plan)
+        if not cfg_rows and guidance_scale != 1.0:
+            raise ValueError(
+                "cfg_rows=False is the guidance==1.0-only fast path; got "
+                f"default guidance_scale={guidance_scale}")
+        self.cfg_rows = cfg_rows
+        self.rows_per_slot = 2 if cfg_rows else 1
         self.runner = runner
         self.params = params
         self.S = max_slots
@@ -94,10 +120,15 @@ class DiffusionServingEngine:
             "guidance": jnp.full((max_slots,), guidance_scale, F32),
         }
 
-        # CFG rows are ALWAYS materialized (guidance==1.0 is a per-sample
-        # blend weight), so the state batch is fixed at 2S and slots never
-        # resize when a different-guidance request lands
-        self.state = runner.init_state(2 * max_slots)
+        # CFG rows are materialized by default (guidance==1.0 is a
+        # per-sample blend weight), so the state batch is fixed at 2S and
+        # slots never resize when a different-guidance request lands; the
+        # cfg_rows=False fast path drops the uncond half (state batch S)
+        self.state = runner.init_state(self.rows_per_slot * max_slots)
+        # per-slot counters the engine accumulates are whatever (batch,)
+        # stat keys the POLICY's state carries — the engine names none
+        self._acc_keys = tuple(k for k, v in self.state["stats"].items()
+                               if getattr(v, "ndim", 0) == 1)
         self.x = jnp.zeros((max_slots, self.img, self.img, self.ch), F32)
         self.slots: List[Optional[DiffusionRequest]] = [None] * max_slots
         self.slot_step = np.full((max_slots,), -1, np.int32)
@@ -125,16 +156,11 @@ class DiffusionServingEngine:
         self._reset = jax.jit(self.runner.reset_slot, donate_argnums=(0,))
         self._admit = jax.jit(self._admit_impl, donate_argnums=(0, 1, 2, 3))
 
-    @staticmethod
-    def _zero_acc() -> Dict[str, jax.Array]:
-        return {k: jnp.zeros((), F32)
-                for k in ("blocks_skipped", "blocks_computed",
-                          "steps_reused")}
+    def _zero_acc(self) -> Dict[str, jax.Array]:
+        return {k: jnp.zeros((), F32) for k in self._acc_keys}
 
     def _zero_slot_acc(self) -> Dict[str, jax.Array]:
-        return {k: jnp.zeros((self.S,), F32)
-                for k in ("blocks_skipped", "blocks_computed",
-                          "steps_reused")}
+        return {k: jnp.zeros((self.S,), F32) for k in self._acc_keys}
 
     # -- jitted body ----------------------------------------------------
 
@@ -150,16 +176,21 @@ class DiffusionServingEngine:
         t_prev = jnp.take_along_axis(plan["ts_prev"], idx[:, None],
                                      axis=1)[:, 0]
         before = state["stats"]
+        # cfg_rows=False is the static no-CFG fast path: a scalar 1.0
+        # statically disables guidance inside denoise_step, so the model
+        # batch is S (no uncond half) instead of 2S
         x_new, state = sampler.denoise_step(
             self.runner, params, self.sched, state, x, t, t_prev, labels,
-            guidance_scale=plan["guidance"])
+            guidance_scale=plan["guidance"] if self.cfg_rows else 1.0)
         x_new = jnp.where(active[:, None, None, None], x_new, x)
-        act_rows = jnp.concatenate([active, active])
+        act_rows = (jnp.concatenate([active, active]) if self.cfg_rows
+                    else active)
         delta = {k: (state["stats"][k] - before[k]) * act_rows
                  for k in acc}
         acc = {k: acc[k] + jnp.sum(delta[k]) for k in acc}
-        slot_acc = {k: slot_acc[k] + delta[k][:self.S] + delta[k][self.S:]
-                    for k in slot_acc}
+        fold = ((lambda d: d[:self.S] + d[self.S:]) if self.cfg_rows
+                else (lambda d: d))
+        slot_acc = {k: slot_acc[k] + fold(delta[k]) for k in slot_acc}
         return x_new, state, acc, slot_acc
 
     def _admit_impl(self, state, x, plan, slot_acc, rows, slot, noise,
@@ -182,8 +213,11 @@ class DiffusionServingEngine:
     # -- host orchestration ---------------------------------------------
 
     def _slot_rows(self, s: int) -> jnp.ndarray:
-        """State rows owned by slot s (the CFG cond/uncond pair)."""
-        return jnp.array([s, self.S + s], jnp.int32)
+        """State rows owned by slot s (the CFG cond/uncond pair, or the
+        single cond row on the cfg_rows=False fast path)."""
+        if self.cfg_rows:
+            return jnp.array([s, self.S + s], jnp.int32)
+        return jnp.array([s], jnp.int32)
 
     def request_noise(self, req: DiffusionRequest) -> jax.Array:
         """The request's deterministic initial latents, (img, img, ch) —
@@ -217,6 +251,11 @@ class DiffusionServingEngine:
                 f"request rid={req.rid} wants num_steps={n} but this "
                 f"engine's plan tables are max_steps={self.max_steps} "
                 f"wide; construct the engine with max_steps>={n}")
+        if not self.cfg_rows and g != 1.0:
+            raise ValueError(
+                f"request rid={req.rid} wants guidance_scale={g} but this "
+                f"engine runs the cfg_rows=False no-CFG fast path "
+                f"(guidance==1.0 only; no uncond rows are materialized)")
         req.num_steps, req.guidance_scale = n, float(g)
         return SamplingPlan(n, float(g))
 
@@ -335,11 +374,19 @@ class DiffusionServingEngine:
     def cache_stats(self) -> Dict:
         """Engine-lifetime cache counters under the active-slots-only
         convention; raw per-slot (batch,) accumulators — which include idle
-        padding steps — under per_slot_*."""
-        skipped = float(self.acc["blocks_skipped"])
-        computed = float(self.acc["blocks_computed"])
+        padding steps — under per_slot_*.  Tolerant of any policy's stats
+        pytree: counters a policy does not carry report 0.0."""
+        def acc(k):
+            return float(self.acc.get(k, 0.0))
+
+        def per_slot(k):
+            v = self.state["stats"].get(k)
+            rows = self.rows_per_slot * self.S
+            return ([0.0] * rows if v is None
+                    else [float(x) for x in np.asarray(v)])
+
+        skipped, computed = acc("blocks_skipped"), acc("blocks_computed")
         tot = computed + skipped
-        s = self.state["stats"]
         return {
             "policy": self.runner.policy,
             "engine_steps": self.clock,
@@ -347,9 +394,7 @@ class DiffusionServingEngine:
             "blocks_skipped": skipped,
             "blocks_computed": computed,
             "block_cache_ratio": skipped / tot if tot else 0.0,
-            "steps_reused": float(self.acc["steps_reused"]),
-            "per_slot_blocks_skipped": [
-                float(v) for v in np.asarray(s["blocks_skipped"])],
-            "per_slot_blocks_computed": [
-                float(v) for v in np.asarray(s["blocks_computed"])],
+            "steps_reused": acc("steps_reused"),
+            "per_slot_blocks_skipped": per_slot("blocks_skipped"),
+            "per_slot_blocks_computed": per_slot("blocks_computed"),
         }

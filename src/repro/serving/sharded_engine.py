@@ -92,7 +92,8 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
                  guidance_scale: float = 4.0, num_train_steps: int = 1000,
                  max_steps: Optional[int] = None,
                  async_admission: bool = True,
-                 numerics_check: Optional[bool] = None):
+                 numerics_check: Optional[bool] = None,
+                 cfg_rows: bool = True):
         self.mesh = mesh if mesh is not None else make_serving_mesh()
         self.rules = make_rules("serve")
         self._ctx = ShardingCtx(self.mesh, self.rules)
@@ -100,7 +101,7 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         super().__init__(runner, params, max_slots=max_slots,
                          num_steps=num_steps, guidance_scale=guidance_scale,
                          num_train_steps=num_train_steps,
-                         max_steps=max_steps)
+                         max_steps=max_steps, cfg_rows=cfg_rows)
         # default: self-check exactly the regime where the partitioner has
         # been caught miscompiling (a model axis wider than one device);
         # model==1 topologies are covered bitwise by the parity tests
@@ -123,7 +124,12 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         # slot-major over `data`
         self._params_sh = param_shardings(self.runner.model.param_defs(),
                                           ctx)
-        self._state_sh = serve_state_shardings(self.state, ctx)
+        # the state walker is policy-agnostic: it derives slot axes from
+        # leaf ranks/extents (batch = this engine's state rows, CFG pairs
+        # included), never from state keys
+        self._state_sh = serve_state_shardings(
+            self.state, ctx, batch=self.rows_per_slot * self.S,
+            layers=self.runner.L)
         self._plan_sh = serve_plan_shardings(self.plan, ctx)
         self._slot_acc_sh = {
             k: NamedSharding(mesh, spec_for((self.S,), ("slot",), ctx))
@@ -248,8 +254,9 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         ref_eng = DiffusionServingEngine(
             self.runner, self._unplaced_params, max_slots=self.S,
             num_steps=self.num_steps, guidance_scale=self.guidance_scale,
-            num_train_steps=self.num_train_steps, max_steps=self.max_steps)
-        eff = 2 * self.S          # CFG rows are always materialized
+            num_train_steps=self.num_train_steps, max_steps=self.max_steps,
+            cfg_rows=self.cfg_rows)
+        eff = self.rows_per_slot * self.S    # state rows (CFG pairs or not)
         x0 = jax.random.normal(jax.random.PRNGKey(0), self.x.shape,
                                jnp.float32)
         labels = jnp.zeros((self.S,), jnp.int32)

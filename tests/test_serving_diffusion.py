@@ -129,6 +129,55 @@ def test_no_cfg_engine_matches_solo(dit):
 
 
 # ---------------------------------------------------------------------------
+# Satellite: static no-CFG fast path (cfg_rows=False)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ("fastcache", "fora"))
+def test_no_cfg_fast_path_single_row_slots(dit, policy):
+    """cfg_rows=False: single-row slots (state batch S, no uncond half —
+    the model batch halves for homogeneous unguided traffic) while every
+    request stays bitwise-equal both to its solo replay and to the default
+    CFG-rows engine at guidance 1.0, mid-flight admission included."""
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy=policy)
+    fast = DiffusionServingEngine(runner, params, max_slots=2,
+                                  num_steps=STEPS, guidance_scale=1.0,
+                                  cfg_rows=False)
+    assert fast.rows_per_slot == 1
+    assert fast.state["stats"]["blocks_computed"].shape == (2,)
+    assert list(np.asarray(fast._slot_rows(1))) == [1]
+    done_fast = fast.run(_staggered_trace())
+    assert len(done_fast) == 3
+    assert_solo_replay_parity(fast, model, params, policy, done_fast)
+    full = _engine(model, params, policy, guidance=1.0)
+    done_full = full.run(_staggered_trace())
+    a = {r.rid: r.latents for r in done_fast}
+    for r in done_full:
+        np.testing.assert_array_equal(a[r.rid], r.latents,
+                                      err_msg=f"rid={r.rid}")
+
+
+def test_no_cfg_fast_path_rejects_guided_traffic(dit):
+    """The fast path is guidance==1.0-only: a guided default at
+    construction or a guided request at admission must raise (there are no
+    uncond rows to serve it from)."""
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig())
+    with pytest.raises(ValueError, match="cfg_rows"):
+        DiffusionServingEngine(runner, params, max_slots=2,
+                               num_steps=STEPS, cfg_rows=False)
+    eng = DiffusionServingEngine(runner, params, max_slots=2,
+                                 num_steps=STEPS, guidance_scale=1.0,
+                                 cfg_rows=False)
+    with pytest.raises(ValueError, match="no-CFG"):
+        eng.add_request(DiffusionRequest(rid=0, label=1, seed=1,
+                                         guidance_scale=4.0))
+    # explicit guidance 1.0 is fine
+    assert eng.add_request(DiffusionRequest(rid=1, label=1, seed=1,
+                                            guidance_scale=1.0))
+
+
+# ---------------------------------------------------------------------------
 # Satellite: mixed-have_cache per-sample warm-up at the runner level
 # ---------------------------------------------------------------------------
 
@@ -186,17 +235,17 @@ def test_batched_with_straggler_matches_solo(dit):
 # ---------------------------------------------------------------------------
 
 def _assert_slot_reset(eng, s):
+    """The slot's rows of every fastcache state buffer are re-armed (the
+    plugin state is minimal: only fastcache's own buffers exist)."""
     rows = np.asarray(eng._slot_rows(s))
     st = eng.state
+    assert set(st) == {"prev_tokens_in", "prev_hidden", "gate",
+                       "have_cache", "stats"}
     assert not np.asarray(st["have_cache"])[rows].any()
     assert not np.asarray(st["gate"].initialized)[:, rows].any()
     np.testing.assert_array_equal(np.asarray(st["gate"].sigma2)[:, rows], 1.0)
     assert not np.asarray(st["prev_hidden"])[:, rows].any()
     assert not np.asarray(st["prev_tokens_in"])[rows].any()
-    assert not np.asarray(st["prev_eps"])[rows].any()
-    np.testing.assert_array_equal(np.asarray(st["step_count"])[rows], 0)
-    np.testing.assert_array_equal(np.asarray(st["tea_acc"])[rows], 0.0)
-    np.testing.assert_array_equal(np.asarray(st["ada_skip_left"])[rows], 0)
 
 
 def test_slot_state_reset_on_admission_and_free(dit):

@@ -122,22 +122,40 @@ def test_serve_rules_shard_slots_over_data():
     assert make_rules("train")["slot"] is None
 
 
-def test_serve_state_specs_cover_every_leaf(dit):
+@pytest.mark.parametrize("policy", POLICIES)
+def test_serve_state_specs_cover_every_leaf(dit, policy):
+    """The opaque-pytree walker covers EVERY registered policy's state: it
+    derives each leaf's spec from rank/extents alone (no state keys), so a
+    new policy module shards without touching distributed/sharding.py."""
     cfg, model, params = dit
-    runner = CachedDiT(model, FastCacheConfig())
+    runner = CachedDiT(model, FastCacheConfig(), policy=policy)
     state = runner.init_state(4)
     ctx = ShardingCtx(jax.make_mesh((1, 1), ("data", "model")),
                       make_rules("serve"))
-    specs = serve_state_specs(state, ctx)
+    specs = serve_state_specs(state, ctx, batch=4, layers=runner.L)
     flat_state = jax.tree.leaves(state)
     flat_specs = jax.tree.leaves(specs,
                                  is_leaf=lambda x: isinstance(x, P))
     assert len(flat_state) == len(flat_specs)
     for leaf, spec in zip(flat_state, flat_specs):
         assert len(spec) == leaf.ndim, (leaf.shape, spec)
-    sh = serve_state_shardings(state, ctx)
+    sh = serve_state_shardings(state, ctx, batch=4, layers=runner.L)
     assert jax.tree.structure(jax.tree.map(lambda _: 0, state)) == \
         jax.tree.structure(jax.tree.map(lambda _: 0, sh))
+
+
+def test_slot_axis_rank_rules(dit):
+    """The walker's rank/leading-axis contract: leading batch dim -> slot;
+    layer-stacked (L or L+1 leading, batch second) -> slot on axis 1 (the
+    layer rule wins even when L == batch); no batch extent -> replicated."""
+    from repro.distributed.sharding import _slot_axis
+    assert _slot_axis((8,), 8, 2) == 0
+    assert _slot_axis((8, 16, 128), 8, 2) == 0
+    assert _slot_axis((2, 8), 8, 2) == 1          # (L, B) trackers
+    assert _slot_axis((3, 8, 16, 128), 8, 2) == 1  # (L+1, B, N, D) payloads
+    assert _slot_axis((4, 4), 4, 4) == 1          # L == batch: layer rule
+    assert _slot_axis((), 8, 2) is None
+    assert _slot_axis((5, 7), 8, 2) is None       # no batch extent
 
 
 def test_serve_plan_specs_shard_slot_rows():
@@ -193,6 +211,28 @@ def test_sharded_1x1_matches_base_bitwise(dit):
     cfg, model, params = dit
     _assert_same_serving(_base(model, params, "fastcache"),
                          _sharded(model, params, "fastcache", topo=(1, 1)))
+
+
+def test_sharded_no_cfg_fast_path_matches_base(dit):
+    """cfg_rows=False rides the sharded runtime unchanged: single-row
+    slots (state batch S), bitwise-equal latents to the single-device
+    fast-path engine."""
+    cfg, model, params = dit
+    mk = lambda: CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    base = DiffusionServingEngine(mk(), params, max_slots=4,
+                                  num_steps=STEPS, guidance_scale=1.0,
+                                  cfg_rows=False)
+    sh = ShardedDiffusionEngine(mk(), params, max_slots=4, num_steps=STEPS,
+                                guidance_scale=1.0, cfg_rows=False,
+                                mesh=make_serving_mesh(1, 1))
+    assert sh.rows_per_slot == 1
+    assert sh.state["have_cache"].shape == (4,)
+    trace = [DiffusionRequest(rid=i, label=i, seed=20 + i, arrival_step=i)
+             for i in range(5)]
+    a = {r.rid: np.asarray(r.latents) for r in base.run(list(trace))}
+    b = {r.rid: np.asarray(r.latents) for r in sh.run(list(trace))}
+    for rid in a:
+        np.testing.assert_array_equal(a[rid], b[rid], err_msg=f"rid={rid}")
 
 
 def test_async_admission_matches_sync(dit):
