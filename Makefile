@@ -1,9 +1,15 @@
 # One-command verify/bench entry points (the tier-1 command of ROADMAP.md).
-.PHONY: test test-fast test-serving test-sharded test-policies bench-smoke \
-	bench-serve bench
+.PHONY: test test-fast test-serving test-sharded test-policies lint \
+	bench-smoke bench-serve bench
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
+
+# repo-specific static analysis (six AST checks over src/) plus runtime
+# validation of every registered cache policy's state-pytree contract;
+# exits non-zero with file:line diagnostics on any finding
+lint:
+	PYTHONPATH=src python -m tools.reprolint src
 
 # skip the slow dry-run subprocess compiles (~4 min) and the serving +
 # per-policy suites (each has its own target/CI job)

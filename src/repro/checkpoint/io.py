@@ -53,12 +53,16 @@ def load(path: str, like) -> Any:
     npz = np.load(path if path.endswith(".npz") else path + ".npz")
     leaves_like, treedef = jax.tree.flatten(like)
     n = len(leaves_like)
-    assert len(npz.files) == n, (len(npz.files), n)
+    if len(npz.files) != n:
+        raise ValueError(f"checkpoint {path!r} holds {len(npz.files)} "
+                         f"leaves; the target pytree expects {n}")
     leaves = []
     for i, ref in enumerate(leaves_like):
         arr = npz[f"leaf_{i}"]
-        assert tuple(arr.shape) == tuple(ref.shape), (
-            f"leaf {i}: {arr.shape} vs {ref.shape}")
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"checkpoint {path!r} leaf {i}: stored shape "
+                             f"{tuple(arr.shape)} != expected "
+                             f"{tuple(ref.shape)}")
         leaves.append(jnp.asarray(arr, dtype=ref.dtype))
     return jax.tree.unflatten(treedef, leaves)
 

@@ -36,9 +36,10 @@ F32 = jnp.float32
 class CachedDecoder:
     def __init__(self, model: TransformerModel, fc: FastCacheConfig,
                  fc_params: Optional[Dict] = None):
-        assert model.period == 1 and model.kinds == ("attn",), (
-            "CachedDecoder supports period-1 attention stacks; "
-            f"got {model.kinds}")
+        if model.period != 1 or model.kinds != ("attn",):
+            raise ValueError(
+                "CachedDecoder supports period-1 attention stacks; "
+                f"got {model.kinds}")
         self.model = model
         self.fc = fc
         self.gate_mode = fc.gate_mode

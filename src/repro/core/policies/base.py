@@ -65,6 +65,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import statcache
+from repro.models.dit import DiTModel
 
 F32 = jnp.float32
 
@@ -115,7 +116,7 @@ class CachePolicy:
 
     name: str = ""
 
-    def __init__(self, model, fc, fc_params, *,
+    def __init__(self, model: DiTModel, fc, fc_params, *,
                  gate_mode: str = "per_sample", use_fused: bool = False,
                  **_unused):
         self.model = model

@@ -58,7 +58,9 @@ def merge_tokens(h_t: jax.Array, h_prev: jax.Array, *, window: int,
                  keep_ratio: float, k: int, lam: float):
     """(B, N, D) -> merged (B, N_keep, D), MergeMap.  N % window == 0."""
     b, n, d = h_t.shape
-    assert n % window == 0, (n, window)
+    if n % window != 0:
+        raise ValueError(f"token count {n} must be divisible by the merge "
+                         f"window {window}")
     n_win = n // window
     m = max(1, int(round(keep_ratio * window)))
     hw = h_t.reshape(b, n_win, window, d)

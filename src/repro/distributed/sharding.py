@@ -154,7 +154,10 @@ def spec_for(shape: Sequence[int], logical_axes: Sequence[Optional[str]],
     ctx = ctx or current_ctx()
     if ctx is None:
         return P(*([None] * len(shape)))
-    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    if len(shape) != len(logical_axes):
+        raise ValueError(f"spec_for: shape {tuple(shape)} has {len(shape)} "
+                         f"dims but logical_axes {tuple(logical_axes)} "
+                         f"names {len(logical_axes)}")
     mesh_shape = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
     used: set = set()
     out = []
@@ -189,6 +192,13 @@ def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
         x, NamedSharding(ctx.mesh, spec))
 
 
+def _require_ctx(ctx: Optional[ShardingCtx], who: str) -> ShardingCtx:
+    if ctx is None:
+        raise ValueError(f"{who} requires an active sharding ctx "
+                         "(use_sharding(mesh, rules) or an explicit ctx=)")
+    return ctx
+
+
 def _slot_axis(shape: Tuple[int, ...], batch: int,
                layers: Optional[int]) -> Optional[int]:
     """Which dim of a state leaf is the sample/slot batch dim, by the
@@ -221,7 +231,7 @@ def serve_state_specs(state, ctx: Optional[ShardingCtx] = None, *,
     CFG pairs included); ``layers`` enables the layer-stacked rule and
     should be the model's block count."""
     ctx = ctx or current_ctx()
-    assert ctx is not None, "serve_state_specs requires a sharding ctx"
+    ctx = _require_ctx(ctx, "serve_state_specs")
 
     def one(leaf):
         axis = _slot_axis(leaf.shape, batch, layers)
@@ -237,7 +247,7 @@ def serve_state_shardings(state, ctx: Optional[ShardingCtx] = None, *,
                           batch: int, layers: Optional[int] = None):
     """NamedSharding tree for any cache policy's serving-state pytree."""
     ctx = ctx or current_ctx()
-    assert ctx is not None, "serve_state_shardings requires a sharding ctx"
+    ctx = _require_ctx(ctx, "serve_state_shardings")
     return jax.tree.map(lambda spec: NamedSharding(ctx.mesh, spec),
                         serve_state_specs(state, ctx, batch=batch,
                                           layers=layers),
@@ -260,7 +270,7 @@ def serve_plan_specs(plan, ctx: Optional[ShardingCtx] = None):
     """PartitionSpecs for the engine's sampling-plan tables, keyed like the
     ``plan`` dict (ts / ts_prev / guidance): slot rows over ``data``."""
     ctx = ctx or current_ctx()
-    assert ctx is not None, "serve_plan_specs requires a sharding ctx"
+    ctx = _require_ctx(ctx, "serve_plan_specs")
     return {k: spec_for(v.shape, _SERVE_PLAN_AXES[k], ctx)
             for k, v in plan.items()}
 
@@ -268,7 +278,7 @@ def serve_plan_specs(plan, ctx: Optional[ShardingCtx] = None):
 def serve_plan_shardings(plan, ctx: Optional[ShardingCtx] = None):
     """NamedSharding dict for the engine's sampling-plan tables."""
     ctx = ctx or current_ctx()
-    assert ctx is not None, "serve_plan_shardings requires a sharding ctx"
+    ctx = _require_ctx(ctx, "serve_plan_shardings")
     return {k: NamedSharding(ctx.mesh, spec)
             for k, spec in serve_plan_specs(plan, ctx).items()}
 
@@ -277,7 +287,7 @@ def param_shardings(defs, ctx: Optional[ShardingCtx] = None):
     """Pytree of NamedShardings matching a pytree of ParamDef."""
     from repro.models.params import ParamDef  # local to avoid cycle
     ctx = ctx or current_ctx()
-    assert ctx is not None, "param_shardings requires an active sharding ctx"
+    ctx = _require_ctx(ctx, "param_shardings")
 
     def one(d: ParamDef):
         return NamedSharding(ctx.mesh, spec_for(d.shape, d.axes, ctx))

@@ -114,7 +114,9 @@ def optimizer_shardings(opt, defs, ctx: ShardingCtx):
         ps = param_shardings(defs, ctx)
         from repro.training.optimizer import AdamWState
         return AdamWState(step=scalar, mu=ps, nu=ps)
-    assert isinstance(opt, Adafactor)
+    if not isinstance(opt, Adafactor):
+        raise TypeError(f"optimizer_shardings supports AdamW and Adafactor; "
+                        f"got {type(opt).__name__}")
     from repro.training.optimizer import AdafactorState
 
     def vr(d: ParamDef):

@@ -77,7 +77,9 @@ def apply_mrope(x: jax.Array, positions: jax.Array,
     rotated with its own position axis (t, h, w).
     """
     dh = x.shape[-1]
-    assert sum(sections) == dh // 2, (sections, dh)
+    if sum(sections) != dh // 2:
+        raise ValueError(f"mrope sections {sections} must sum to half the "
+                         f"head dim ({dh} // 2 = {dh // 2})")
     axis_of_freq = jnp.concatenate([
         jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)])
     # pos_per_freq: (B, S, dh/2)

@@ -30,7 +30,9 @@ def _ln(x):
 
 class DiTModel:
     def __init__(self, cfg: ModelConfig):
-        assert cfg.family == "dit" and cfg.dit is not None
+        if cfg.family != "dit" or cfg.dit is None:
+            raise ValueError(f"DiTModel requires a dit-family config with "
+                             f"cfg.dit set; got family={cfg.family!r}")
         self.cfg = cfg
         dit = cfg.dit
         self.grid = dit.image_size // dit.patch_size

@@ -85,7 +85,9 @@ def attn_apply(p, x: jax.Array, *, cfg: ModelConfig,
     causal = not cfg.is_encoder
     new_cache = None
     if decode_pos is not None:                       # ---- decode (Sq == 1)
-        assert cache is not None
+        if cache is None:
+            raise ValueError("attention decode step (decode_pos set) "
+                             "requires a KV cache; got cache=None")
         q, k, v = _qkv(p, h_in, cfg, positions)
         w = cache["k"].shape[1]
         slot = decode_pos % w                        # (B,)
@@ -189,7 +191,9 @@ def ffn_apply(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 
 def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
     m = cfg.moe
-    assert m is not None
+    if m is None:
+        raise ValueError(f"{cfg.name}: moe block requested but cfg.moe is "
+                         "None")
     d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
     out = {
         "norm": ParamDef((d,), ("embed",), "ones", dtype="float32"),
@@ -266,7 +270,9 @@ def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     """Capacity-based top-k dispatch (scatter, not one-hot einsum) with
     expert-parallel GEMMs. Returns (residual-added output, aux load loss)."""
     m = cfg.moe
-    assert m is not None
+    if m is None:
+        raise ValueError(f"{cfg.name}: moe block requested but cfg.moe is "
+                         "None")
     b, s, d = x.shape
     t = b * s
     k, e = m.top_k, m.num_experts

@@ -113,7 +113,8 @@ def mamba_apply(p, x, *, cfg: ModelConfig, state: Optional[dict] = None,
     h0 = state["ssm"] if state is not None else jnp.zeros((b, di, ds), F32)
 
     if decode:
-        assert s == 1
+        if s != 1:
+            raise ValueError(f"mamba decode step expects seq len 1, got {s}")
         da, dbx, c_mat = _ssm_params(p, xc, cfg)
         h1 = da[:, 0] * h0 + dbx[:, 0]
         y = jnp.einsum("bis,bs->bi", h1, c_mat[:, 0])[:, None]  # (B,1,di)

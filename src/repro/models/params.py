@@ -35,7 +35,11 @@ def init_params(defs, key: jax.Array, default_dtype: str):
 
     leaves = []
     for path, d in paths_defs:
-        assert len(d.shape) == len(d.axes), f"{path}: {d.shape} vs {d.axes}"
+        if len(d.shape) != len(d.axes):
+            raise ValueError(
+                f"ParamDef at {jax.tree_util.keystr(path)}: shape {d.shape} "
+                f"has {len(d.shape)} dims but axes {d.axes} names "
+                f"{len(d.axes)}")
         dtype = jnp.dtype(d.dtype or default_dtype)
         k = jax.random.fold_in(key, zlib.crc32(jax.tree_util.keystr(path).encode()))
         if d.init == "zeros":

@@ -205,7 +205,8 @@ def mlstm_apply(p, x, *, cfg: ModelConfig, state: Optional[dict] = None,
         st = (jnp.zeros((b, h, dh, dh), F32), jnp.zeros((b, h, dh), F32),
               jnp.zeros((b, h), F32))
     if decode:
-        assert s == 1
+        if s != 1:
+            raise ValueError(f"mlstm decode step expects seq len 1, got {s}")
         hs, st = mlstm_step(q[:, 0].astype(F32), k[:, 0].astype(F32),
                             v[:, 0].astype(F32), li[:, 0], lf[:, 0], st)
         hs = hs[:, None]                               # (B,1,H,dh)
@@ -295,7 +296,8 @@ def slstm_apply(p, x, *, cfg: ModelConfig, state: Optional[dict] = None,
         st = (z0, z0, z0, z0)
 
     if decode:
-        assert s == 1
+        if s != 1:
+            raise ValueError(f"slstm decode step expects seq len 1, got {s}")
         st = _slstm_cell(p, xw[:, 0], st)
         hs = st[3][:, None]                                  # (B,1,H,dh)
     else:

@@ -40,9 +40,10 @@ class TransformerModel:
         self.cfg = cfg
         self.kinds = cfg.block_pattern or ("attn",)
         self.period = len(self.kinds)
-        assert cfg.num_layers % self.period == 0, (
-            f"{cfg.name}: {cfg.num_layers} layers not divisible by "
-            f"pattern period {self.period}")
+        if cfg.num_layers % self.period != 0:
+            raise ValueError(
+                f"{cfg.name}: {cfg.num_layers} layers not divisible by "
+                f"pattern period {self.period}")
         self.n_super = cfg.num_layers // self.period
         self.prefix_groups = prefix_groups
 

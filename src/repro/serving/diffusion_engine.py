@@ -232,7 +232,10 @@ class DiffusionServingEngine:
         """Rewind the step clock and headline counters (e.g. after a warm-up
         trace, so a timed trace's absolute arrival steps line up).  Requires
         an idle engine; per-slot raw accumulators keep their history."""
-        assert all(r is None for r in self.slots), "engine not idle"
+        if any(r is not None for r in self.slots):
+            raise ValueError("reset_clock requires an idle engine; slots "
+                             f"{[s for s, r in enumerate(self.slots) if r is not None]} "
+                             "still hold requests")
         self.clock = 0
         self.model_steps = 0
         self.acc = self._zero_acc()

@@ -1,3 +1,4 @@
+import contextlib
 import dataclasses
 
 import jax
@@ -21,6 +22,24 @@ def f32_cfg(cfg, *, big_capacity: bool = True):
         cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
                                                   capacity_factor=8.0))
     return cfg
+
+
+@contextlib.contextmanager
+def steady_state_guard(*jitted_fns, transfers="disallow"):
+    """Steady-state serving invariant: the guarded region must trigger zero
+    new jit compilations on the given jitted callables and (by default) no
+    device->host transfers.  The transfer guard bites on accelerator
+    backends (CPU jax implements it as a no-op since host and device memory
+    coincide), so the compilation-cache assertion is the portably enforced
+    half.  Pass ``transfers="allow"`` for engines whose step loop
+    legitimately fetches (e.g. per-token AR sampling)."""
+    before = [f._cache_size() for f in jitted_fns]
+    with jax.transfer_guard_device_to_host(transfers):
+        yield
+    after = [f._cache_size() for f in jitted_fns]
+    assert after == before, (
+        "steady-state region triggered a recompile: jit cache sizes "
+        f"{before} -> {after}")
 
 
 def assert_solo_replay_parity(eng, model, params, policy, done):

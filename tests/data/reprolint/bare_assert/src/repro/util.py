@@ -1,0 +1,6 @@
+"""Fixture: a bare assert in library code (no-bare-assert must fire)."""
+
+
+def check_window(n: int, window: int) -> int:
+    assert n % window == 0  # LINT: no-bare-assert
+    return n // window

@@ -1,0 +1,27 @@
+"""Fixture: use-after-donation (donation-discipline must fire twice —
+a straight-line read of a donated buffer, and a loop that never rebinds)."""
+import jax
+
+
+class Engine:
+    def __init__(self, fn):
+        self._step = jax.jit(fn, donate_argnums=(0,))
+
+    def run_bad(self, state, x):
+        out = self._step(state, x)
+        norm = state.sum()  # LINT: donation-discipline
+        return out, norm
+
+    def run_ok(self, state, x):
+        state, out = self._step(state, x)
+        return state.sum() + out
+
+    def loop_bad(self, state, x):
+        for _ in range(3):
+            out = self._step(state, x)  # LINT: donation-discipline (wrap)
+        return out
+
+    def loop_ok(self, state, x):
+        for _ in range(3):
+            state, x = self._step(state, x)
+        return state

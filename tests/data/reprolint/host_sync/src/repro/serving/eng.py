@@ -1,0 +1,12 @@
+"""Fixture: a float() host sync on a traced value inside a jitted function
+(host-sync-in-jit must fire), reached through a module-level jax.jit."""
+import jax
+import jax.numpy as jnp
+
+
+def _impl(x: jax.Array):
+    s = jnp.sum(x)
+    return float(s)  # LINT: host-sync-in-jit
+
+
+step = jax.jit(_impl)

@@ -1,0 +1,11 @@
+"""Fixture: a Pallas kernel with NO ref.py twin (kernel-parity must
+fire: missing reference)."""
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def myk(x):
+    return pl.pallas_call(_kernel, out_shape=x)(x)

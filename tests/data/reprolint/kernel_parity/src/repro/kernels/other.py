@@ -1,0 +1,11 @@
+"""Fixture: a Pallas kernel whose ref twin exists but is never compared
+by any test (kernel-parity must fire: missing parity test)."""
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0
+
+
+def other(x):
+    return pl.pallas_call(_kernel, out_shape=x)(x)

@@ -1,0 +1,5 @@
+"""Fixture reference module: has `other`, lacks `myk`."""
+
+
+def other(x):
+    return x + 1.0

@@ -1,0 +1,3 @@
+"""Fixture package __init__: imports good and twice, but NOT orphan."""
+from repro.core.policies import good  # noqa: F401
+from repro.core.policies import twice  # noqa: F401

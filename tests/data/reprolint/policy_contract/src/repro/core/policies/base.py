@@ -1,0 +1,8 @@
+"""Fixture registry stub (base.py is exempt from the one-policy rule)."""
+
+
+def register(name):
+    def deco(cls):
+        cls.name = name
+        return cls
+    return deco

@@ -1,0 +1,9 @@
+"""Fixture: a well-formed policy module — exactly one registration,
+imported from the package __init__ (policy-contract must stay silent)."""
+from repro.core.policies.base import register
+
+
+@register("good")
+class Good:
+    def init_state(self, batch):
+        return {}

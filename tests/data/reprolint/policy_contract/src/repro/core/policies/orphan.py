@@ -1,0 +1,9 @@
+"""Fixture: registers a policy but is never imported from the package
+__init__ — its @register never runs (policy-contract must fire)."""
+from repro.core.policies.base import register
+
+
+@register("orphan")
+class Orphan:
+    def init_state(self, batch):
+        return {}

@@ -1,0 +1,15 @@
+"""Fixture: registers TWO policies in one module (policy-contract must
+fire — one module, one policy)."""
+from repro.core.policies.base import register
+
+
+@register("twice-a")
+class TwiceA:
+    def init_state(self, batch):
+        return {}
+
+
+@register("twice-b")
+class TwiceB:  # LINT: policy-contract
+    def init_state(self, batch):
+        return {}

@@ -1,0 +1,6 @@
+"""Fixture: the same bare assert, waived with the escape hatch."""
+
+
+def check_window(n: int, window: int) -> int:
+    assert n % window == 0  # reprolint: disable=no-bare-assert
+    return n // window

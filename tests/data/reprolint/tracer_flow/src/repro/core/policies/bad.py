@@ -1,0 +1,12 @@
+"""Fixture: Python `if` on a traced value inside a policy `step`
+(tracer-control-flow must fire; `step` is a protocol jit root)."""
+import jax
+import jax.numpy as jnp
+
+
+class BadPolicy:
+    def step(self, params, state, x_in: jax.Array, c):
+        delta = jnp.mean(x_in)
+        if delta > 0.5:  # LINT: tracer-control-flow
+            return x_in, state
+        return x_in * 2.0, state

@@ -1,0 +1,149 @@
+"""reprolint self-tests.
+
+Every check gets a fixture tree under ``tests/data/reprolint/<case>/src``
+carrying a known violation on a line marked ``# LINT: <check>``; the check
+must fire exactly at the markers and nowhere else.  The runtime half of
+policy-contract is exercised both ways: clean on the real registry, and
+catching a deliberately mis-shaped policy registered on the fly.  Finally,
+reprolint must be silent on the repository's own src/ tree.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.reprolint import run_checks  # noqa: E402
+from tools.reprolint.checks import CHECKS, load_all  # noqa: E402
+
+DATA = REPO / "tests" / "data" / "reprolint"
+
+EXPECTED_CHECKS = {"no-bare-assert", "host-sync-in-jit",
+                   "tracer-control-flow", "policy-contract",
+                   "donation-discipline", "kernel-parity"}
+
+
+def _marked(case):
+    """{(abs path, line, check)} from ``# LINT: <check>`` markers."""
+    out = set()
+    for p in sorted((DATA / case / "src").rglob("*.py")):
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if "# LINT:" in line:
+                out.add((str(p), i, line.split("# LINT:")[1].split()[0]))
+    return out
+
+
+def test_all_builtin_checks_registered():
+    load_all()
+    assert set(CHECKS) == EXPECTED_CHECKS
+
+
+@pytest.mark.parametrize("case,check", [
+    ("bare_assert", "no-bare-assert"),
+    ("host_sync", "host-sync-in-jit"),
+    ("tracer_flow", "tracer-control-flow"),
+    ("donation", "donation-discipline"),
+])
+def test_check_fires_exactly_at_markers(case, check):
+    diags = run_checks(DATA / case / "src", checks=[check],
+                       static_only=True)
+    got = {(d.file, d.line, d.check) for d in diags}
+    assert got == _marked(case), \
+        f"diagnostics {got} != markers for {case}"
+
+
+def test_escape_hatch_suppresses():
+    assert run_checks(DATA / "suppressed" / "src", static_only=True) == []
+
+
+def test_policy_contract_static():
+    diags = run_checks(DATA / "policy_contract" / "src",
+                       checks=["policy-contract"], static_only=True)
+    by_file = {Path(d.file).name: d for d in diags}
+    assert set(by_file) == {"twice.py", "orphan.py"}, diags
+    twice = by_file["twice.py"]
+    assert "exactly one" in twice.message and "found 2" in twice.message
+    assert {(Path(f).name, l) for f, l, _ in
+            _marked("policy_contract")} == {("twice.py", twice.line)}
+    assert "not imported" in by_file["orphan.py"].message
+
+
+def test_kernel_parity_fixture():
+    diags = run_checks(DATA / "kernel_parity" / "src",
+                       checks=["kernel-parity"], static_only=True)
+    by_file = {Path(d.file).name: d for d in diags}
+    assert set(by_file) == {"myk.py", "other.py"}, diags
+    assert "no pure-jnp counterpart" in by_file["myk.py"].message
+    assert "parity" in by_file["other.py"].message
+
+
+def test_kernel_parity_silent_on_real_kernels():
+    diags = run_checks(REPO / "src", checks=["kernel-parity"],
+                       static_only=True, tests_dir=REPO / "tests")
+    assert diags == []
+
+
+def test_static_checks_silent_on_current_tree():
+    assert run_checks(REPO / "src", static_only=True,
+                      tests_dir=REPO / "tests") == []
+
+
+def test_runtime_policy_validation_clean_on_registry():
+    from tools.reprolint.checks.policy_contract import validate_registry
+    assert validate_registry(str(REPO / "src")) == []
+
+
+def test_runtime_policy_validation_catches_bad_policy():
+    import jax.numpy as jnp
+    from repro.core.policies import base as policies_base
+    from tools.reprolint.checks.policy_contract import validate_registry
+
+    @policies_base.register("_lintprobe")
+    class _Probe(policies_base.CachePolicy):
+        def init_state(self, batch):
+            return {
+                # leading axis 9999 is neither the batch nor an L/L+1
+                # layer axis -> the sharding walker cannot place the rows
+                "weird": jnp.zeros((9999, batch), jnp.float32),
+                "stats": {
+                    # (B, 2) is not a per-sample (B,) counter
+                    "blocks_computed": jnp.zeros((batch, 2), jnp.float32),
+                    "steps": jnp.zeros((), jnp.float32),
+                },
+            }
+
+        def step(self, params, state, x_in, c):
+            return x_in, state
+
+    try:
+        diags = [d for d in validate_registry(str(REPO / "src"))
+                 if "_lintprobe" in d.message]
+        msgs = " | ".join(d.message for d in diags)
+        assert any("weird" in d.message and "rank rules" in d.message
+                   for d in diags), msgs
+        assert any("blocks_computed" in d.message
+                   and "(B,)" in d.message for d in diags), msgs
+        # the probe's own source location is attributed
+        assert all(d.file.endswith("test_reprolint.py") for d in diags)
+    finally:
+        del policies_base._REGISTRY["_lintprobe"]
+
+
+def test_cli_exit_codes():
+    env = dict(os.environ, PYTHONPATH="src")
+    bad = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint",
+         str(DATA / "bare_assert" / "src"), "--static-only"],
+        cwd=REPO, env=env, capture_output=True, text=True)
+    assert bad.returncode == 1, bad.stderr
+    assert "[no-bare-assert]" in bad.stdout
+    clean = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint",
+         str(DATA / "suppressed" / "src"), "--static-only"],
+        cwd=REPO, env=env, capture_output=True, text=True)
+    assert clean.returncode == 0, clean.stdout + clean.stderr

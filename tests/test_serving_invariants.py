@@ -1,0 +1,117 @@
+"""Steady-state serving invariants (the runtime half of reprolint).
+
+After warm-up, a serving engine's inner loop must be compile-free: every
+``step()`` reuses the jitted executables traced during warm-up, and — for
+the diffusion engine, whose step loop is fully device-resident — performs
+no device->host transfer unless a request actually finishes (harvest).
+A recompile in steady state means a shape or dtype leaked into a trace
+(e.g. a host int that should have been a device array), which silently
+multiplies serving latency; these tests pin that down with
+``jitted_fn._cache_size()`` snapshots inside ``jax.transfer_guard``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import FastCacheConfig
+from repro.core import CachedDiT
+from repro.models import build_model
+from repro.serving import (DiffusionRequest, DiffusionServingEngine,
+                           Request, ServingEngine)
+from tests.conftest import f32_cfg, steady_state_guard
+
+pytestmark = pytest.mark.serving
+
+
+@pytest.fixture(scope="module")
+def dit():
+    cfg = f32_cfg(get_reduced("dit-b2"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_diffusion_engine_steady_state(dit):
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    eng = DiffusionServingEngine(runner, params, max_slots=2,
+                                 num_steps=12, guidance_scale=4.0)
+
+    # Warm every jitted entry point: an admission traces _admit, the first
+    # step traces _step, and running a short request to completion traces
+    # _reset (slot free) — after this, steady state must be compile-free.
+    warm = DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0,
+                            num_steps=4)
+    if not eng.add_request(warm):
+        raise AssertionError("warm-up admission must land in a free slot")
+    done = []
+    while not done:
+        done += eng.step()
+
+    residents = [DiffusionRequest(rid=1, label=2, seed=11, arrival_step=0),
+                 DiffusionRequest(rid=2, label=3, seed=12, arrival_step=0)]
+    for r in residents:
+        if not eng.add_request(r):
+            raise AssertionError("resident admission must land")
+    eng.step()  # settle: one post-admission step outside the window
+
+    # Both residents run 12-step plans and have consumed 1; an 8-step
+    # window therefore sees no completions, so the loop must be pure
+    # device compute: zero recompiles, zero host fetches.
+    with steady_state_guard(eng._step, eng._reset, eng._admit):
+        for _ in range(8):
+            finished = eng.step()
+            assert finished == [], \
+                f"no request should finish inside the window: {finished}"
+
+    while len(done) < 3:
+        done += eng.step()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+
+
+def test_diffusion_mid_window_admission_is_compile_free(dit):
+    """Admitting into a warm engine reuses the traced _admit executable —
+    mid-flight admission must not pay a compile either."""
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    eng = DiffusionServingEngine(runner, params, max_slots=2,
+                                 num_steps=10, guidance_scale=4.0)
+    if not eng.add_request(DiffusionRequest(rid=0, label=1, seed=10,
+                                            arrival_step=0)):
+        raise AssertionError("first admission must land")
+    eng.step()
+    eng.step()
+    with steady_state_guard(eng._step, eng._admit):
+        if not eng.add_request(DiffusionRequest(rid=1, label=2, seed=11,
+                                                arrival_step=2)):
+            raise AssertionError("mid-flight admission must land")
+        for _ in range(4):
+            assert eng.step() == []
+
+
+def test_ar_engine_steady_state():
+    cfg = f32_cfg(get_reduced("qwen3-0.6b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_batch=2, window=64,
+                        fastcache=FastCacheConfig())
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=32)
+            for i in range(2)]
+    for r in reqs:
+        if not eng.add_request(r):
+            raise AssertionError("admission must land in a free slot")
+    for _ in range(3):  # warm the batched decode trace
+        eng.step()
+
+    # AR decode fetches the sampled token every step by design, so host
+    # transfers stay allowed; the enforced invariant is zero recompiles
+    # of the prefill/decode executables across the steady window.
+    with steady_state_guard(eng._prefill, eng._decode, transfers="allow"):
+        for _ in range(16):
+            eng.step()
+    assert not any(r.done for r in reqs), \
+        "window sized to finish no request (budget 32, used 20)"

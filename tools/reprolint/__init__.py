@@ -1,0 +1,58 @@
+"""reprolint — repo-specific static analysis for the FastCache serving
+stack.
+
+Run as ``python -m tools.reprolint src/`` (or ``make lint``).  Six checks,
+each its own module under ``checks/`` (registered like cache policies):
+
+  no-bare-assert       library code raises, never asserts
+  host-sync-in-jit     no float()/.item()/np.* on traced values in the
+                       jit region
+  tracer-control-flow  no Python if/while/bool() on traced values in the
+                       policy/kernel/serving layers
+  policy-contract      every policy module registers exactly one policy,
+                       is imported, and its live state pytree obeys the
+                       sharding/stats/donation contract
+  donation-discipline  buffers donated to jitted calls are rebound before
+                       reuse
+  kernel-parity        every Pallas kernel has a ref.py twin and a parity
+                       test
+
+Suppress a single finding with ``# reprolint: disable=<check>`` on the
+flagged line.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from tools.reprolint.diagnostics import (Diagnostic, apply_suppressions,
+                                         parse_suppressions)
+from tools.reprolint.index import RepoIndex
+from tools.reprolint.jitscope import JitScope
+
+
+def run_checks(root, *, checks: Optional[Sequence[str]] = None,
+               static_only: bool = False,
+               tests_dir=None) -> List[Diagnostic]:
+    """Run reprolint over the package root; returns surviving diagnostics
+    (suppressions already applied), sorted by file/line."""
+    from tools.reprolint.checks import CHECKS, LintContext, load_all
+    load_all()
+    root = Path(root)
+    if tests_dir is None:
+        tests_dir = root.resolve().parent / "tests"
+    index = RepoIndex(root)
+    scope = JitScope(index)
+    ctx = LintContext(index=index, scope=scope, root=root,
+                      tests_dir=Path(tests_dir), static_only=static_only)
+    selected = list(checks) if checks else sorted(CHECKS)
+    unknown = [c for c in selected if c not in CHECKS]
+    if unknown:
+        raise ValueError(f"unknown reprolint check(s) {unknown}; "
+                         f"available: {sorted(CHECKS)}")
+    diags: List[Diagnostic] = []
+    for name in selected:
+        diags.extend(CHECKS[name](ctx))
+    per_file = {m.path: parse_suppressions(m.source)
+                for m in index.modules.values()}
+    return apply_suppressions(diags, per_file)

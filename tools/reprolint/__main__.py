@@ -1,0 +1,54 @@
+"""CLI: ``python -m tools.reprolint src/`` — exit 0 when clean, 1 with
+``path:line: [check] message`` diagnostics otherwise."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    from tools.reprolint import run_checks
+    from tools.reprolint.checks import CHECKS, load_all
+    load_all()
+    p = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="repo-specific static analysis for the FastCache "
+                    "serving stack")
+    p.add_argument("roots", nargs="*", default=["src"],
+                   help="package roots to scan (default: src)")
+    p.add_argument("--static-only", action="store_true",
+                   help="AST checks only: skip the runtime policy-registry "
+                        "validation (no jax import)")
+    p.add_argument("--tests-dir", default=None,
+                   help="tests directory for kernel-parity "
+                        "(default: <root>/../tests)")
+    p.add_argument("--checks", default=None,
+                   help="comma-separated subset of checks to run")
+    p.add_argument("--list-checks", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.list_checks:
+        for name in sorted(CHECKS):
+            doc = (sys.modules[CHECKS[name].__module__].__doc__
+                   or "").strip().splitlines()[0]
+            print(f"{name:22s} {doc}")
+        return 0
+
+    checks = ([c.strip() for c in args.checks.split(",") if c.strip()]
+              if args.checks else None)
+    diags = []
+    for root in args.roots:
+        diags.extend(run_checks(root, checks=checks,
+                                static_only=args.static_only,
+                                tests_dir=args.tests_dir))
+    for d in diags:
+        print(d)
+    if diags:
+        print(f"reprolint: {len(diags)} finding(s)", file=sys.stderr)
+        return 1
+    print("reprolint: clean", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""The pluggable check registry (mirrors the cache-policy registry idiom:
+one module per check, each registers itself by name; ``load_all`` imports
+the built-ins in diagnostic order)."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from pathlib import Path
+from typing import Callable, Dict, List
+
+from tools.reprolint.diagnostics import Diagnostic
+from tools.reprolint.index import RepoIndex
+from tools.reprolint.jitscope import JitScope
+
+CHECKS: Dict[str, Callable[["LintContext"], List[Diagnostic]]] = {}
+
+_BUILTINS = ("bare_assert", "host_sync", "tracer_flow", "policy_contract",
+             "donation", "kernel_parity")
+
+
+def register_check(name: str):
+    """Decorator: register a check function under ``name``.  A check takes
+    a LintContext and returns a list of Diagnostics."""
+    def deco(fn):
+        if name in CHECKS and CHECKS[name] is not fn:
+            raise ValueError(f"reprolint check {name!r} already registered")
+        fn.check_name = name
+        CHECKS[name] = fn
+        return fn
+    return deco
+
+
+def load_all() -> None:
+    for m in _BUILTINS:
+        importlib.import_module(f"tools.reprolint.checks.{m}")
+
+
+@dataclasses.dataclass
+class LintContext:
+    index: RepoIndex
+    scope: JitScope
+    root: Path             # the scan root (package root, e.g. src/)
+    tests_dir: Path        # where parity/self tests live (may not exist)
+    static_only: bool      # skip checks that import the scanned code

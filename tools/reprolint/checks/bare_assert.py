@@ -1,0 +1,29 @@
+"""no-bare-assert: library code must not rely on ``assert``.
+
+``python -O`` strips asserts, so an assert guarding a shape or contract
+silently stops guarding in optimized runs; and a bare assert carries no
+message for the caller.  Library code raises ``ValueError`` / ``TypeError``
+with a diagnostic message instead.  Tests are exempt (they are never run
+under ``-O`` and pytest rewrites asserts) — reprolint only scans the
+package root, so this exemption falls out of the scan scope.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.reprolint.checks import LintContext, register_check
+from tools.reprolint.diagnostics import Diagnostic
+
+
+@register_check("no-bare-assert")
+def check(ctx: LintContext) -> List[Diagnostic]:
+    diags = []
+    for mod in ctx.index.modules.values():
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assert):
+                diags.append(Diagnostic(
+                    mod.path, node.lineno, "no-bare-assert",
+                    "assert in library code is stripped under `python -O`; "
+                    "raise ValueError/TypeError with a message instead"))
+    return diags

@@ -1,0 +1,226 @@
+"""donation-discipline: a buffer donated to a jitted call is dead after
+the call — reading it again is a use-after-free the CPU backend may not
+catch (on TPU, donation aliases the output into the input buffer; jax
+raises on a *traced* reuse but a host-side read of a deleted array fails
+only at access time, deep inside whatever touched it).
+
+The check records every ``self.X = jax.jit(fn, donate_argnums=(...))``
+binding, then at each ``self.X(...)`` call site verifies that every donated
+positional argument that is a plain name / attribute / subscript is rebound
+before its next use.  Rebinding a *prefix* kills the whole expression
+(``ref, got = ...`` kills ``got[1]``), and the donating statement's own
+assignment targets are applied first (``state, out = self._step(state, …)``
+is the canonical correct pattern).  If the call sits in a loop, the scan
+wraps around to the loop head — the next iteration's uses see the donated
+buffer too.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.reprolint.checks import LintContext, register_check
+from tools.reprolint.diagnostics import Diagnostic
+from tools.reprolint.jitscope import own_nodes
+
+CHECK = "donation-discipline"
+
+
+def _donate_positions(call: ast.Call) -> Set[int]:
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return {v.value}
+        if isinstance(v, (ast.Tuple, ast.List)):
+            return {e.value for e in v.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, int)}
+    return set()
+
+
+@register_check(CHECK)
+def check(ctx: LintContext) -> List[Diagnostic]:
+    index, scope = ctx.index, ctx.scope
+    # 1. donated-attribute records per class
+    records: Dict[str, Dict[str, Set[int]]] = {}
+    for ci in index.classes.values():
+        mod = index.modules[ci.module]
+        for fi in index.functions.values():
+            if fi.cls != ci.qualname:
+                continue
+            for node in own_nodes(fi.node):
+                if not (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1):
+                    continue
+                t, val = node.targets[0], node.value
+                if not (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"
+                        and isinstance(val, ast.Call)
+                        and scope._is_jit_name(
+                            scope.resolve_external(val.func, mod))):
+                    continue
+                donated = _donate_positions(val)
+                if donated:
+                    records.setdefault(ci.qualname, {}).setdefault(
+                        t.attr, set()).update(donated)
+
+    # 2. call sites: a method sees the donation records of its whole class
+    #    family (the jit binding may live in a base or subclass override)
+    diags = []
+    for ci in index.classes.values():
+        family = index.mro(ci) + index.subclasses(ci)
+        attrs: Dict[str, Set[int]] = {}
+        for c in family:
+            for attr, pos in records.get(c.qualname, {}).items():
+                attrs.setdefault(attr, set()).update(pos)
+        if not attrs:
+            continue
+        for fi in index.functions.values():
+            if fi.cls != ci.qualname:
+                continue
+            diags.extend(_scan_function(index.modules[fi.module].path,
+                                        fi.node, attrs))
+    return diags
+
+
+# --------------------------------------------------------------------------
+# Linearized use/kill scan
+# --------------------------------------------------------------------------
+
+def _events(body, events: List, loops: List[Tuple[int, int]]) -> None:
+    """Flatten statements into ordered ("use", expr-node) / ("kill",
+    [targets]) events; record [start, end) event ranges of loops."""
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        if isinstance(stmt, ast.Assign):
+            events.append(("use", stmt.value))
+            events.append(("kill", list(stmt.targets)))
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                events.append(("use", stmt.value))
+            events.append(("kill", [stmt.target]))
+        elif isinstance(stmt, ast.AugAssign):
+            events.append(("use", stmt))
+            events.append(("kill", [stmt.target]))
+        elif isinstance(stmt, ast.If):
+            events.append(("use", stmt.test))
+            _events(stmt.body, events, loops)
+            _events(stmt.orelse, events, loops)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            start = len(events)
+            events.append(("use", stmt.iter))
+            events.append(("kill", [stmt.target]))
+            _events(stmt.body, events, loops)
+            loops.append((start, len(events)))
+            _events(stmt.orelse, events, loops)
+        elif isinstance(stmt, ast.While):
+            start = len(events)
+            events.append(("use", stmt.test))
+            _events(stmt.body, events, loops)
+            loops.append((start, len(events)))
+            _events(stmt.orelse, events, loops)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                events.append(("use", item.context_expr))
+                if item.optional_vars is not None:
+                    events.append(("kill", [item.optional_vars]))
+            _events(stmt.body, events, loops)
+        elif isinstance(stmt, ast.Try):
+            _events(stmt.body, events, loops)
+            for h in stmt.handlers:
+                _events(h.body, events, loops)
+            _events(stmt.orelse, events, loops)
+            _events(stmt.finalbody, events, loops)
+        else:  # Expr, Return, Raise, Assert, Delete, Global, Pass, ...
+            events.append(("use", stmt))
+
+
+def _flat_targets(targets) -> List[str]:
+    out = []
+    for t in targets:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            out.extend(_flat_targets(t.elts))
+        elif isinstance(t, ast.Starred):
+            out.extend(_flat_targets([t.value]))
+        elif isinstance(t, (ast.Name, ast.Attribute, ast.Subscript)):
+            out.append(ast.unparse(t))
+    return out
+
+
+def _kills(targets, expr: str) -> bool:
+    for t in _flat_targets(targets):
+        if expr == t or expr.startswith(t + "[") or expr.startswith(t + "."):
+            return True
+    return False
+
+
+def _find_use(node: ast.AST, expr: str) -> Optional[ast.AST]:
+    """A node inside ``node`` reading ``expr`` (or an element/attr of it)."""
+    for sub in ast.walk(node):
+        if not isinstance(sub, (ast.Name, ast.Attribute, ast.Subscript)):
+            continue
+        u = ast.unparse(sub)
+        if u == expr or u.startswith(expr + "[") or \
+                u.startswith(expr + "."):
+            return sub
+    return None
+
+
+def _scan_function(path: str, fn_node: ast.AST,
+                   attrs: Dict[str, Set[int]]) -> List[Diagnostic]:
+    events: List = []
+    loops: List[Tuple[int, int]] = []
+    _events(fn_node.body, events, loops)
+
+    diags = []
+    for i, (kind, payload) in enumerate(events):
+        if kind != "use":
+            continue
+        for call in ast.walk(payload):
+            if not (isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Attribute)
+                    and isinstance(call.func.value, ast.Name)
+                    and call.func.value.id == "self"
+                    and call.func.attr in attrs):
+                continue
+            donated = [ast.unparse(call.args[p])
+                       for p in sorted(attrs[call.func.attr])
+                       if p < len(call.args) and isinstance(
+                           call.args[p],
+                           (ast.Name, ast.Attribute, ast.Subscript))]
+            if not donated:
+                continue
+            # scan order: rest of the function, then (if in a loop) wrap
+            # around from the loop head back to this call inclusive
+            order = list(range(i + 1, len(events)))
+            wrap = [(s, e) for (s, e) in loops if s <= i < e]
+            if wrap:
+                s = max(wrap, key=lambda se: se[0])[0]  # innermost loop
+                order += list(range(s, i + 1))
+            live = set(donated)
+            for j in order:
+                if not live:
+                    break
+                k, p = events[j]
+                if k == "kill":
+                    live = {e for e in live if not _kills(p, e)}
+                    continue
+                for e in sorted(live):
+                    hit = _find_use(p, e)
+                    if hit is not None:
+                        diags.append(Diagnostic(
+                            path, getattr(hit, "lineno",
+                                          getattr(p, "lineno", 1)),
+                            CHECK,
+                            f"`{e}` was donated to the jitted "
+                            f"`self.{call.func.attr}` "
+                            f"(donate_argnums) and is read again before "
+                            f"being rebound — the buffer is deleted "
+                            f"after the call"))
+                        live.discard(e)
+    return diags

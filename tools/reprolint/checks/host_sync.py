@@ -1,0 +1,69 @@
+"""host-sync-in-jit: no device->host synchronization inside the jit region.
+
+``float(x)`` / ``int(x)`` / ``x.item()`` / ``np.asarray(x)`` on a traced
+array force a concrete value mid-trace: under ``jax.jit`` they either fail
+(TracerConversionError) or — when tracing succeeds because the value is
+static — silently pin what should be a traced input, forcing a recompile
+per value.  On accelerators they stall the dispatch pipeline.  Inside any
+function reachable from a jit root (see jitscope), conversions of traced
+values are flagged; ``.item()`` / ``.tolist()`` / ``.block_until_ready()``
+and ``jax.device_get`` are flagged unconditionally — they have no
+legitimate in-trace use.
+
+Host-side code (engine admission, stats summaries) is untouched: it is not
+reachable from any jit root.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.reprolint.checks import LintContext, register_check
+from tools.reprolint.diagnostics import Diagnostic
+from tools.reprolint.jitscope import own_nodes
+
+ALWAYS_BAD_METHODS = {"item", "tolist", "block_until_ready"}
+CONVERSIONS = {"float", "int"}  # bool() belongs to tracer-control-flow
+
+
+@register_check("host-sync-in-jit")
+def check(ctx: LintContext) -> List[Diagnostic]:
+    diags = []
+    for qn in sorted(ctx.scope.reachable):
+        fi = ctx.index.functions[qn]
+        mod = ctx.index.modules[fi.module]
+        for node in own_nodes(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ALWAYS_BAD_METHODS):
+                diags.append(Diagnostic(
+                    mod.path, node.lineno, "host-sync-in-jit",
+                    f"`.{node.func.attr}()` in `{fi.name}` forces a "
+                    f"device->host sync inside the jit region "
+                    f"(reachable from a jitted entry point)"))
+                continue
+            resolved = ctx.scope.resolve_external(node.func, mod)
+            if resolved == "jax.device_get":
+                diags.append(Diagnostic(
+                    mod.path, node.lineno, "host-sync-in-jit",
+                    f"`jax.device_get` in `{fi.name}` has no in-trace "
+                    f"use; it forces a host transfer"))
+                continue
+            any_tainted = any(ctx.scope.expr_tainted(fi, a)
+                              for a in node.args)
+            if resolved in CONVERSIONS and any_tainted:
+                diags.append(Diagnostic(
+                    mod.path, node.lineno, "host-sync-in-jit",
+                    f"`{resolved}()` on a traced value in `{fi.name}` "
+                    f"concretizes mid-trace; keep it an array "
+                    f"(jnp.float32(x) / x.astype) or move it off the "
+                    f"jit path"))
+            elif (resolved is not None
+                  and resolved.split(".")[0] == "numpy" and any_tainted):
+                diags.append(Diagnostic(
+                    mod.path, node.lineno, "host-sync-in-jit",
+                    f"numpy call `{ast.unparse(node.func)}` on a traced "
+                    f"value in `{fi.name}` forces a host round-trip; "
+                    f"use the jnp equivalent"))
+    return diags

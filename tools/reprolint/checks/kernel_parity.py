@@ -1,0 +1,120 @@
+"""kernel-parity: every Pallas kernel must have a pure-jnp reference twin
+and a test that compares them.
+
+A kernel without a ``ref.py`` counterpart has no ground truth — interpret
+mode only proves the kernel agrees with itself.  A twin without a parity
+test drifts silently: the kernel gets optimized, the reference doesn't get
+re-checked.  For every module under ``kernels/`` that calls
+``pl.pallas_call``, each public entry function must (a) exist by the same
+name in ``kernels/ref.py`` and (b) be referenced on BOTH sides (``ref.<n>``
+and ``ops.<n>`` / the kernel module) by some module in the tests dir.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Set, Tuple
+
+from tools.reprolint.checks import LintContext, register_check
+from tools.reprolint.diagnostics import Diagnostic
+
+CHECK = "kernel-parity"
+SKIP = ("ops", "ref", "__init__", "")
+
+
+def _uses_pallas(tree: ast.Module) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            d = ast.unparse(node.func)
+            if d.endswith("pallas_call"):
+                return True
+    return False
+
+
+def _test_refs(tests_dir: Path, impl_modules: Set[str]
+               ) -> Tuple[Set[str], Set[str]]:
+    """Names referenced through a ``ref`` alias / an implementation alias
+    across all test modules.  ``from repro.kernels.ops import foo`` counts
+    as an implementation-side reference to ``foo``."""
+    ref_names: Set[str] = set()
+    impl_names: Set[str] = set()
+    if not tests_dir.is_dir():
+        return ref_names, impl_names
+    for path in sorted(tests_dir.rglob("*.py")):
+        try:
+            tree = ast.parse(path.read_text())
+        except (SyntaxError, OSError):
+            continue
+        ref_aliases: Set[str] = set()
+        impl_aliases: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    full = f"{node.module}.{a.name}"
+                    bound = a.asname or a.name
+                    if full.endswith("kernels.ref"):
+                        ref_aliases.add(bound)
+                    elif any(full == m or full.startswith(m + ".")
+                             for m in impl_modules):
+                        if full in impl_modules:
+                            impl_aliases.add(bound)
+                        else:  # direct from-import of the entry fn
+                            impl_names.add(a.name)
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    bound = a.asname or a.name.split(".")[0]
+                    if a.name.endswith("kernels.ref"):
+                        ref_aliases.add(bound)
+                    elif a.name in impl_modules:
+                        impl_aliases.add(bound)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute) and \
+                    isinstance(node.value, ast.Name):
+                if node.value.id in ref_aliases:
+                    ref_names.add(node.attr)
+                if node.value.id in impl_aliases:
+                    impl_names.add(node.attr)
+    return ref_names, impl_names
+
+
+@register_check(CHECK)
+def check(ctx: LintContext) -> List[Diagnostic]:
+    kernel_mods = {m.module.rsplit(".", 1)[-1]: m
+                   for m in ctx.index.modules.values()
+                   if "/kernels/" in m.path.replace("\\", "/")
+                   or m.module.endswith(".kernels")}
+    ref_mod = kernel_mods.get("ref")
+    impl_modules = {m.module for short, m in kernel_mods.items()
+                    if short not in ("ref", "")}
+    ref_names, impl_names = _test_refs(ctx.tests_dir, impl_modules)
+
+    diags = []
+    for short, mod in sorted(kernel_mods.items()):
+        if short in SKIP or not _uses_pallas(mod.tree):
+            continue
+        entries = [n for n in mod.tree.body
+                   if isinstance(n, ast.FunctionDef)
+                   and not n.name.startswith("_")]
+        if not entries:
+            diags.append(Diagnostic(
+                mod.path, 1, CHECK,
+                f"Pallas kernel module `{short}` has no public entry "
+                f"function to pair with kernels/ref.py"))
+            continue
+        for fn in entries:
+            if ref_mod is None or fn.name not in ref_mod.top_functions:
+                diags.append(Diagnostic(
+                    mod.path, fn.lineno, CHECK,
+                    f"Pallas kernel `{fn.name}` has no pure-jnp "
+                    f"counterpart of the same name in kernels/ref.py — "
+                    f"interpret mode alone is not a ground truth"))
+                continue
+            if fn.name not in ref_names or fn.name not in impl_names:
+                side = ("ref." + fn.name if fn.name not in ref_names
+                        else "the implementation side of " + fn.name)
+                diags.append(Diagnostic(
+                    mod.path, fn.lineno, CHECK,
+                    f"no test under {ctx.tests_dir} references {side}; "
+                    f"kernel/reference parity for `{fn.name}` is "
+                    f"unverified"))
+    return diags

@@ -1,0 +1,228 @@
+"""policy-contract: machine-enforce the CachePolicy plugin contract.
+
+Static half (pure AST):
+  * every module under ``core/policies/`` (except ``base.py`` and
+    ``__init__.py``) registers exactly one policy class via
+    ``@register("name")``;
+  * the package ``__init__`` imports the module (registration import order
+    IS the ``repro.core.POLICIES`` order; an unimported module is a policy
+    that silently does not exist).
+
+Runtime half (imports the scanned package; skipped under ``--static-only``):
+  for every policy in the live registry, build the reduced DiT and validate
+  the state pytree the policy actually returns against the contract in
+  ``core/policies/base.py``:
+  * every leaf is a jax.Array (the engines donate buffer-for-buffer —
+    a Python scalar or list breaks donation);
+  * every leaf carrying the batch dim is placeable by the sharding
+    walker's rank rules (``_slot_axis``: batch leading, or axis 1 behind a
+    leading L / L+1 layer axis) — anything else would silently replicate a
+    per-slot buffer across the mesh;
+  * ``state["stats"]`` exists, every vector key is a per-sample ``(B,)``
+    float, and the scalar ``steps`` key is present;
+  * ``reset_rows`` preserves the treedef and every leaf's shape/dtype
+    (the engines feed it back through donated jit buffers).
+
+The batch size is chosen to collide with no model dimension, so "has the
+batch dim" is unambiguous.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional
+
+from tools.reprolint.checks import LintContext, register_check
+from tools.reprolint.diagnostics import Diagnostic
+
+CHECK = "policy-contract"
+EXEMPT = ("base", "__init__")
+
+
+def _policy_modules(ctx: LintContext):
+    for mod in ctx.index.modules.values():
+        p = mod.path.replace("\\", "/")
+        if "core/policies/" not in p:
+            continue
+        short = mod.module.rsplit(".", 1)[-1]
+        if short in EXEMPT or p.endswith("__init__.py"):
+            continue
+        yield mod, short
+
+
+def _is_register_deco(dec: ast.AST) -> bool:
+    if not isinstance(dec, ast.Call):
+        return False
+    f = dec.func
+    name = f.id if isinstance(f, ast.Name) else (
+        f.attr if isinstance(f, ast.Attribute) else None)
+    return name == "register"
+
+
+@register_check(CHECK)
+def check(ctx: LintContext) -> List[Diagnostic]:
+    diags = []
+    for mod, short in _policy_modules(ctx):
+        registered = [n for n in mod.tree.body if isinstance(n, ast.ClassDef)
+                      and any(_is_register_deco(d) for d in n.decorator_list)]
+        if len(registered) != 1:
+            line = registered[1].lineno if len(registered) > 1 else 1
+            diags.append(Diagnostic(
+                mod.path, line, CHECK,
+                f"policy module `{short}` must register exactly one policy "
+                f"class with @register(...); found {len(registered)}"))
+        pkg = ctx.index.modules.get(mod.module.rsplit(".", 1)[0])
+        if pkg is not None and not _imported_in(pkg.tree, short):
+            diags.append(Diagnostic(
+                mod.path, 1, CHECK,
+                f"policy module `{short}` is not imported from the "
+                f"package __init__ — its @register never runs, so the "
+                f"policy does not exist at runtime"))
+    if not ctx.static_only and (ctx.root / "repro" / "core"
+                                / "policies").is_dir():
+        diags.extend(validate_registry(str(ctx.root)))
+    return diags
+
+
+def _imported_in(init_tree: ast.Module, short: str) -> bool:
+    for node in ast.walk(init_tree):
+        if isinstance(node, ast.ImportFrom):
+            if any(a.name == short for a in node.names):
+                return True
+            if node.module and node.module.rsplit(".", 1)[-1] == short:
+                return True
+        elif isinstance(node, ast.Import):
+            if any(a.name.rsplit(".", 1)[-1] == short for a in node.names):
+                return True
+    return False
+
+
+# --------------------------------------------------------------------------
+# Runtime validation (also importable directly — the self-tests register a
+# deliberately broken policy and call this)
+# --------------------------------------------------------------------------
+
+def validate_registry(root: Optional[str] = None) -> List[Diagnostic]:
+    """Validate every policy in the live registry against the state-pytree
+    contract.  ``root`` is prepended to sys.path so ``repro`` resolves when
+    the CLI runs without PYTHONPATH."""
+    import sys
+    if root and root not in sys.path:
+        sys.path.insert(0, root)
+    try:
+        import jax
+        import jax.numpy as jnp
+        from repro.configs import get_reduced
+        from repro.configs.base import FastCacheConfig
+        from repro.core.policies import base as policies_base
+        from repro.core.runner import CachedDiT
+        from repro.distributed.sharding import _slot_axis
+        from repro.models import build_model
+    except Exception as e:  # import failure is a finding, not a crash
+        return [Diagnostic("<runtime>", 1, CHECK,
+                           f"runtime policy validation could not import "
+                           f"the scanned package: {type(e).__name__}: {e}")]
+
+    cfg = get_reduced("dit-b2").replace(dtype="float32")
+    model = build_model(cfg)
+    L = model.cfg.num_layers
+    dims = {L, L + 1, model.cfg.d_model, model.cfg.dit.image_size,
+            model.cfg.dit.in_channels, getattr(model, "num_tokens", 0)}
+    B = next(b for b in (3, 5, 7, 11, 13, 17, 19) if b not in dims)
+
+    diags = []
+    for name in tuple(policies_base._REGISTRY):
+        cls = policies_base._REGISTRY[name]
+        where = _locate(cls)
+        try:
+            runner = CachedDiT(model, FastCacheConfig(), policy=name)
+            state = runner.init_state(B)
+        except Exception as e:
+            diags.append(Diagnostic(*where, CHECK,
+                                    f"policy {name!r}: init_state({B}) "
+                                    f"raised {type(e).__name__}: {e}"))
+            continue
+        leaves = jax.tree_util.tree_leaves_with_path(state)
+        for path, leaf in leaves:
+            key = jax.tree_util.keystr(path)
+            if not isinstance(leaf, jax.Array):
+                diags.append(Diagnostic(*where, CHECK,
+                             f"policy {name!r}: state leaf {key} is "
+                             f"{type(leaf).__name__}, not a jax.Array — "
+                             f"the engines donate the state "
+                             f"buffer-for-buffer"))
+                continue
+            if B in leaf.shape and _slot_axis(leaf.shape, B, L) is None:
+                diags.append(Diagnostic(*where, CHECK,
+                             f"policy {name!r}: state leaf {key} has shape "
+                             f"{tuple(leaf.shape)} — the batch dim is not "
+                             f"where the sharding walker's rank rules can "
+                             f"place it (leading, or axis 1 behind a "
+                             f"leading {L}/{L + 1} layer axis); it would "
+                             f"silently replicate"))
+        stats = state.get("stats") if isinstance(state, dict) else None
+        if not isinstance(stats, dict):
+            diags.append(Diagnostic(*where, CHECK,
+                         f"policy {name!r}: state has no 'stats' dict — "
+                         f"the engines accumulate per-request counters "
+                         f"from it"))
+        else:
+            if "steps" not in stats:
+                diags.append(Diagnostic(*where, CHECK,
+                             f"policy {name!r}: stats is missing the "
+                             f"scalar 'steps' counter"))
+            for k, v in stats.items():
+                if k == "steps":
+                    if getattr(v, "ndim", None) != 0:
+                        diags.append(Diagnostic(*where, CHECK,
+                                     f"policy {name!r}: stats['steps'] "
+                                     f"must be a scalar"))
+                    continue
+                ok = (isinstance(v, jax.Array) and v.shape == (B,)
+                      and jnp.issubdtype(v.dtype, jnp.floating))
+                if not ok:
+                    diags.append(Diagnostic(*where, CHECK,
+                                 f"policy {name!r}: stats[{k!r}] must be a "
+                                 f"per-sample (B,) float array; got "
+                                 f"shape {getattr(v, 'shape', None)} "
+                                 f"dtype {getattr(v, 'dtype', None)}"))
+        try:
+            reset = runner.reset_slot(state, jnp.array([0]))
+        except Exception as e:
+            diags.append(Diagnostic(*where, CHECK,
+                         f"policy {name!r}: reset_rows raised "
+                         f"{type(e).__name__}: {e}"))
+            continue
+        td0 = jax.tree_util.tree_structure(state)
+        td1 = jax.tree_util.tree_structure(reset)
+        if td0 != td1:
+            diags.append(Diagnostic(*where, CHECK,
+                         f"policy {name!r}: reset_rows changed the state "
+                         f"treedef — the engines feed it back through "
+                         f"donated jit buffers"))
+        else:
+            for (p0, l0), (_, l1) in zip(leaves,
+                                         jax.tree_util.tree_leaves_with_path(
+                                             reset)):
+                if (getattr(l0, "shape", None) != getattr(l1, "shape", None)
+                        or getattr(l0, "dtype", None)
+                        != getattr(l1, "dtype", None)):
+                    diags.append(Diagnostic(*where, CHECK,
+                                 f"policy {name!r}: reset_rows changed "
+                                 f"leaf {jax.tree_util.keystr(p0)} "
+                                 f"shape/dtype"))
+    return diags
+
+
+def _locate(cls):
+    """(file, line) of a policy class, repo-relative when possible."""
+    import inspect
+    try:
+        f = inspect.getsourcefile(cls) or "<runtime>"
+        line = inspect.getsourcelines(cls)[1]
+        rel = os.path.relpath(f)
+        if not rel.startswith(".."):
+            f = rel
+        return f, line
+    except (OSError, TypeError):
+        return "<runtime>", 1

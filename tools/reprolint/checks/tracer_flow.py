@@ -1,0 +1,71 @@
+"""tracer-control-flow: no Python control flow on traced values in the
+policy / kernel / serving layers.
+
+``if`` / ``while`` / ``bool()`` on a value derived from a traced array
+raises TracerBoolConversionError under jit — or worse, silently bakes one
+branch into the compiled program when the value happens to be concrete at
+trace time (the classic "my gate never fires" bug).  Data-dependent
+branching belongs in ``lax.cond`` / ``lax.while_loop`` / ``jnp.where``.
+
+Scoped to ``core/policies/``, ``kernels/`` and ``serving/`` — the layers
+whose code runs under the engines' jit — and within those, to functions
+actually reachable from a jit root.  Config-knob branches (``if
+fc.use_str:``) stay silent: the taint analysis only marks values derived
+from array-annotated parameters and ``jax.*`` call results.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.reprolint.checks import LintContext, register_check
+from tools.reprolint.diagnostics import Diagnostic
+from tools.reprolint.jitscope import own_nodes
+
+PATH_FRAGMENTS = ("core/policies/", "/kernels/", "/serving/")
+
+
+def _in_scope(path: str) -> bool:
+    p = path.replace("\\", "/")
+    return any(f in p for f in PATH_FRAGMENTS)
+
+
+@register_check("tracer-control-flow")
+def check(ctx: LintContext) -> List[Diagnostic]:
+    diags = []
+    for qn in sorted(ctx.scope.reachable):
+        fi = ctx.index.functions[qn]
+        mod = ctx.index.modules[fi.module]
+        if not _in_scope(mod.path):
+            continue
+        for node in own_nodes(fi.node):
+            if isinstance(node, (ast.If, ast.While)) and \
+                    ctx.scope.expr_tainted(fi, node.test):
+                kw = "if" if isinstance(node, ast.If) else "while"
+                diags.append(Diagnostic(
+                    mod.path, node.lineno, "tracer-control-flow",
+                    f"Python `{kw}` on a traced value in `{fi.name}`; "
+                    f"use lax.cond / lax.while_loop / jnp.where"))
+            elif isinstance(node, ast.IfExp) and \
+                    ctx.scope.expr_tainted(fi, node.test):
+                diags.append(Diagnostic(
+                    mod.path, node.lineno, "tracer-control-flow",
+                    f"conditional expression on a traced value in "
+                    f"`{fi.name}`; use jnp.where"))
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Name)
+                  and node.func.id == "bool" and node.args
+                  and ctx.scope.expr_tainted(fi, node.args[0])):
+                diags.append(Diagnostic(
+                    mod.path, node.lineno, "tracer-control-flow",
+                    f"`bool()` on a traced value in `{fi.name}` raises "
+                    f"under jit; use the array directly or lax.cond"))
+            elif isinstance(node, ast.comprehension):
+                for test in node.ifs:
+                    if ctx.scope.expr_tainted(fi, test):
+                        diags.append(Diagnostic(
+                            mod.path, test.lineno, "tracer-control-flow",
+                            f"comprehension filter on a traced value in "
+                            f"`{fi.name}`; use jnp.where / boolean "
+                            f"masking"))
+    return diags

@@ -1,0 +1,52 @@
+"""Diagnostic records and the inline suppression (escape-hatch) parser.
+
+A diagnostic is one finding: (file, line, check name, message).  A finding
+is suppressed by an inline comment on the flagged line::
+
+    assert x  # reprolint: disable=no-bare-assert
+    y = float(stat)  # reprolint: disable=host-sync-in-jit,tracer-control-flow
+
+``disable=all`` silences every check on that line.  Suppressions are
+per-line by design — there is no file- or block-level escape hatch, so a
+waiver is always visible next to the code it waives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Set
+
+_DISABLE_RE = re.compile(r"#\s*reprolint:\s*disable=([\w,\-]+)")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Diagnostic:
+    file: str          # path as given on the command line (repo-relative)
+    line: int          # 1-indexed
+    check: str         # check name, e.g. "no-bare-assert"
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.file}:{self.line}: [{self.check}] {self.message}"
+
+
+def parse_suppressions(source: str) -> Dict[int, Set[str]]:
+    """Map of 1-indexed line number -> set of check names disabled there."""
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _DISABLE_RE.search(text)
+        if m:
+            out[i] = {c.strip() for c in m.group(1).split(",") if c.strip()}
+    return out
+
+
+def apply_suppressions(diags: List[Diagnostic],
+                       per_file: Dict[str, Dict[int, Set[str]]]
+                       ) -> List[Diagnostic]:
+    kept = []
+    for d in diags:
+        disabled = per_file.get(d.file, {}).get(d.line, set())
+        if d.check in disabled or "all" in disabled:
+            continue
+        kept.append(d)
+    return sorted(kept)

@@ -1,0 +1,288 @@
+"""Repository index: every module under the scan root parsed once, with
+import alias tables, functions (including methods and nested defs), classes
+(with AST-resolved bases and ``self.<attr>`` type bindings).
+
+Module names are derived **relative to the scan root** — ``src/repro/core/
+runner.py`` scanned with root ``src`` indexes as ``repro.core.runner`` —
+because ``src/repro`` is a namespace dir with no top-level ``__init__.py``.
+
+Resolution policy throughout reprolint is *precision over recall*: a name we
+cannot resolve is skipped, never guessed, so diagnostics stay actionable.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from pathlib import Path
+from typing import Dict, List, Optional, Set
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str                  # repro.serving.engine.ServingEngine.step
+    module: str
+    name: str
+    node: ast.AST                  # FunctionDef | AsyncFunctionDef
+    cls: Optional[str] = None      # qualname of owning class (walks through
+                                   # nested defs: a closure inside a method
+                                   # still knows its class)
+    parent: Optional[str] = None   # qualname of enclosing function
+    children: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    qualname: str
+    module: str
+    name: str
+    node: ast.ClassDef
+    bases: List[str] = dataclasses.field(default_factory=list)  # unparsed
+    methods: Dict[str, str] = dataclasses.field(default_factory=dict)
+    attr_types: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    module: str
+    path: str                      # path as given (repo-relative)
+    tree: ast.Module
+    source: str
+    imports: Dict[str, str] = dataclasses.field(default_factory=dict)
+    top_functions: Set[str] = dataclasses.field(default_factory=set)
+    top_classes: Set[str] = dataclasses.field(default_factory=set)
+
+
+def module_name_for(path: Path, root: Path) -> str:
+    rel = path.relative_to(root).with_suffix("")
+    parts = list(rel.parts)
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Unparse a pure Name/Attribute chain; None for anything else."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def ann_dotted(node: ast.AST) -> Optional[str]:
+    """Like ``dotted`` but unwraps string annotations (``x: "DiTModel"``)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        try:
+            node = ast.parse(node.value, mode="eval").body
+        except SyntaxError:
+            return None
+    return dotted(node)
+
+
+class RepoIndex:
+    def __init__(self, root: Path):
+        self.root = Path(root)
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.classes: Dict[str, ClassInfo] = {}
+        self.classes_by_name: Dict[str, List[str]] = {}
+        self._build()
+
+    # ------------------------------------------------------------------
+    # Construction
+    # ------------------------------------------------------------------
+
+    def _build(self) -> None:
+        for path in sorted(self.root.rglob("*.py")):
+            if "__pycache__" in path.parts:
+                continue
+            source = path.read_text()
+            try:
+                tree = ast.parse(source, filename=str(path))
+            except SyntaxError:
+                continue  # not our job; python itself will complain
+            mod = ModuleInfo(module=module_name_for(path, self.root),
+                             path=str(path), tree=tree, source=source)
+            self.modules[mod.module] = mod
+            self._index_module(mod)
+        for ci in self.classes.values():
+            self.classes_by_name.setdefault(ci.name, []).append(ci.qualname)
+        for ci in self.classes.values():
+            self._collect_attr_types(ci)
+        for ci in self.classes.values():
+            self._inherit_attr_types(ci, seen=set())
+
+    def _index_module(self, mod: ModuleInfo) -> None:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    mod.imports[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:  # relative import -> anchor at this package
+                    anchor = mod.module.split(".")
+                    if not self._is_package(mod):
+                        anchor = anchor[:-1]
+                    if node.level > 1:
+                        anchor = anchor[:len(anchor) - (node.level - 1)]
+                    base = ".".join(anchor + ([node.module] if node.module
+                                              else []))
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    mod.imports[a.asname or a.name] = (
+                        f"{base}.{a.name}" if base else a.name)
+        self._index_scope(mod, mod.tree.body, prefix=mod.module,
+                          cls=None, parent=None)
+
+    def _is_package(self, mod: ModuleInfo) -> bool:
+        return os.path.basename(mod.path) == "__init__.py"
+
+    def _index_scope(self, mod: ModuleInfo, body, *, prefix: str,
+                     cls: Optional[str], parent: Optional[str]) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = f"{prefix}.{node.name}"
+                fi = FunctionInfo(qualname=qn, module=mod.module,
+                                  name=node.name, node=node, cls=cls,
+                                  parent=parent)
+                self.functions[qn] = fi
+                if parent is None and cls is None:
+                    mod.top_functions.add(node.name)
+                if parent is not None:
+                    self.functions[parent].children[node.name] = qn
+                if cls is not None and parent is None:
+                    self.classes[cls].methods[node.name] = qn
+                self._index_scope(mod, node.body, prefix=qn, cls=cls,
+                                  parent=qn)
+            elif isinstance(node, ast.ClassDef):
+                qn = f"{prefix}.{node.name}"
+                ci = ClassInfo(qualname=qn, module=mod.module,
+                               name=node.name, node=node,
+                               bases=[b for b in map(dotted, node.bases)
+                                      if b is not None])
+                self.classes[qn] = ci
+                if parent is None and cls is None:
+                    mod.top_classes.add(node.name)
+                self._index_scope(mod, node.body, prefix=qn, cls=qn,
+                                  parent=None)
+            else:
+                # still descend into `if TYPE_CHECKING:` style blocks
+                for sub in ast.iter_child_nodes(node):
+                    if isinstance(sub, (ast.FunctionDef, ast.ClassDef)):
+                        self._index_scope(mod, [sub], prefix=prefix,
+                                          cls=cls, parent=parent)
+
+    # ------------------------------------------------------------------
+    # Name resolution
+    # ------------------------------------------------------------------
+
+    def resolve_dotted(self, mod: ModuleInfo, name: str) -> str:
+        """Best-effort absolute dotted path for ``name`` in ``mod``."""
+        head, _, rest = name.partition(".")
+        target = mod.imports.get(head)
+        if target is None:
+            if head in mod.top_functions or head in mod.top_classes:
+                target = f"{mod.module}.{head}"
+            else:
+                return name
+        return f"{target}.{rest}" if rest else target
+
+    def resolve_class(self, mod: ModuleInfo, name: str
+                      ) -> Optional[ClassInfo]:
+        """Resolve a (possibly dotted) class reference to a ClassInfo."""
+        full = self.resolve_dotted(mod, name)
+        if full in self.classes:
+            return self.classes[full]
+        tail = full.rsplit(".", 1)[-1]
+        cands = self.classes_by_name.get(tail, [])
+        if len(cands) == 1:
+            return self.classes[cands[0]]
+        return None
+
+    def mro(self, ci: ClassInfo) -> List[ClassInfo]:
+        """The class plus its AST-resolvable ancestors, nearest first."""
+        out, seen, stack = [], set(), [ci]
+        while stack:
+            c = stack.pop(0)
+            if c.qualname in seen:
+                continue
+            seen.add(c.qualname)
+            out.append(c)
+            mod = self.modules[c.module]
+            for b in c.bases:
+                bi = self.resolve_class(mod, b)
+                if bi is not None:
+                    stack.append(bi)
+        return out
+
+    def subclasses(self, ci: ClassInfo) -> List[ClassInfo]:
+        return [c for c in self.classes.values()
+                if c is not ci and any(m.qualname == ci.qualname
+                                       for m in self.mro(c))]
+
+    def lookup_method(self, ci: ClassInfo, name: str) -> List[str]:
+        """Method qualnames for ``obj.name()`` where obj is a ``ci`` — the
+        MRO resolution plus every subclass override (the receiver's dynamic
+        type may be any subclass)."""
+        out = []
+        for c in self.mro(ci):
+            if name in c.methods:
+                out.append(c.methods[name])
+                break
+        for c in self.subclasses(ci):
+            if name in c.methods:
+                out.append(c.methods[name])
+        return out
+
+    # ------------------------------------------------------------------
+    # self.<attr> type bindings
+    # ------------------------------------------------------------------
+
+    def _collect_attr_types(self, ci: ClassInfo) -> None:
+        mod = self.modules[ci.module]
+        for mname, mqn in ci.methods.items():
+            fn = self.functions[mqn].node
+            ann = {a.arg: ann_dotted(a.annotation)
+                   for a in list(fn.args.args) + list(fn.args.kwonlyargs)
+                   if a.annotation is not None}
+            for node in ast.walk(fn):
+                tgt, val = None, None
+                if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                    tgt, val = node.targets[0], node.value
+                elif isinstance(node, ast.AnnAssign):
+                    tgt = node.target
+                    if node.annotation is not None:
+                        d = ann_dotted(node.annotation)
+                        if (d and isinstance(tgt, ast.Attribute)
+                                and isinstance(tgt.value, ast.Name)
+                                and tgt.value.id == "self"):
+                            hit = self.resolve_class(mod, d)
+                            if hit:
+                                ci.attr_types[tgt.attr] = hit.qualname
+                    val = node.value
+                if (tgt is None or val is None
+                        or not isinstance(tgt, ast.Attribute)
+                        or not isinstance(tgt.value, ast.Name)
+                        or tgt.value.id != "self"):
+                    continue
+                hit = None
+                if isinstance(val, ast.Call):
+                    d = dotted(val.func)
+                    if d:
+                        hit = self.resolve_class(mod, d)
+                elif isinstance(val, ast.Name) and val.id in ann and ann[val.id]:
+                    hit = self.resolve_class(mod, ann[val.id])
+                if hit is not None:
+                    ci.attr_types.setdefault(tgt.attr, hit.qualname)
+
+    def _inherit_attr_types(self, ci: ClassInfo, seen) -> None:
+        if ci.qualname in seen:
+            return
+        seen.add(ci.qualname)
+        for base in self.mro(ci)[1:]:
+            for k, v in base.attr_types.items():
+                ci.attr_types.setdefault(k, v)

@@ -1,0 +1,457 @@
+"""Jit-region discovery and tracer-taint analysis.
+
+Three layers, each feeding the next:
+
+1. **Roots** — functions that enter a jit trace: anything passed to
+   ``jax.jit`` (as a call argument, through ``functools.partial``, or as a
+   decorator), plus the ``CachePolicy`` protocol methods (``init_state`` /
+   ``reset_rows`` / ``step``) of every class defined under ``core/policies/``
+   — those are jitted by the engines through dynamic dispatch the static
+   call graph cannot see.
+2. **Reachability** — a call graph over the index (methods resolved through
+   ``self``, AST-level MRO, ``self.<attr>`` type bindings and local variable
+   types; function *references* passed as call arguments — ``lax.scan(body,
+   …)``, ``pl.pallas_call(_kernel, …)`` — count as edges).  Everything
+   reachable from a root is "in the jit region".
+3. **Taint** — per-function, intra-procedural, monotone fixpoint marking
+   names that (may) hold traced arrays: parameters annotated as arrays,
+   results of ``jax.*``-family calls, and anything derived from either.
+   ``.shape``/``.dtype``/``.ndim``/``.size`` reads and host builtins
+   (``len``, ``int(…)`` results, ``isinstance``…) break the chain.
+   Nested defs inherit the enclosing function's taint minus shadowed
+   parameters (closures over traced values stay traced).
+
+Unresolvable calls are skipped, never guessed — reprolint prefers a missed
+edge over a false diagnostic.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from tools.reprolint.index import (FunctionInfo, ModuleInfo, RepoIndex,
+                                   ann_dotted, dotted)
+
+POLICY_PATH_FRAGMENT = "core/policies"
+POLICY_PROTOCOL_METHODS = ("init_state", "reset_rows", "step")
+ARRAY_ANNOTATIONS = ("jax.Array", "jnp.ndarray", "jax.numpy.ndarray")
+UNTAINTED_BUILTINS = {"isinstance", "len", "float", "int", "bool", "range",
+                      "str", "repr", "type", "print", "hasattr", "getattr",
+                      "enumerate", "zip", "id", "format"}
+HOST_ATTR_READS = {"shape", "ndim", "dtype", "size"}
+
+
+def own_nodes(fn_node: ast.AST) -> List[ast.AST]:
+    """Every AST node belonging to this scope: stops at nested function /
+    class bodies (their decorators still belong here), keeps lambdas and
+    comprehensions inline."""
+    out: List[ast.AST] = []
+
+    def rec(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            out.append(child)
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                for dec in child.decorator_list:
+                    out.append(dec)
+                    rec(dec)
+                continue
+            rec(child)
+
+    rec(fn_node)
+    return out
+
+
+def _target_names(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Name):
+        return [node.id]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for e in node.elts:
+            out.extend(_target_names(e))
+        return out
+    if isinstance(node, ast.Starred):
+        return _target_names(node.value)
+    return []
+
+
+class JitScope:
+    def __init__(self, index: RepoIndex):
+        self.index = index
+        self._local_types: Dict[str, Dict[str, str]] = {}
+        self._edges: Dict[str, Set[str]] = {}
+        self._taint: Dict[str, Set[str]] = {}
+        self.roots: Dict[str, str] = {}      # qualname -> reason
+        self._find_roots()
+        self.reachable: Set[str] = self._reach()
+
+    # ------------------------------------------------------------------
+    # Resolution helpers
+    # ------------------------------------------------------------------
+
+    def resolve_external(self, expr: ast.AST, mod: ModuleInfo
+                         ) -> Optional[str]:
+        """Absolute dotted name for a Name/Attribute chain rooted at an
+        import (``jnp.where`` -> ``jax.numpy.where``); None for ``self.``
+        chains or non-chains."""
+        d = dotted(expr)
+        if d is None or d == "self" or d.startswith("self."):
+            return None
+        return self.index.resolve_dotted(mod, d)
+
+    def local_types(self, fi: FunctionInfo) -> Dict[str, str]:
+        """Local var name -> class qualname, from annotated params,
+        ``v = ClassName(...)`` and ``v = self.<typed attr>``."""
+        if fi.qualname in self._local_types:
+            return self._local_types[fi.qualname]
+        index = self.index
+        mod = index.modules[fi.module]
+        out: Dict[str, str] = {}
+        args = fi.node.args
+        for a in list(args.posonlyargs) + list(args.args) + \
+                list(args.kwonlyargs):
+            if a.annotation is not None:
+                d = ann_dotted(a.annotation)
+                if d:
+                    hit = index.resolve_class(mod, d)
+                    if hit:
+                        out[a.arg] = hit.qualname
+        cls = index.classes.get(fi.cls) if fi.cls else None
+        for node in own_nodes(fi.node):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            name, val = node.targets[0].id, node.value
+            if isinstance(val, ast.Call):
+                d = dotted(val.func)
+                hit = index.resolve_class(mod, d) if d else None
+                if hit:
+                    out[name] = hit.qualname
+            elif (isinstance(val, ast.Attribute)
+                  and isinstance(val.value, ast.Name)
+                  and val.value.id == "self" and cls is not None
+                  and val.attr in cls.attr_types):
+                out[name] = cls.attr_types[val.attr]
+        self._local_types[fi.qualname] = out
+        return out
+
+    def resolve_callable(self, expr: ast.AST, fi: Optional[FunctionInfo],
+                         mod: ModuleInfo) -> Set[str]:
+        """Function qualnames ``expr`` may denote as a callee."""
+        index = self.index
+        if isinstance(expr, ast.Name):
+            cur = fi
+            while cur is not None:  # nested defs in the enclosing chain
+                if expr.id in cur.children:
+                    return {cur.children[expr.id]}
+                cur = (index.functions[cur.parent]
+                       if cur.parent else None)
+            if expr.id in mod.top_functions:
+                return {f"{mod.module}.{expr.id}"}
+            resolved = index.resolve_dotted(mod, expr.id)
+            if resolved in index.functions:
+                return {resolved}
+            if resolved in index.classes:
+                init = index.classes[resolved].methods.get("__init__")
+                return {init} if init else set()
+            return set()
+        if not isinstance(expr, ast.Attribute):
+            return set()
+        d = dotted(expr)
+        if d is None:
+            return set()
+        parts = d.split(".")
+        if parts[0] == "self":
+            if fi is None or not fi.cls:
+                return set()
+            ci = index.classes[fi.cls]
+            if len(parts) == 2:
+                return set(index.lookup_method(ci, parts[1]))
+            if len(parts) == 3 and parts[1] in ci.attr_types:
+                owner = index.classes[ci.attr_types[parts[1]]]
+                return set(index.lookup_method(owner, parts[2]))
+            return set()
+        if len(parts) == 2 and fi is not None:
+            lt = self.local_types(fi)
+            if parts[0] in lt:
+                owner = index.classes[lt[parts[0]]]
+                return set(index.lookup_method(owner, parts[1]))
+        resolved = index.resolve_dotted(mod, d)
+        if resolved in index.functions:
+            return {resolved}
+        if resolved in index.classes:
+            init = index.classes[resolved].methods.get("__init__")
+            return {init} if init else set()
+        return set()
+
+    # ------------------------------------------------------------------
+    # Roots
+    # ------------------------------------------------------------------
+
+    def _unwrap_partial(self, target: Optional[ast.AST], mod: ModuleInfo
+                        ) -> Optional[ast.AST]:
+        while (isinstance(target, ast.Call)
+               and self.resolve_external(target.func, mod)
+               in ("functools.partial", "partial")):
+            target = target.args[0] if target.args else None
+        return target
+
+    def _jit_targets(self, call: ast.Call, fi: Optional[FunctionInfo],
+                     mod: ModuleInfo) -> Set[str]:
+        """Function qualnames entering the trace via a ``jax.jit(...)``
+        call node.  Unwraps ``functools.partial`` (inline or through a
+        local alias: ``f = partial(g, ...); jax.jit(f)``) and factory
+        calls (``jax.jit(make_step(...))`` roots the nested defs the
+        factory returns)."""
+        target: Optional[ast.AST] = call.args[0] if call.args else None
+        if target is None:
+            for kw in call.keywords:
+                if kw.arg == "fun":
+                    target = kw.value
+        target = self._unwrap_partial(target, mod)
+        if target is None:
+            return set()
+        out = self.resolve_callable(target, fi, mod)
+        if out:
+            return out
+        if isinstance(target, ast.Name) and fi is not None:
+            # local alias bound to a partial / function reference
+            for node in own_nodes(fi.node):
+                if not (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and node.targets[0].id == target.id):
+                    continue
+                val = self._unwrap_partial(node.value, mod)
+                if val is None or (isinstance(val, ast.Call)
+                                   and self._is_jit_name(
+                                       self.resolve_external(val.func,
+                                                             mod))):
+                    continue  # skip `f = jax.jit(f)` self-rebinds
+                if isinstance(val, (ast.Name, ast.Attribute)):
+                    out |= self.resolve_callable(val, fi, mod)
+                elif isinstance(val, ast.Call):
+                    out |= self._factory_returns(val, fi, mod)
+            if out:
+                return out
+        if isinstance(target, ast.Call):
+            out |= self._factory_returns(target, fi, mod)
+        return out
+
+    def _factory_returns(self, call: ast.Call, fi: Optional[FunctionInfo],
+                         mod: ModuleInfo) -> Set[str]:
+        """Nested defs returned by a factory whose *result* is jitted:
+        ``jax.jit(make_train_step(...))``."""
+        out: Set[str] = set()
+        for qn in self.resolve_callable(call.func, fi, mod):
+            factory = self.index.functions[qn]
+            for node in own_nodes(factory.node):
+                if isinstance(node, ast.Return) and \
+                        isinstance(node.value, ast.Name) and \
+                        node.value.id in factory.children:
+                    out.add(factory.children[node.value.id])
+        return out
+
+    def _is_jit_name(self, resolved: Optional[str]) -> bool:
+        return resolved is not None and (
+            resolved in ("jax.jit", "jax.pmap")
+            or (resolved.startswith("jax.") and resolved.endswith(".jit")))
+
+    def _find_roots(self) -> None:
+        index = self.index
+        for fi in index.functions.values():
+            mod = index.modules[fi.module]
+            # decorator roots
+            for dec in fi.node.decorator_list:
+                if self._is_jit_name(self.resolve_external(dec, mod)):
+                    self.roots.setdefault(fi.qualname, "@jit decorator")
+                elif isinstance(dec, ast.Call):
+                    df = self.resolve_external(dec.func, mod)
+                    if self._is_jit_name(df):
+                        self.roots.setdefault(fi.qualname, "@jit decorator")
+                    elif df in ("functools.partial", "partial") and dec.args \
+                            and self._is_jit_name(
+                                self.resolve_external(dec.args[0], mod)):
+                        self.roots.setdefault(
+                            fi.qualname, "@partial(jax.jit) decorator")
+            # jax.jit(...) call sites inside this function
+            parent_fi = fi
+            for node in own_nodes(fi.node):
+                if isinstance(node, ast.Call) and self._is_jit_name(
+                        self.resolve_external(node.func, mod)):
+                    for qn in self._jit_targets(node, parent_fi, mod):
+                        self.roots.setdefault(
+                            qn, f"passed to jax.jit in {fi.qualname}")
+        # module-level jax.jit(...) sites
+        for mod in index.modules.values():
+            for node in own_nodes(mod.tree):
+                if isinstance(node, ast.Call) and self._is_jit_name(
+                        self.resolve_external(node.func, mod)):
+                    for qn in self._jit_targets(node, None, mod):
+                        self.roots.setdefault(
+                            qn, f"passed to jax.jit in {mod.module}")
+        # CachePolicy protocol methods (engines jit them dynamically)
+        for ci in index.classes.values():
+            path = index.modules[ci.module].path.replace("\\", "/")
+            if POLICY_PATH_FRAGMENT not in path:
+                continue
+            for m in POLICY_PROTOCOL_METHODS:
+                if m in ci.methods:
+                    self.roots.setdefault(
+                        ci.methods[m], "CachePolicy protocol method")
+
+    # ------------------------------------------------------------------
+    # Call graph / reachability
+    # ------------------------------------------------------------------
+
+    def edges(self, qualname: str) -> Set[str]:
+        if qualname in self._edges:
+            return self._edges[qualname]
+        fi = self.index.functions[qualname]
+        mod = self.index.modules[fi.module]
+        out: Set[str] = set()
+        for node in own_nodes(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            out |= self.resolve_callable(node.func, fi, mod)
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, (ast.Name, ast.Attribute)):
+                    out |= self.resolve_callable(arg, fi, mod)
+                elif isinstance(arg, ast.Call) and self.resolve_external(
+                        arg.func, mod) in ("functools.partial", "partial"):
+                    if arg.args and isinstance(arg.args[0],
+                                               (ast.Name, ast.Attribute)):
+                        out |= self.resolve_callable(arg.args[0], fi, mod)
+        self._edges[qualname] = out
+        return out
+
+    def _reach(self) -> Set[str]:
+        seen: Set[str] = set()
+        stack = [r for r in self.roots if r in self.index.functions]
+        while stack:
+            qn = stack.pop()
+            if qn in seen:
+                continue
+            seen.add(qn)
+            for nxt in self.edges(qn):
+                if nxt in self.index.functions and nxt not in seen:
+                    stack.append(nxt)
+        return seen
+
+    def in_jit_region(self, qualname: str) -> bool:
+        return qualname in self.reachable
+
+    # ------------------------------------------------------------------
+    # Taint
+    # ------------------------------------------------------------------
+
+    def taint(self, qualname: str) -> Set[str]:
+        if qualname in self._taint:
+            return self._taint[qualname]
+        fi = self.index.functions[qualname]
+        mod = self.index.modules[fi.module]
+        args = fi.node.args
+        params = [a.arg for a in list(args.posonlyargs) + list(args.args)
+                  + list(args.kwonlyargs)]
+        if args.vararg:
+            params.append(args.vararg.arg)
+        if args.kwarg:
+            params.append(args.kwarg.arg)
+        tainted: Set[str] = set()
+        for a in list(args.posonlyargs) + list(args.args) + \
+                list(args.kwonlyargs):
+            if a.annotation is not None:
+                ann = ast.unparse(a.annotation)
+                if any(t in ann for t in ARRAY_ANNOTATIONS):
+                    tainted.add(a.arg)
+        if fi.parent:  # closures over the enclosing function's traced vars
+            tainted |= self.taint(fi.parent) - set(params)
+        self._taint[qualname] = tainted  # publish early (recursion guard)
+
+        nodes = own_nodes(fi.node)
+        for _ in range(20):
+            before = len(tainted)
+            for node in nodes:
+                if isinstance(node, ast.Assign):
+                    if self._expr_tainted(node.value, tainted, mod):
+                        for t in node.targets:
+                            tainted.update(_target_names(t))
+                elif isinstance(node, ast.AnnAssign):
+                    ann = ast.unparse(node.annotation)
+                    if (node.value is not None
+                            and self._expr_tainted(node.value, tainted, mod)
+                            ) or any(t in ann for t in ARRAY_ANNOTATIONS):
+                        tainted.update(_target_names(node.target))
+                elif isinstance(node, ast.AugAssign):
+                    if self._expr_tainted(node.value, tainted, mod) or \
+                            self._expr_tainted(node.target, tainted, mod):
+                        tainted.update(_target_names(node.target))
+                elif isinstance(node, ast.For):
+                    if self._expr_tainted(node.iter, tainted, mod):
+                        tainted.update(_target_names(node.target))
+                elif isinstance(node, ast.withitem):
+                    if node.optional_vars is not None and \
+                            self._expr_tainted(node.context_expr, tainted,
+                                               mod):
+                        tainted.update(_target_names(node.optional_vars))
+                elif isinstance(node, ast.NamedExpr):
+                    if self._expr_tainted(node.value, tainted, mod):
+                        tainted.update(_target_names(node.target))
+                elif isinstance(node, ast.comprehension):
+                    if self._expr_tainted(node.iter, tainted, mod):
+                        tainted.update(_target_names(node.target))
+            if len(tainted) == before:
+                break
+        self._taint[qualname] = tainted
+        return tainted
+
+    def expr_tainted(self, fi: FunctionInfo, expr: ast.AST) -> bool:
+        return self._expr_tainted(expr, self.taint(fi.qualname),
+                                  self.index.modules[fi.module])
+
+    def _expr_tainted(self, expr: ast.AST, tainted: Set[str],
+                      mod: ModuleInfo) -> bool:
+        if isinstance(expr, ast.Name):
+            return expr.id in tainted
+        if isinstance(expr, ast.Constant):
+            return False
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in HOST_ATTR_READS:
+                return False
+            return self._expr_tainted(expr.value, tainted, mod)
+        if isinstance(expr, ast.Subscript):
+            return (self._expr_tainted(expr.value, tainted, mod)
+                    or self._expr_tainted(expr.slice, tainted, mod))
+        if isinstance(expr, ast.Call):
+            resolved = self.resolve_external(expr.func, mod)
+            if resolved is not None:
+                if resolved.split(".")[0] == "jax":
+                    return True
+                if resolved in UNTAINTED_BUILTINS:
+                    return False
+            if isinstance(expr.func, ast.Attribute) and self._expr_tainted(
+                    expr.func.value, tainted, mod):
+                return True
+            return any(self._expr_tainted(a, tainted, mod)
+                       for a in expr.args) or \
+                any(self._expr_tainted(kw.value, tainted, mod)
+                    for kw in expr.keywords)
+        if isinstance(expr, ast.Lambda):
+            return False
+        if isinstance(expr, (ast.BinOp, ast.UnaryOp, ast.BoolOp,
+                             ast.Compare, ast.IfExp, ast.Tuple, ast.List,
+                             ast.Set, ast.Dict, ast.Starred, ast.NamedExpr,
+                             ast.FormattedValue, ast.JoinedStr,
+                             ast.keyword)):
+            return any(self._expr_tainted(c, tainted, mod)
+                       for c in ast.iter_child_nodes(expr)
+                       if isinstance(c, ast.expr))
+        if isinstance(expr, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            return any(self._expr_tainted(c, tainted, mod)
+                       for g in expr.generators
+                       for c in [g.iter] + list(g.ifs)) or any(
+                self._expr_tainted(c, tainted, mod)
+                for c in ast.iter_child_nodes(expr)
+                if isinstance(c, ast.expr))
+        return False
