@@ -1,6 +1,6 @@
 # One-command verify/bench entry points (the tier-1 command of ROADMAP.md).
-.PHONY: test test-fast test-serving test-sharded test-policies lint \
-	bench-smoke bench-serve bench
+.PHONY: test test-fast test-serving test-sharded test-policies test-obs \
+	lint bench-smoke bench-serve bench bench-trajectory
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -12,10 +12,10 @@ lint:
 	PYTHONPATH=src python -m tools.reprolint src
 
 # skip the slow dry-run subprocess compiles (~4 min) and the serving +
-# per-policy suites (each has its own target/CI job)
+# per-policy + observability suites (each has its own target/CI job)
 test-fast:
 	PYTHONPATH=src python -m pytest -x -q \
-		-m "not slow and not serving and not policies"
+		-m "not slow and not serving and not policies and not obs"
 
 # the continuous-batching engine suites (AR decode + diffusion)
 test-serving:
@@ -33,8 +33,17 @@ test-sharded:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" PYTHONPATH=src \
 		python -m pytest -x -q -m distributed
 
+# the observability suite: metrics plane, trace export, calibration
+test-obs:
+	PYTHONPATH=src python -m pytest -x -q -m obs
+
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.run --only batched_gate,decode_gate
+
+# append one per-policy perf-trajectory entry to the committed BENCH file
+bench-trajectory:
+	PYTHONPATH=src python -m benchmarks.run --suite serving \
+		--bench-out BENCH_serving.json
 
 # smoke both serving engines for a few steps on reduced configs
 bench-serve:

@@ -1,10 +1,16 @@
 """Benchmark driver — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only table1,roofline]
+    PYTHONPATH=src python -m benchmarks.run --suite serving \
+        --bench-out BENCH_serving.json
 
 Prints ``name,us_per_call,derived`` CSV rows (stdout) — reduced-scale CPU
 measurements for the paper's tables plus the roofline report derived from the
-production-mesh dry-run artifacts (experiments/dryrun/).
+production-mesh dry-run artifacts (experiments/dryrun/).  With
+``--bench-out``, suites that expose a ``write_trajectory`` hook (currently
+``serving``) instead append one perf-trajectory entry — per-policy p50/p95
+latency, steps/sec, cache ratio, and the metrics-plane overhead — to the
+committed BENCH_*.json so speedups are machine-read across PRs.
 """
 from __future__ import annotations
 
@@ -42,14 +48,45 @@ SUITES = {
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="",
+    ap.add_argument("--only", "--suite", dest="only", default="",
                     help="comma-separated suite names (default: all)")
+    ap.add_argument("--bench-out", default="",
+                    help="append a perf-trajectory entry (suites exposing "
+                         "write_trajectory, e.g. serving -> "
+                         "BENCH_serving.json) instead of timing CSV rows")
     args = ap.parse_args()
     picked = [s.strip() for s in args.only.split(",") if s.strip()] \
         or list(SUITES)
 
-    print("name,us_per_call,derived")
     failures = 0
+    if args.bench_out:
+        # trajectory mode: the picked suites write/append the committed
+        # BENCH_*.json point instead of printing CSV timing rows
+        for name in picked:
+            mod_name, desc = SUITES[name]
+            print(f"# {name}: {desc}", file=sys.stderr, flush=True)
+            try:
+                mod = __import__(mod_name, fromlist=["write_trajectory"])
+                if not hasattr(mod, "write_trajectory"):
+                    raise AttributeError(
+                        f"suite {name!r} has no trajectory writer")
+                doc = mod.write_trajectory(args.bench_out)
+                entry = doc["entries"][-1]
+                print(f"{name}: appended trajectory entry "
+                      f"({len(entry['points'])} points, "
+                      f"metrics overhead "
+                      f"{entry['metrics_overhead_pct']:+.2f}%) "
+                      f"-> {args.bench_out}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"{name}: ERROR: {type(e).__name__}: {e}",
+                      flush=True)
+                traceback.print_exc(file=sys.stderr)
+        if failures:
+            raise SystemExit(1)
+        return
+
+    print("name,us_per_call,derived")
     for name in picked:
         mod_name, desc = SUITES[name]
         print(f"# {name}: {desc}", file=sys.stderr, flush=True)

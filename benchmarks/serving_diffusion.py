@@ -36,7 +36,8 @@ import numpy as np
 
 from benchmarks.common import build_dit
 from repro.configs.base import FastCacheConfig
-from repro.core import CachedDiT
+from repro.core import CachedDiT, registered_policies
+from repro.obs import MetricsCollector
 from repro.serving import (DiffusionRequest, DiffusionServingEngine,
                            ShardedDiffusionEngine, make_serving_mesh,
                            poisson_trace)
@@ -51,13 +52,17 @@ def _fresh_trace(trace: List[DiffusionRequest]) -> List[DiffusionRequest]:
 def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
                guidance: float, lockstep: bool, topology=None,
                async_admission: bool = True, max_steps=None,
-               sched_policy: str = "fifo"
+               sched_policy: str = "fifo", collector=None,
+               enable_metrics: bool = True
                ) -> Tuple[Dict, List[DiffusionRequest]]:
     """One engine run over a fresh copy of ``trace``; returns (result row,
     finished requests).  ``topology`` (data, model) != (1, 1) serves
     through the sharded engine on that mesh.  ``max_steps`` sizes the plan
     tables for heterogeneous traces (defaults to ``steps``);
-    ``sched_policy`` picks the admission order (fifo / sjf)."""
+    ``sched_policy`` picks the admission order (fifo / sjf);
+    ``collector``/``enable_metrics`` thread the obs plane through the
+    engine (``enable_metrics=False`` traces a metrics-free step, the
+    A/B baseline for the telemetry-overhead row in the trajectory)."""
     runner = CachedDiT(model, FastCacheConfig(), policy=policy)
     if topology and tuple(topology) != (1, 1):
         data, tp = topology
@@ -65,12 +70,15 @@ def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
             runner, params, max_slots=slots, num_steps=steps,
             guidance_scale=guidance, max_steps=max_steps,
             mesh=make_serving_mesh(data, tp),
-            async_admission=async_admission)
+            async_admission=async_admission, collector=collector,
+            enable_metrics=enable_metrics)
     else:
         engine = DiffusionServingEngine(runner, params, max_slots=slots,
                                         num_steps=steps,
                                         guidance_scale=guidance,
-                                        max_steps=max_steps)
+                                        max_steps=max_steps,
+                                        collector=collector,
+                                        enable_metrics=enable_metrics)
     reqs = _fresh_trace(trace)
     # warm the jitted serve_step so wall-time excludes compilation, then
     # rewind the clock so the trace's absolute arrival steps line up
@@ -136,6 +144,100 @@ def benchmark(*, dit: str = "dit-b2", policies=("nocache", "fastcache"),
             runs["lockstep"]["latency_steps_p95"]
             / max(runs["continuous"]["latency_steps_p95"], 1e-9))
     return report
+
+
+def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
+               slots: int = 2, steps: int = 8, guidance: float = 4.0,
+               rate: float = 0.25, seed: int = 0,
+               repeats: int = 3) -> Dict:
+    """One perf-trajectory entry: every registered cache policy served
+    through the continuous engine with the metrics plane ON (a live
+    ``MetricsCollector``, harvested at run end) and OFF (the A/B
+    baseline) — so the committed ``BENCH_serving.json`` carries both the
+    per-policy serving numbers and the telemetry-overhead headline.
+
+    A single short CPU run is wall-clock noisy, so each (policy, mode)
+    pair is served ``repeats`` times interleaved (off/on/off/on ... to
+    cancel clock drift) and scored by its best wall time; the headline
+    ``metrics_overhead_pct`` further aggregates best-run model-step wall
+    across ALL policies, which is what the < 5% acceptance bar is
+    checked against."""
+    policies = tuple(policies) if policies else registered_policies()
+    cfg, model, params = build_dit(dit)
+    trace = poisson_trace(requests, rate, seed=seed,
+                          num_classes=cfg.dit.num_classes)
+    entry: Dict = {
+        "date": time.strftime("%Y-%m-%d"),
+        "config": {"dit": dit, "requests": requests, "slots": slots,
+                   "steps": steps, "guidance": guidance,
+                   "poisson_rate": rate, "seed": seed, "repeats": repeats,
+                   "mode": "continuous"},
+        "points": [],
+    }
+    wall_on = wall_off = 0.0
+    steps_on = steps_off = 0
+    for policy in policies:
+        res_off = res_on = collector = None
+        for _ in range(max(1, repeats)):
+            off, _ = serve_once(model, params, trace, policy=policy,
+                                slots=slots, steps=steps,
+                                guidance=guidance, lockstep=False,
+                                enable_metrics=False)
+            coll = MetricsCollector(labels={"policy": policy, "dit": dit})
+            on, _ = serve_once(model, params, trace, policy=policy,
+                               slots=slots, steps=steps,
+                               guidance=guidance, lockstep=False,
+                               collector=coll)
+            if res_off is None or off["wall_s"] < res_off["wall_s"]:
+                res_off = off
+            if res_on is None or on["wall_s"] < res_on["wall_s"]:
+                res_on, collector = on, coll
+        totals = collector.totals()
+        wall_on += res_on["wall_s"]
+        wall_off += res_off["wall_s"]
+        steps_on += res_on["model_steps"]
+        steps_off += res_off["model_steps"]
+        entry["points"].append({
+            "policy": policy,
+            "requests": res_on["requests"],
+            "latency_steps_p50": res_on["latency_steps_p50"],
+            "latency_steps_p95": res_on["latency_steps_p95"],
+            "steps_per_s": res_on["steps_per_s"],
+            "model_step_ms": res_on["model_step_ms"],
+            "model_step_ms_metrics_off": res_off["model_step_ms"],
+            "cache_ratio": res_on["cache"]["block_cache_ratio"],
+            "serve_steps_total": totals.get("serve_steps_total", 0.0),
+            "cache_step_reuses_total": totals.get(
+                "cache_step_reuses_total", 0.0),
+        })
+    ms_on = wall_on / max(1, steps_on) * 1e3
+    ms_off = wall_off / max(1, steps_off) * 1e3
+    entry["model_step_ms_on"] = ms_on
+    entry["model_step_ms_off"] = ms_off
+    entry["metrics_overhead_pct"] = (ms_on - ms_off) / ms_off * 100.0 \
+        if ms_off else 0.0
+    return entry
+
+
+def write_trajectory(path: str, **kw) -> Dict:
+    """Append one ``trajectory()`` entry to the BENCH file at ``path``
+    (created if absent), preserving prior entries so the file accumulates
+    one point per PR."""
+    doc = {"schema": 1, "suite": "serving", "entries": []}
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+        if prev.get("schema") == 1 and isinstance(prev.get("entries"),
+                                                  list):
+            doc = prev
+    except (OSError, ValueError):
+        pass
+    entry = trajectory(**kw)
+    doc["entries"].append(entry)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return doc
 
 
 def parse_topologies(spec: str) -> List[tuple]:

@@ -48,29 +48,37 @@ def denoise_step(runner: CachedDiT, params, sched: sch.Schedule, state,
     per_sample = not isinstance(guidance_scale, (int, float))
     use_cfg = per_sample or guidance_scale != 1.0
     b = x.shape[0]
+    # named_scope phases show up in jax.profiler traces and nest under the
+    # serving engine's per-dispatch TraceAnnotation (obs.tracing), so an
+    # XLA-level profile attributes time to CFG doubling / model eval /
+    # guidance blend / DDIM update by name
     if use_cfg:
-        null_label = runner.model.cfg.dit.num_classes
-        x_in = jnp.concatenate([x, x], axis=0)
-        t_in = jnp.concatenate([t, t], axis=0)
-        lab = jnp.concatenate([labels,
-                               jnp.full((b,), null_label, jnp.int32)])
+        with jax.named_scope("cfg_double"):
+            null_label = runner.model.cfg.dit.num_classes
+            x_in = jnp.concatenate([x, x], axis=0)
+            t_in = jnp.concatenate([t, t], axis=0)
+            lab = jnp.concatenate([labels,
+                                   jnp.full((b,), null_label, jnp.int32)])
     else:
         x_in, t_in, lab = x, t, labels
-    eps, state = runner.step(params, state, x_in, t_in, lab)
+    with jax.named_scope("model_eval"):
+        eps, state = runner.step(params, state, x_in, t_in, lab)
     if use_cfg:
-        eps_c, eps_u = jnp.split(eps, 2, axis=0)
-        if per_sample:
-            g = jnp.broadcast_to(
-                jnp.asarray(guidance_scale, F32), (b,)
-            ).reshape((b,) + (1,) * (x.ndim - 1))
-            # scale==1.0 must reduce to eps_c EXACTLY: the algebraic form
-            # eps_u + 1.0*(eps_c - eps_u) re-associates in float32 and
-            # would break bitwise parity with an unguided solo run
-            eps = jnp.where(g == 1.0, eps_c,
-                            eps_u + g * (eps_c - eps_u))
-        else:
-            eps = eps_u + guidance_scale * (eps_c - eps_u)
-    x = sch.ddim_step(sched, x, eps, t, t_prev)
+        with jax.named_scope("cfg_blend"):
+            eps_c, eps_u = jnp.split(eps, 2, axis=0)
+            if per_sample:
+                g = jnp.broadcast_to(
+                    jnp.asarray(guidance_scale, F32), (b,)
+                ).reshape((b,) + (1,) * (x.ndim - 1))
+                # scale==1.0 must reduce to eps_c EXACTLY: the algebraic
+                # form eps_u + 1.0*(eps_c - eps_u) re-associates in float32
+                # and would break bitwise parity with an unguided solo run
+                eps = jnp.where(g == 1.0, eps_c,
+                                eps_u + g * (eps_c - eps_u))
+            else:
+                eps = eps_u + guidance_scale * (eps_c - eps_u)
+    with jax.named_scope("ddim_update"):
+        x = sch.ddim_step(sched, x, eps, t, t_prev)
     return x, state
 
 

@@ -283,6 +283,42 @@ def serve_plan_shardings(plan, ctx: Optional[ShardingCtx] = None):
             for k, spec in serve_plan_specs(plan, ctx).items()}
 
 
+def serve_metrics_specs(metrics, ctx: Optional[ShardingCtx] = None):
+    """PartitionSpecs for the obs device-metrics pytree
+    (``repro.obs.metrics.init_device_metrics``): the ``per_slot`` group's
+    (S,) leaves shard over ``slot`` — they live with the rest of that
+    slot's state on the same ``data`` shard — while counters and histogram
+    bins replicate (they are whole-batch reductions; per-device partials
+    would need a collective at every read).
+
+    This is a dedicated walker rather than ``serve_state_specs`` on
+    purpose: metrics shapes are structural (a histogram's bucket-count
+    extent is set by its spec, not by the batch), so the rank/extent
+    heuristics of ``_slot_axis`` could collide — e.g. a 4-slot engine and
+    a 3-bucket histogram's 4-bin count vector are indistinguishable by
+    shape alone."""
+    ctx = ctx or current_ctx()
+    ctx = _require_ctx(ctx, "serve_metrics_specs")
+    out = {}
+    for group, leaves in metrics.items():
+        if group == "per_slot":
+            out[group] = {k: spec_for(v.shape, ("slot",), ctx)
+                          for k, v in leaves.items()}
+        else:
+            out[group] = jax.tree.map(
+                lambda v: P(*([None] * v.ndim)), leaves)
+    return out
+
+
+def serve_metrics_shardings(metrics, ctx: Optional[ShardingCtx] = None):
+    """NamedSharding tree for the obs device-metrics pytree."""
+    ctx = ctx or current_ctx()
+    ctx = _require_ctx(ctx, "serve_metrics_shardings")
+    return jax.tree.map(lambda spec: NamedSharding(ctx.mesh, spec),
+                        serve_metrics_specs(metrics, ctx),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 def param_shardings(defs, ctx: Optional[ShardingCtx] = None):
     """Pytree of NamedShardings matching a pytree of ParamDef."""
     from repro.models.params import ParamDef  # local to avoid cycle

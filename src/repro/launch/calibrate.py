@@ -1,0 +1,71 @@
+"""Calibration recorder launcher: record per-layer per-step output deltas
+on an uncached run into an ``.npz`` artifact.
+
+    PYTHONPATH=src python -m repro.launch.calibrate --arch dit-b2 \
+        --reduced --batch 2 --steps 20 --out calib_dit-b2.npz
+
+The artifact carries ``errors_mean`` (L, T) — exactly the matrix
+``smooth_schedule_from_errors`` consumes — plus the raw per-row deltas
+(``rel_delta`` (T, L, B)) for policies that calibrate per-band or
+per-percentile (ROADMAP: spectralcache).  ``--threshold`` prints the
+SmoothCache schedule the recording implies, as a quick sanity readout.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.configs.base import FastCacheConfig
+from repro.core import CachedDiT
+from repro.core.policies.smoothcache import smooth_schedule_from_errors
+from repro.models import build_model
+from repro.obs import record_calibration, save_calibration
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dit-b2")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--guidance", type=float, default=4.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", required=True,
+                    help="output .npz artifact path")
+    ap.add_argument("--threshold", type=float, default=0.0,
+                    help="if > 0, print the SmoothCache schedule this "
+                         "recording implies at that error threshold")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.replace(dtype="float32")
+    if cfg.dit is None:
+        raise SystemExit(f"{cfg.name} is not a DiT — nothing to calibrate")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    runner = CachedDiT(model, FastCacheConfig(), policy="nocache")
+
+    result = record_calibration(runner, params, batch=args.batch,
+                                num_steps=args.steps,
+                                guidance_scale=args.guidance,
+                                seed=args.seed)
+    save_calibration(args.out, result)
+    em = result["errors_mean"]
+    print(f"[calibrate] {args.arch}: recorded ({em.shape[0]} layers, "
+          f"{em.shape[1]} steps) x batch {int(result['batch'])} -> "
+          f"{args.out}")
+    print(f"[calibrate] mean rel delta per step: "
+          f"{np.round(em.mean(axis=0), 4).tolist()}")
+    if args.threshold > 0.0:
+        schedule = smooth_schedule_from_errors(em, args.threshold)
+        frac = float(np.asarray(schedule, np.float32).mean())
+        print(f"[calibrate] smoothcache schedule @ thr={args.threshold}: "
+              f"{frac:.1%} of (layer, step) cells reuse the cache")
+
+
+if __name__ == "__main__":
+    main()

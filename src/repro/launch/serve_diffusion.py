@@ -19,6 +19,14 @@ shortest-job-first (smallest step budget among arrived requests first).
 fast path: single-row slots, no materialized uncond half — the model batch
 is S instead of 2S.
 
+Observability (see ``src/repro/obs/``): ``--metrics-out prom.txt`` writes
+the Prometheus text exposition at run end, ``--metrics-jsonl m.jsonl`` the
+per-window JSONL trajectory (window size via ``--metrics-window N``, in
+engine steps; default: one window at run end), and ``--trace-out t.json``
+a Chrome/Perfetto trace of the run (open in ``ui.perfetto.dev``) with
+per-request admit/finish spans and per-slot denoise slices annotated with
+the policy's cache decision.
+
 ``--mesh data,model`` serves through ``ShardedDiffusionEngine`` on a
 ``(data, model)`` device mesh (slots over ``data``, DiT weights over
 ``model``) with async host admission — disable the overlap with
@@ -43,6 +51,7 @@ from repro.configs.base import FastCacheConfig
 from repro.core import CachedDiT, POLICIES
 from repro.models import build_model
 from repro.launch.mesh import make_serving_mesh
+from repro.obs import MetricsCollector, TraceRecorder, validate_trace
 from repro.serving import (DiffusionServingEngine, ShardedDiffusionEngine,
                            poisson_trace, summarize_by_steps)
 
@@ -98,6 +107,20 @@ def main() -> None:
                          "harvest overlap (sync per-completion fetches)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the Prometheus text exposition here at "
+                         "run end")
+    ap.add_argument("--metrics-jsonl", default="",
+                    help="write the per-window JSONL metrics trajectory "
+                         "here at run end")
+    ap.add_argument("--metrics-window", type=int, default=0,
+                    help="harvest a metrics window every N engine steps "
+                         "(each window close is one device sync); 0 = one "
+                         "window at run end only")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome/Perfetto trace JSON of the run "
+                         "here (per-request spans, per-slot denoise "
+                         "slices with cache decisions)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -117,6 +140,11 @@ def main() -> None:
                         or any(g != 1.0 for g in guidance_mix)):
         raise SystemExit("--no-cfg serves guidance==1.0 only; pass "
                          "--guidance 1.0 and an all-1.0 --guidance-mix")
+    want_metrics = bool(args.metrics_out or args.metrics_jsonl)
+    collector = MetricsCollector(
+        labels={"policy": args.policy, "arch": args.arch},
+        window_steps=args.metrics_window or None) if want_metrics else None
+    tracer = TraceRecorder() if args.trace_out else None
     if args.mesh:
         data, tp = parse_mesh(args.mesh)
         engine = ShardedDiffusionEngine(
@@ -124,14 +152,15 @@ def main() -> None:
             guidance_scale=args.guidance, max_steps=max_steps,
             mesh=make_serving_mesh(data, tp),
             async_admission=not args.sync_admission,
-            cfg_rows=not args.no_cfg)
+            cfg_rows=not args.no_cfg, collector=collector, tracer=tracer)
     else:
         engine = DiffusionServingEngine(runner, params,
                                         max_slots=args.slots,
                                         num_steps=args.steps,
                                         guidance_scale=args.guidance,
                                         max_steps=max_steps,
-                                        cfg_rows=not args.no_cfg)
+                                        cfg_rows=not args.no_cfg,
+                                        collector=collector, tracer=tracer)
     trace = poisson_trace(args.requests, args.rate, seed=args.seed,
                           num_classes=cfg.dit.num_classes,
                           steps_mix=steps_mix or None,
@@ -162,6 +191,19 @@ def main() -> None:
         "latency_by_steps": summarize_by_steps(done),
         "cache": engine.cache_stats(),
     }
+    if collector is not None:
+        collector.set_gauge("run_wall_seconds", dt)
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                f.write(collector.to_prometheus())
+        if args.metrics_jsonl:
+            with open(args.metrics_jsonl, "w") as f:
+                f.write(collector.to_jsonl())
+    if tracer is not None:
+        doc = tracer.to_json()
+        validate_trace(doc)
+        with open(args.trace_out, "w") as f:
+            json.dump(doc, f)
     if args.json:
         print(json.dumps(summary, indent=2))
     else:

@@ -1,0 +1,27 @@
+"""Observability: device-resident serving metrics, request tracing, and
+the offline calibration recorder.
+
+Three planes, three sync disciplines:
+
+- **metrics** (``obs.metrics``): a device pytree of counters/histograms
+  updated with pure ``jnp`` inside the jitted serve_step; the host-side
+  ``MetricsCollector`` harvests only at run end / window close.  Zero
+  per-step syncs — machine-checked by reprolint's ``obs-discipline``;
+- **tracing** (``obs.tracing``): per-request Chrome/Perfetto trace JSON.
+  Diagnostic mode: host clocks per step, deferred device snapshots;
+- **calibration** (``obs.calibration``): nocache per-layer delta recorder
+  for SmoothCache/spectral schedules.  Offline, syncs freely.
+"""
+from repro.obs.calibration import (load_calibration, record_calibration,
+                                   save_calibration)
+from repro.obs.metrics import (METRICS, MetricsCollector, MetricSpec,
+                               counter, histogram, init_device_metrics,
+                               parse_prometheus)
+from repro.obs.tracing import TraceRecorder, validate_trace
+
+__all__ = [
+    "METRICS", "MetricSpec", "MetricsCollector", "TraceRecorder",
+    "counter", "histogram", "init_device_metrics", "load_calibration",
+    "parse_prometheus", "record_calibration", "save_calibration",
+    "validate_trace",
+]

@@ -1,0 +1,147 @@
+"""Calibration recorder: per-layer per-step output deltas on a nocache run.
+
+The input contract for error-bounded cache calibration (ROADMAP "error-
+bounded auto-calibrated caching"): SmoothCache (arXiv 2411.10510) derives
+its layer schedule from the relative L1/L2 change of each block's output
+across adjacent denoising steps measured on an *uncached* run, and a
+future spectralcache policy needs the same trajectory for its frequency-
+band bounds.  This module records that trajectory once and saves it as an
+``.npz`` artifact:
+
+- ``rel_delta``  (T, L, B)  per-step per-layer per-row relative Frobenius
+  change of block outputs (step 0 is 1.0 by convention: no previous);
+- ``errors_mean``  (L, T)  batch-mean, exactly the matrix
+  ``smooth_schedule_from_errors`` consumes;
+- ``ts``  (T,)  the DDIM timestep of each recorded step;
+- scalar metadata (num_steps, guidance_scale, layers, batch, policy).
+
+Calibration is an **offline diagnostic mode**: it fetches one small
+(B, L) matrix per step, which is fine off the serving path — the zero-
+sync rule applies to serving steady state, not to this recorder (its
+module is deliberately outside every jit scope reprolint tracks).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.diffusion import schedule as sch
+
+F32 = jnp.float32
+EPS = 1e-8
+
+CALIBRATION_SCHEMA = ("rel_delta", "errors_mean", "ts")
+
+
+def _block_outputs(impl, params, x_in, c):
+    """(L, B, N, D) block outputs from one full forward: block l's output
+    is the stacked scan carry ``inputs[l + 1]``, the last block's is the
+    stack's final output."""
+    x_out, inputs = impl._full_forward(params, x_in, c)
+    return x_out, jnp.concatenate([inputs[1:], x_out[None]], axis=0)
+
+
+def record_calibration(runner, params, *, batch: int,
+                       labels: Optional[jax.Array] = None,
+                       num_steps: int = 50, guidance_scale: float = 4.0,
+                       num_train_steps: int = 1000, seed: int = 0) -> Dict:
+    """Run ``num_steps`` of uncached DDIM sampling and record per-layer
+    relative output deltas.  ``runner`` must be a nocache ``CachedDiT`` —
+    a caching policy would corrupt the measurement (deltas of partially
+    reused outputs are exactly what the schedule must NOT be fit to)."""
+    if runner.policy != "nocache":
+        raise ValueError(
+            f"calibration must run uncached; got policy "
+            f"{runner.policy!r} (build the runner with policy='nocache')")
+    model, impl = runner.model, runner.impl
+    cfg = model.cfg
+    img, ch = cfg.dit.image_size, cfg.dit.in_channels
+    if labels is None:
+        labels = jnp.zeros((batch,), jnp.int32)
+    use_cfg = guidance_scale != 1.0
+    null_label = cfg.dit.num_classes
+
+    sched = sch.linear_schedule(num_train_steps)
+    ts = sch.ddim_timesteps(num_train_steps, num_steps)
+    ts_prev = jnp.concatenate([ts[1:], jnp.array([-1], jnp.int32)])
+
+    def step(x, prev_out, t, t_prev, lab):
+        if use_cfg:
+            x_m = jnp.concatenate([x, x], axis=0)
+            t_m = jnp.concatenate([t, t], axis=0)
+            lab_m = jnp.concatenate(
+                [lab, jnp.full((batch,), null_label, jnp.int32)])
+        else:
+            x_m, t_m, lab_m = x, t, lab
+        x_tok = model.tokens_in(params, x_m)
+        c = model.conditioning(params, t_m, lab_m)
+        x_out, outs = _block_outputs(impl, params, x_tok, c)
+        # (L, B_eff): relative Frobenius change vs the previous step
+        diff = jnp.sqrt(jnp.sum((outs - prev_out) ** 2, axis=(2, 3)))
+        norm = jnp.sqrt(jnp.sum(prev_out ** 2, axis=(2, 3)))
+        rel = diff / (norm + EPS)
+        eps_hat = impl._eps(params, x_out, c)
+        if use_cfg:
+            eps_c, eps_u = jnp.split(eps_hat, 2, axis=0)
+            eps_hat = eps_u + guidance_scale * (eps_c - eps_u)
+        x_next = sch.ddim_step(sched, x, eps_hat, t, t_prev)
+        return x_next, outs, rel
+
+    step = jax.jit(step)
+
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (batch, img, img, ch), F32)
+    b_eff = 2 * batch if use_cfg else batch
+    # shape from one abstract eval keeps this robust to token layout
+    prev_shape = jax.eval_shape(
+        lambda xx: _block_outputs(
+            impl, params, model.tokens_in(params, xx),
+            model.conditioning(
+                params, jnp.zeros((b_eff,), jnp.int32),
+                jnp.zeros((b_eff,), jnp.int32))),
+        jnp.zeros((b_eff, img, img, ch), F32))[1]
+    prev = jnp.zeros(prev_shape.shape, F32)
+
+    rels = []
+    for i in range(num_steps):
+        t = jnp.full((batch,), ts[i], jnp.int32)
+        t_prev = jnp.full((batch,), ts_prev[i], jnp.int32)
+        x, prev, rel = step(x, prev, t, t_prev, labels)
+        rels.append(np.asarray(rel))          # (L, B_eff) host fetch — OK
+    rel_delta = np.stack(rels, axis=0)        # (T, L, B_eff)
+    rel_delta[0, :, :] = 1.0                  # no previous step: force compute
+    errors_mean = rel_delta.mean(axis=2).T    # (L, T)
+    return {
+        "rel_delta": rel_delta.astype(np.float32),
+        "errors_mean": errors_mean.astype(np.float32),
+        "ts": np.asarray(ts, np.int32)[:num_steps],
+        "num_steps": np.int32(num_steps),
+        "guidance_scale": np.float32(guidance_scale),
+        "layers": np.int32(runner.L),
+        "batch": np.int32(b_eff),
+        "policy": np.str_(runner.policy),
+    }
+
+
+def save_calibration(path: str, result: Dict) -> None:
+    for key in CALIBRATION_SCHEMA:
+        if key not in result:
+            raise ValueError(f"calibration result missing {key!r}")
+    np.savez(path, **result)
+
+
+def load_calibration(path: str) -> Dict:
+    with np.load(path, allow_pickle=False) as f:
+        out = {k: f[k] for k in f.files}
+    for key in CALIBRATION_SCHEMA:
+        if key not in out:
+            raise ValueError(f"{path} is not a calibration artifact "
+                             f"(missing {key!r})")
+    L, T = int(out["layers"]), int(out["num_steps"])
+    if out["errors_mean"].shape != (L, T):
+        raise ValueError(
+            f"errors_mean shape {out['errors_mean'].shape} != ({L}, {T})")
+    return out

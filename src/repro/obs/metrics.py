@@ -1,0 +1,415 @@
+"""Device-resident serving metrics: counters and fixed-bucket histograms
+that live as a pytree threaded through the jitted ``serve_step``.
+
+**The zero-sync design rule.**  The serving engines' steady-state contract
+(PR 6, ``tests/test_serving_invariants.py``) forbids per-step host syncs
+and recompiles — so the metrics plane is split in two:
+
+- the **device plane** is a pytree of ``jnp`` arrays (scalar counters,
+  per-bin histogram counts, per-slot accumulators) that the engines donate
+  alongside the cache state and update with pure ``jnp`` ops inside the
+  jitted step.  Updating a metric costs a few fused elementwise ops and
+  never touches the host;
+- the **host plane** is a :class:`MetricsCollector` that accumulates
+  host-clock observations (admissions, request latencies — plain Python
+  floats, no device round-trip) and *harvests* the device pytree only at
+  existing sync points: run end, or an explicit periodic window
+  (``window_steps``).  ``MetricsCollector.harvest`` is the ONLY place a
+  metric value crosses to the host, and reprolint's ``obs-discipline``
+  check statically proves it is unreachable from any jit region.
+
+Metric *names* are registered once, module-import time, via
+:func:`counter` / :func:`histogram`; duplicate names raise (and are also
+caught statically by ``obs-discipline``).  Exports: Prometheus text
+exposition (:meth:`MetricsCollector.to_prometheus`) and JSONL windows
+(:meth:`MetricsCollector.to_jsonl`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+_NAME_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    name: str
+    kind: str                       # "counter" | "histogram"
+    help: str
+    buckets: Tuple[float, ...] = ()  # histogram upper bounds (le), +Inf
+    #                                  overflow bin is implicit
+
+
+METRICS: Dict[str, MetricSpec] = {}
+
+
+def _register(spec: MetricSpec) -> str:
+    if not _NAME_RE.match(spec.name):
+        raise ValueError(f"metric name {spec.name!r} is not a valid "
+                         f"Prometheus metric name")
+    prev = METRICS.get(spec.name)
+    if prev is not None and prev != spec:
+        raise ValueError(f"metric {spec.name!r} already registered with a "
+                         f"different spec ({prev})")
+    METRICS[spec.name] = spec
+    return spec.name
+
+
+def counter(name: str, help: str = "") -> str:
+    """Register a monotonic counter; returns the name (use the returned
+    binding so reprolint's ``obs-discipline`` can see every registration)."""
+    return _register(MetricSpec(name, "counter", help))
+
+
+def histogram(name: str, help: str = "",
+              buckets: Tuple[float, ...] = (1, 2, 4, 8, 16, 32)) -> str:
+    """Register a fixed-bucket histogram.  ``buckets`` are ascending upper
+    bounds (Prometheus ``le``); an overflow (+Inf) bin is implicit."""
+    b = tuple(float(x) for x in buckets)
+    if list(b) != sorted(b) or len(set(b)) != len(b):
+        raise ValueError(f"histogram {name!r} buckets must be strictly "
+                         f"ascending, got {b}")
+    return _register(MetricSpec(name, "histogram", help, b))
+
+
+def spec(name: str) -> MetricSpec:
+    try:
+        return METRICS[name]
+    except KeyError:
+        raise ValueError(f"unknown metric {name!r}; registered: "
+                         f"{', '.join(sorted(METRICS)) or '(none)'}") from None
+
+
+# --------------------------------------------------------------------------
+# The serving metric set (names shared by both engines; one registration
+# site so obs-discipline's uniqueness rule has a single source of truth)
+# --------------------------------------------------------------------------
+
+SERVE_STEPS = counter(
+    "serve_steps_total", "jitted serve_step dispatches (model steps)")
+ACTIVE_SLOT_STEPS = counter(
+    "active_slot_steps_total", "slot-steps carrying a live request")
+BLOCKS_COMPUTED = counter(
+    "blocks_computed_total", "transformer blocks executed")
+BLOCKS_SKIPPED = counter(
+    "blocks_skipped_total", "transformer blocks served from cache")
+STEP_REUSES = counter(
+    "cache_step_reuses_total", "whole-step cache reuses (active rows)")
+ADMISSIONS = counter(
+    "admissions_total", "requests admitted into a slot")
+REQUESTS_FINISHED = counter(
+    "requests_finished_total", "requests served to completion")
+DECODE_TOKENS = counter(
+    "decode_tokens_total", "AR tokens sampled across all slots")
+PREFILLS = counter(
+    "prefills_total", "AR prefill dispatches")
+
+ACTIVE_SLOTS = histogram(
+    "active_slots", "active slots per serve_step",
+    buckets=(0, 1, 2, 4, 8, 16, 32, 64))
+SKIP_FRACTION = histogram(
+    "cache_skip_fraction", "per-step fraction of active rows reusing the "
+    "whole-step cache", buckets=(0.0, 0.25, 0.5, 0.75, 0.9, 1.0))
+REQUEST_LATENCY = histogram(
+    "request_latency_steps", "queueing + service latency (engine steps)",
+    buckets=(4, 8, 16, 32, 64, 128, 256, 512))
+QUEUE_WAIT = histogram(
+    "queue_wait_steps", "arrival -> admission wait (engine steps)",
+    buckets=(0, 1, 2, 4, 8, 16, 32, 64))
+
+SLOT_ACTIVE_STEPS = counter(
+    "slot_active_steps", "per-slot steps carrying a live request "
+    "(device-resident (S,) counter, sharded over the mesh data axis)")
+
+# device-plane membership for the diffusion serve_step
+DEVICE_COUNTERS = (SERVE_STEPS, ACTIVE_SLOT_STEPS, BLOCKS_COMPUTED,
+                   BLOCKS_SKIPPED, STEP_REUSES)
+DEVICE_HISTOGRAMS = (ACTIVE_SLOTS, SKIP_FRACTION)
+DEVICE_PER_SLOT = (SLOT_ACTIVE_STEPS,)
+
+
+# --------------------------------------------------------------------------
+# Device plane: pure-jnp init / update (jit- and donation-safe)
+# --------------------------------------------------------------------------
+
+
+def init_device_metrics(max_slots: int) -> Dict:
+    """The serving device-metrics pytree: scalar counters, per-bin
+    histogram counts (+ sum/count), and per-slot ``(S,)`` accumulators.
+    Arrays only — the engines donate it buffer-for-buffer alongside the
+    cache state, and the sharding walker places the per-slot group over
+    the mesh ``data`` axis."""
+    return {
+        "counters": {n: jnp.zeros((), F32) for n in DEVICE_COUNTERS},
+        "hist": {n: {"bucket": jnp.zeros((len(spec(n).buckets) + 1,), F32),
+                     "sum": jnp.zeros((), F32),
+                     "count": jnp.zeros((), F32)}
+                 for n in DEVICE_HISTOGRAMS},
+        "per_slot": {n: jnp.zeros((max_slots,), F32)
+                     for n in DEVICE_PER_SLOT},
+    }
+
+
+def inc(m: Dict, name: str, value) -> Dict:
+    """Pure counter bump: returns a new metrics pytree with
+    ``counters[name] += value`` (``value`` may be a traced scalar)."""
+    counters = dict(m["counters"])
+    counters[name] = counters[name] + value
+    return {**m, "counters": counters}
+
+
+def observe(m: Dict, name: str, value) -> Dict:
+    """Pure histogram observation: bumps the bin ``value`` falls in (upper
+    bounds from the registered spec; overflow bin last) plus sum/count."""
+    bounds = jnp.asarray(spec(name).buckets, F32)
+    idx = jnp.searchsorted(bounds, jnp.asarray(value, F32), side="left")
+    hist = dict(m["hist"])
+    h = dict(hist[name])
+    h["bucket"] = h["bucket"].at[idx].add(1.0)
+    h["sum"] = h["sum"] + value
+    h["count"] = h["count"] + 1.0
+    hist[name] = h
+    return {**m, "hist": hist}
+
+
+def slot_add(m: Dict, name: str, values) -> Dict:
+    """Pure per-slot accumulation: ``per_slot[name] += values`` ((S,))."""
+    per_slot = dict(m["per_slot"])
+    per_slot[name] = per_slot[name] + values
+    return {**m, "per_slot": per_slot}
+
+
+# --------------------------------------------------------------------------
+# Host plane
+# --------------------------------------------------------------------------
+
+
+class MetricsCollector:
+    """Host-side metrics aggregation + export.
+
+    Host observations (:meth:`inc` / :meth:`observe`) are plain Python
+    arithmetic — safe anywhere on the orchestration path.  Device metrics
+    cross to the host ONLY through :meth:`harvest`, which the engines call
+    at run end (and optionally every ``window_steps`` engine steps); each
+    harvest appends one window snapshot for the JSONL trajectory, and the
+    latest cumulative values feed the Prometheus exposition."""
+
+    def __init__(self, labels: Optional[Dict[str, str]] = None, *,
+                 window_steps: Optional[int] = None):
+        if window_steps is not None and window_steps < 1:
+            raise ValueError(f"window_steps must be >= 1, got "
+                             f"{window_steps}")
+        self.labels = dict(labels or {})
+        self.window_steps = window_steps
+        self._counters: Dict[str, float] = {}
+        self._hist: Dict[str, Dict] = {}
+        self._device: Dict = {}          # latest harvested device snapshot
+        self._gauges: Dict[str, float] = {}
+        self.windows: List[Dict] = []
+        self._t0 = time.perf_counter()
+
+    # -- host observations (no device involvement) ---------------------
+
+    def inc(self, name: str, value: float = 1.0) -> None:
+        if spec(name).kind != "counter":
+            raise ValueError(f"metric {name!r} is not a counter")
+        self._counters[name] = self._counters.get(name, 0.0) + float(value)
+
+    def observe(self, name: str, value: float) -> None:
+        s = spec(name)
+        if s.kind != "histogram":
+            raise ValueError(f"metric {name!r} is not a histogram")
+        h = self._hist.setdefault(
+            name, {"bucket": np.zeros(len(s.buckets) + 1, np.float64),
+                   "sum": 0.0, "count": 0.0})
+        idx = int(np.searchsorted(np.asarray(s.buckets), float(value),
+                                  side="left"))
+        h["bucket"][idx] += 1.0
+        h["sum"] += float(value)
+        h["count"] += 1.0
+
+    def set_gauge(self, name: str, value: float) -> None:
+        """Free-form gauge (clock readings, occupancy at harvest time);
+        gauges need no registration — they are point-in-time readings, not
+        accumulated series, so the uniqueness rule does not apply."""
+        self._gauges[name] = float(value)
+
+    # -- the sync point -------------------------------------------------
+
+    def harvest(self, device_metrics: Optional[Dict] = None, *,
+                at_step: Optional[int] = None) -> Dict:
+        """Materialize the device metrics pytree (THE device->host sync —
+        engines call this only at run end / window close) and snapshot one
+        window.  Values are cumulative since engine start; the window
+        record carries the wall-clock and step-clock stamps so the JSONL
+        series is a trajectory, not deltas."""
+        if device_metrics:
+            host = jax.tree.map(np.asarray, device_metrics)
+            self._device = host
+        window = {
+            "at_step": at_step,
+            "wall_s": time.perf_counter() - self._t0,
+            "labels": dict(self.labels),
+            "counters": self._merged_counters(),
+            "histograms": {n: {"buckets": list(spec(n).buckets),
+                               "bucket_counts": [float(v)
+                                                 for v in h["bucket"]],
+                               "sum": float(h["sum"]),
+                               "count": float(h["count"])}
+                           for n, h in self._all_hists().items()},
+            "gauges": dict(self._gauges),
+        }
+        if self._device.get("per_slot"):
+            window["per_slot"] = {
+                n: [float(x) for x in v]
+                for n, v in self._device["per_slot"].items()}
+        self.windows.append(window)
+        return window
+
+    # -- merged views ---------------------------------------------------
+
+    def _merged_counters(self) -> Dict[str, float]:
+        out = {n: float(v) for n, v in self._counters.items()}
+        for n, v in self._device.get("counters", {}).items():
+            out[n] = out.get(n, 0.0) + float(v)
+        return out
+
+    def _all_hists(self) -> Dict[str, Dict]:
+        out = {n: {"bucket": np.asarray(h["bucket"], np.float64),
+                   "sum": float(h["sum"]), "count": float(h["count"])}
+               for n, h in self._hist.items()}
+        for n, h in self._device.get("hist", {}).items():
+            cur = out.get(n)
+            add = {"bucket": np.asarray(h["bucket"], np.float64),
+                   "sum": float(h["sum"]), "count": float(h["count"])}
+            if cur is None:
+                out[n] = add
+            else:
+                out[n] = {"bucket": cur["bucket"] + add["bucket"],
+                          "sum": cur["sum"] + add["sum"],
+                          "count": cur["count"] + add["count"]}
+        return out
+
+    def totals(self) -> Dict[str, float]:
+        """Cumulative counters (host + last-harvested device values)."""
+        return self._merged_counters()
+
+    # -- exports --------------------------------------------------------
+
+    def _label_str(self, extra: Optional[Dict[str, str]] = None) -> str:
+        labels = {**self.labels, **(extra or {})}
+        if not labels:
+            return ""
+        body = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+        return "{" + body + "}"
+
+    def to_prometheus(self, prefix: str = "repro_") -> str:
+        """Prometheus text exposition format (v0.0.4): counters as
+        ``<prefix><name>``, histograms as cumulative ``_bucket{le=...}``
+        series plus ``_sum``/``_count``, gauges as-is."""
+        lines: List[str] = []
+        ls = self._label_str()
+        for n, v in sorted(self._merged_counters().items()):
+            full = prefix + n
+            if spec(n).help:
+                lines.append(f"# HELP {full} {spec(n).help}")
+            lines.append(f"# TYPE {full} counter")
+            lines.append(f"{full}{ls} {_fmt(v)}")
+        for n, h in sorted(self._all_hists().items()):
+            full = prefix + n
+            if spec(n).help:
+                lines.append(f"# HELP {full} {spec(n).help}")
+            lines.append(f"# TYPE {full} histogram")
+            cum = 0.0
+            for le, cnt in zip(spec(n).buckets, h["bucket"]):
+                cum += float(cnt)
+                lines.append(f"{full}_bucket"
+                             f"{self._label_str({'le': _fmt(le)})} "
+                             f"{_fmt(cum)}")
+            cum += float(h["bucket"][-1])
+            lines.append(f"{full}_bucket{self._label_str({'le': '+Inf'})} "
+                         f"{_fmt(cum)}")
+            lines.append(f"{full}_sum{ls} {_fmt(h['sum'])}")
+            lines.append(f"{full}_count{ls} {_fmt(h['count'])}")
+        for n, v in sorted(self._gauges.items()):
+            full = prefix + n
+            lines.append(f"# TYPE {full} gauge")
+            lines.append(f"{full}{ls} {_fmt(v)}")
+        return "\n".join(lines) + "\n"
+
+    def to_jsonl(self) -> str:
+        """One JSON object per harvested window (cumulative snapshots)."""
+        return "\n".join(json.dumps(w) for w in self.windows) + (
+            "\n" if self.windows else "")
+
+
+def _fmt(v: float) -> str:
+    f = float(v)
+    return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+# --------------------------------------------------------------------------
+# Exposition parser (round-trip validation; also used by tests)
+# --------------------------------------------------------------------------
+
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)$")
+
+
+def parse_prometheus(text: str) -> Dict[str, Dict]:
+    """Parse Prometheus text exposition into
+    ``{metric: {"type": ..., "samples": [(labels dict, value)]}}``.
+    Raises ``ValueError`` on any malformed line — the tests use this to
+    assert the export parses cleanly."""
+    out: Dict[str, Dict] = {}
+    types: Dict[str, str] = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(None, 3)
+            types[name] = kind
+            out.setdefault(name, {"type": kind, "samples": []})
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"malformed exposition line {lineno}: "
+                             f"{line!r}")
+        labels: Dict[str, str] = {}
+        if m.group("labels"):
+            for part in m.group("labels").split(","):
+                if not part:
+                    continue
+                k, _, v = part.partition("=")
+                if not (v.startswith('"') and v.endswith('"')):
+                    raise ValueError(f"malformed label on line {lineno}: "
+                                     f"{part!r}")
+                labels[k] = v[1:-1]
+        value = float(m.group("value")) if m.group("value") != "+Inf" \
+            else float("inf")
+        base = m.group("name")
+        for suffix in ("_bucket", "_sum", "_count"):
+            if base.endswith(suffix) and base[:-len(suffix)] in types:
+                base = base[:-len(suffix)]
+                break
+        out.setdefault(base, {"type": types.get(base, "untyped"),
+                              "samples": []})
+        out[base]["samples"].append((labels, value))
+    return out

@@ -61,6 +61,9 @@ import numpy as np
 from repro.core.runner import CachedDiT
 from repro.diffusion import sampler
 from repro.diffusion import schedule as sch
+from repro.obs import metrics as obs_metrics
+from repro.obs.metrics import MetricsCollector
+from repro.obs.tracing import TraceRecorder
 from repro.serving.scheduler import (DiffusionRequest, RequestQueue,
                                      SamplingPlan)
 
@@ -72,7 +75,10 @@ class DiffusionServingEngine:
                  num_steps: int = 50, guidance_scale: float = 4.0,
                  num_train_steps: int = 1000,
                  max_steps: Optional[int] = None,
-                 cfg_rows: bool = True):
+                 cfg_rows: bool = True,
+                 collector: Optional[MetricsCollector] = None,
+                 tracer: Optional[TraceRecorder] = None,
+                 enable_metrics: bool = True):
         # the bitwise admission-invariance contract needs per-sample gating:
         # global mode reduces the chi^2 statistic over the whole batch, so
         # an admission would silently change residents' gate decisions
@@ -141,6 +147,16 @@ class DiffusionServingEngine:
         # the request-scoped view (zeroed at admission, harvested on finish)
         self.acc = self._zero_acc()
         self.slot_acc = self._zero_slot_acc()
+        # device-resident metrics plane (obs): counters/histograms updated
+        # with pure jnp inside the jitted step (donated like the state) and
+        # harvested by the collector only at run end / window close — the
+        # zero-sync rule.  enable_metrics=False traces the step without any
+        # metric ops ({} is a static-empty pytree), for A/B overhead runs.
+        self.collector = collector
+        self.tracer = tracer
+        self._metrics_on = enable_metrics
+        self.metrics = (obs_metrics.init_device_metrics(max_slots)
+                        if enable_metrics else {})
 
         self._place_and_compile()
 
@@ -152,7 +168,7 @@ class DiffusionServingEngine:
         transfer guard).  ``ShardedDiffusionEngine`` overrides this to add
         mesh placement and explicit in/out shardings."""
         self._step = jax.jit(self._serve_step_impl,
-                             donate_argnums=(1, 2, 7, 8))
+                             donate_argnums=(1, 2, 7, 8, 9))
         self._reset = jax.jit(self.runner.reset_slot, donate_argnums=(0,))
         self._admit = jax.jit(self._admit_impl, donate_argnums=(0, 1, 2, 3))
 
@@ -165,7 +181,7 @@ class DiffusionServingEngine:
     # -- jitted body ----------------------------------------------------
 
     def _serve_step_impl(self, params, state, x, plan, step_idx, labels,
-                         active, acc, slot_acc):
+                         active, acc, slot_acc, metrics):
         """Advance all slots one denoising step.  ``step_idx`` (S,) is each
         slot's position in ITS OWN plan row of the ``(S, max_steps)``
         tables; idle slots (active=False) run through the model as padding
@@ -191,7 +207,35 @@ class DiffusionServingEngine:
         fold = ((lambda d: d[:self.S] + d[self.S:]) if self.cfg_rows
                 else (lambda d: d))
         slot_acc = {k: slot_acc[k] + fold(delta[k]) for k in slot_acc}
-        return x_new, state, acc, slot_acc
+        if self._metrics_on:  # static: off traces a metrics-free step
+            metrics = self._update_metrics(metrics, active, delta)
+        return x_new, state, acc, slot_acc, metrics
+
+    def _update_metrics(self, metrics, active, delta):
+        """Pure-jnp device-metrics updates folded into the jitted step —
+        a handful of fused scalar ops against the full DiT forward.  Keys
+        the policy's stats block does not carry are simply not counted."""
+        act_f = active.astype(F32)
+        n_act = jnp.sum(act_f)
+        metrics = obs_metrics.inc(metrics, obs_metrics.SERVE_STEPS, 1.0)
+        metrics = obs_metrics.inc(metrics, obs_metrics.ACTIVE_SLOT_STEPS,
+                                  n_act)
+        for name, key in ((obs_metrics.BLOCKS_COMPUTED, "blocks_computed"),
+                          (obs_metrics.BLOCKS_SKIPPED, "blocks_skipped"),
+                          (obs_metrics.STEP_REUSES, "steps_reused")):
+            if key in delta:
+                metrics = obs_metrics.inc(metrics, name,
+                                          jnp.sum(delta[key]))
+        metrics = obs_metrics.observe(metrics, obs_metrics.ACTIVE_SLOTS,
+                                      n_act)
+        if "steps_reused" in delta:
+            rows = float(self.rows_per_slot)
+            frac = jnp.sum(delta["steps_reused"]) / jnp.maximum(
+                n_act * rows, 1.0)
+            metrics = obs_metrics.observe(metrics,
+                                          obs_metrics.SKIP_FRACTION, frac)
+        return obs_metrics.slot_add(metrics,
+                                    obs_metrics.SLOT_ACTIVE_STEPS, act_f)
 
     def _admit_impl(self, state, x, plan, slot_acc, rows, slot, noise,
                     ts_row, ts_prev_row, guid):
@@ -296,6 +340,14 @@ class DiffusionServingEngine:
         self.slot_budget[s] = plan.num_steps
         self.slot_label[s] = req.label
         req.admit_step = self.clock
+        if self.collector is not None:
+            self.collector.inc(obs_metrics.ADMISSIONS)
+            self.collector.observe(obs_metrics.QUEUE_WAIT,
+                                   max(self.clock - req.arrival_step, 0))
+        if self.tracer is not None:
+            self.tracer.admit(req.rid, s, label=req.label,
+                              num_steps=plan.num_steps,
+                              engine_step=self.clock)
         return True
 
     def step(self) -> List[DiffusionRequest]:
@@ -306,11 +358,25 @@ class DiffusionServingEngine:
         self.clock += 1
         if not active.any():            # idle tick: time passes, no compute
             return []
-        self.x, self.state, self.acc, self.slot_acc = self._step(
-            self.params, self.state, self.x, self.plan,
-            jnp.asarray(np.where(active, self.slot_step, 0).astype(np.int32)),
-            jnp.asarray(self.slot_label), jnp.asarray(active), self.acc,
-            self.slot_acc)
+        if self.tracer is not None:
+            with self.tracer.step_begin(self.clock,
+                                        active=int(active.sum())):
+                (self.x, self.state, self.acc, self.slot_acc,
+                 self.metrics) = self._step(
+                    self.params, self.state, self.x, self.plan,
+                    jnp.asarray(np.where(active,
+                                         self.slot_step, 0).astype(np.int32)),
+                    jnp.asarray(self.slot_label), jnp.asarray(active),
+                    self.acc, self.slot_acc, self.metrics)
+            self.tracer.snapshot_slots(self.clock, active, self.slot_acc)
+        else:
+            (self.x, self.state, self.acc, self.slot_acc,
+             self.metrics) = self._step(
+                self.params, self.state, self.x, self.plan,
+                jnp.asarray(np.where(active,
+                                     self.slot_step, 0).astype(np.int32)),
+                jnp.asarray(self.slot_label), jnp.asarray(active), self.acc,
+                self.slot_acc, self.metrics)
         self.model_steps += 1
 
         finished: List[DiffusionRequest] = []
@@ -325,6 +391,12 @@ class DiffusionServingEngine:
                 req = self.slots[s]
                 req.finish_step = self.clock
                 req.done = True
+                if self.collector is not None:
+                    self.collector.inc(obs_metrics.REQUESTS_FINISHED)
+                    self.collector.observe(obs_metrics.REQUEST_LATENCY,
+                                           req.finish_step - req.arrival_step)
+                if self.tracer is not None:
+                    self.tracer.finish(req.rid, engine_step=self.clock)
                 finished.append(req)
                 # free immediately: reset on free as well as on admission,
                 # so a freed slot never carries stale gate/cache state
@@ -362,6 +434,8 @@ class DiffusionServingEngine:
         queue = (requests if isinstance(requests, RequestQueue)
                  else RequestQueue(list(requests), policy=sched_policy))
         finished: List[DiffusionRequest] = []
+        window = (self.collector.window_steps
+                  if self.collector is not None else None)
         while (queue or any(r is not None for r in self.slots)):
             if self.clock >= max_engine_steps:
                 break
@@ -370,9 +444,25 @@ class DiffusionServingEngine:
                        and queue.peek_arrived(self.clock)):
                     self.add_request(queue.pop_arrived(self.clock))
             finished.extend(self.step())
+            if window and self.clock % window == 0:
+                # periodic window close: a sanctioned sync point (the only
+                # one besides run end) — fetches the small metrics pytree
+                self.harvest_metrics()
+        if self.collector is not None:
+            self.harvest_metrics()      # run end: the standing sync point
         return finished
 
     # -- stats ----------------------------------------------------------
+
+    def harvest_metrics(self) -> Optional[Dict]:
+        """Materialize the device metrics pytree into the collector — THE
+        metrics sync point.  Called at run end and at periodic window
+        closes; never from the per-step path (reprolint's obs-discipline
+        check proves harvest is unreachable from any jit region)."""
+        if self.collector is None:
+            return None
+        return self.collector.harvest(self.metrics or None,
+                                      at_step=self.clock)
 
     def cache_stats(self) -> Dict:
         """Engine-lifetime cache counters under the active-slots-only

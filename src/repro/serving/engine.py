@@ -19,6 +19,8 @@ import numpy as np
 from repro.configs.base import FastCacheConfig
 from repro.core.decode_runner import CachedDecoder
 from repro.models.transformer import TransformerModel
+from repro.obs import metrics as obs_metrics
+from repro.obs.metrics import MetricsCollector
 
 F32 = jnp.float32
 
@@ -36,9 +38,14 @@ class ServingEngine:
     def __init__(self, model: TransformerModel, params, *, max_batch: int,
                  window: int, eos_id: Optional[int] = None,
                  fastcache: Optional[FastCacheConfig] = None,
-                 greedy: bool = True):
+                 greedy: bool = True,
+                 collector: Optional[MetricsCollector] = None):
         self.model = model
         self.params = params
+        # AR decode fetches the sampled token every step by design, so its
+        # metrics are host-plane only: plain Python counters on values the
+        # loop already materializes (no extra device work or syncs)
+        self.collector = collector
         self.max_batch = max_batch
         self.window = window
         self.eos_id = eos_id
@@ -103,12 +110,16 @@ class ServingEngine:
                 req.generated.append(nxt)
                 self.slots[s] = req
                 self.slot_tokens[s] = nxt
+                if self.collector is not None:
+                    self.collector.inc(obs_metrics.ADMISSIONS)
+                    self.collector.inc(obs_metrics.PREFILLS)
                 return True
         return False
 
     def step(self) -> None:
         """One batched decode step for all active slots."""
         tokens = jnp.asarray(self.slot_tokens)
+        n_active = sum(1 for r in self.slots if r is not None and not r.done)
         if self.decoder is None:
             logits, self.cache = self._decode(self.params, tokens, self.cache)
         else:
@@ -120,12 +131,22 @@ class ServingEngine:
             logits, self.cache, self.fc_state = self._decode(
                 self.params, tokens, self.cache, self.fc_state)
             after = self.fc_state["stats"]
-            self.active_blocks_skipped += float(
+            d_skipped = float(
                 (np.asarray(after["blocks_skipped"])
                  - before["blocks_skipped"])[active].sum())
-            self.active_blocks_computed += float(
+            d_computed = float(
                 (np.asarray(after["blocks_computed"])
                  - before["blocks_computed"])[active].sum())
+            self.active_blocks_skipped += d_skipped
+            self.active_blocks_computed += d_computed
+            if self.collector is not None:
+                self.collector.inc(obs_metrics.BLOCKS_SKIPPED, d_skipped)
+                self.collector.inc(obs_metrics.BLOCKS_COMPUTED, d_computed)
+        if self.collector is not None:
+            self.collector.inc(obs_metrics.SERVE_STEPS)
+            self.collector.inc(obs_metrics.ACTIVE_SLOT_STEPS, n_active)
+            self.collector.inc(obs_metrics.DECODE_TOKENS, n_active)
+            self.collector.observe(obs_metrics.ACTIVE_SLOTS, n_active)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         for s, req in enumerate(self.slots):
             if req is None or req.done:
@@ -137,6 +158,10 @@ class ServingEngine:
                     or len(req.generated) >= req.max_new_tokens):
                 req.done = True
                 self.slots[s] = None
+                if self.collector is not None:
+                    self.collector.inc(obs_metrics.REQUESTS_FINISHED)
+                    self.collector.observe(obs_metrics.REQUEST_LATENCY,
+                                           len(req.generated))
 
     def run(self, requests: List[Request], max_steps: int = 1024
             ) -> List[Request]:
@@ -152,6 +177,8 @@ class ServingEngine:
             for r in active:
                 if r.done and r not in finished:
                     finished.append(r)
+        if self.collector is not None:
+            self.collector.harvest(at_step=steps)
         return finished + [r for r in active if r not in finished]
 
     def cache_stats(self) -> Dict[str, float]:

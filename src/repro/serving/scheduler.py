@@ -177,20 +177,41 @@ class RequestQueue:
         return bool(self._pending) or bool(self._ready)
 
 
+def _safe_percentile(values: np.ndarray, q: float,
+                     default: float = -1.0) -> float:
+    """``np.percentile`` that reports ``default`` on an empty array
+    instead of raising — summaries over truncated traces (a run cut off
+    by ``max_engine_steps``, a group whose every request was dropped
+    unfinished) must degrade to a sentinel, not crash the report."""
+    if values.size == 0:
+        return default
+    return float(np.percentile(values, q))
+
+
 def summarize_by_steps(done: List[DiffusionRequest]) -> Dict[str, Dict]:
     """Group finished requests by their resolved step budget: request
     count and p50/p95 latency per budget, plus the cache ratio aggregated
     from the requests' request-scoped counters when every request in the
     group carries them (``req.cache``).  Shared by the serving launcher's
-    summary and the heterogeneous-workload benchmark."""
+    summary and the heterogeneous-workload benchmark.
+
+    Robust to truncated traces: unfinished requests (no ``finish_step``)
+    and requests with an unresolved plan (``num_steps`` still ``None``)
+    are excluded from the latency percentiles — a group left with no
+    finished request reports its count with ``-1.0`` percentiles rather
+    than tripping ``np.percentile`` on an empty array."""
     out: Dict[str, Dict] = {}
-    for n in sorted({r.num_steps for r in done}):
+    budgets = sorted({r.num_steps for r in done
+                      if r.num_steps is not None})
+    for n in budgets:
         grp = [r for r in done if r.num_steps == n]
-        lats = np.array([r.latency_steps for r in grp], np.float64)
+        lats = np.array([r.latency_steps for r in grp
+                         if r.latency_steps >= 0], np.float64)
         row = {"requests": len(grp),
-               "latency_steps_p50": float(np.percentile(lats, 50)),
-               "latency_steps_p95": float(np.percentile(lats, 95))}
-        if all(r.cache is not None for r in grp):
+               "finished": int(lats.size),
+               "latency_steps_p50": _safe_percentile(lats, 50),
+               "latency_steps_p95": _safe_percentile(lats, 95)}
+        if grp and all(r.cache is not None for r in grp):
             skipped = sum(r.cache["blocks_skipped"] for r in grp)
             computed = sum(r.cache["blocks_computed"] for r in grp)
             tot = skipped + computed

@@ -62,6 +62,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.runner import CachedDiT
 from repro.distributed.sharding import (ShardingCtx, make_rules,
                                         param_shardings,
+                                        serve_metrics_shardings,
                                         serve_plan_shardings,
                                         serve_state_shardings, spec_for,
                                         use_sharding)
@@ -93,7 +94,8 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
                  max_steps: Optional[int] = None,
                  async_admission: bool = True,
                  numerics_check: Optional[bool] = None,
-                 cfg_rows: bool = True):
+                 cfg_rows: bool = True, collector=None, tracer=None,
+                 enable_metrics: bool = True):
         self.mesh = mesh if mesh is not None else make_serving_mesh()
         self.rules = make_rules("serve")
         self._ctx = ShardingCtx(self.mesh, self.rules)
@@ -101,7 +103,9 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         super().__init__(runner, params, max_slots=max_slots,
                          num_steps=num_steps, guidance_scale=guidance_scale,
                          num_train_steps=num_train_steps,
-                         max_steps=max_steps, cfg_rows=cfg_rows)
+                         max_steps=max_steps, cfg_rows=cfg_rows,
+                         collector=collector, tracer=tracer,
+                         enable_metrics=enable_metrics)
         # default: self-check exactly the regime where the partitioner has
         # been caught miscompiling (a model axis wider than one device);
         # model==1 topologies are covered bitwise by the parity tests
@@ -146,6 +150,10 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         self._plan_row_sh = NamedSharding(
             mesh, P(*self._plan_sh["ts"].spec[1:]))
         self._acc_sh = {k: rep for k in self.acc}
+        # metrics plane: per-slot leaves ride the slot shard, counters and
+        # histogram bins replicate (serve_metrics_shardings documents why
+        # this is a dedicated walker, not the state walker)
+        self._metrics_sh = serve_metrics_shardings(self.metrics, ctx)
 
         self.params = jax.device_put(self.params, self._params_sh)
         self.state = jax.device_put(self.state, self._state_sh)
@@ -153,6 +161,7 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         self.x = jax.device_put(self.x, self._x_sh)
         self.acc = jax.device_put(self.acc, self._acc_sh)
         self.slot_acc = jax.device_put(self.slot_acc, self._slot_acc_sh)
+        self.metrics = jax.device_put(self.metrics, self._metrics_sh)
         # schedule constants ride along replicated so the jitted programs
         # never see mixed device commitments
         self.sched = jax.device_put(self.sched, rep)
@@ -160,11 +169,11 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         # trace under the serve sharding ctx so `constrain` calls in the
         # model blocks and the fastcache scan carry bind to this mesh
         def step_fn(params, state, x, plan, step_idx, labels, active, acc,
-                    slot_acc):
+                    slot_acc, metrics):
             with use_sharding(mesh, rules):
                 return self._serve_step_impl(params, state, x, plan,
                                              step_idx, labels, active, acc,
-                                             slot_acc)
+                                             slot_acc, metrics)
 
         def reset_fn(state, rows):
             with use_sharding(mesh, rules):
@@ -181,10 +190,10 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
             step_fn,
             in_shardings=(self._params_sh, self._state_sh, self._x_sh,
                           self._plan_sh, rep, rep, rep, self._acc_sh,
-                          self._slot_acc_sh),
+                          self._slot_acc_sh, self._metrics_sh),
             out_shardings=(self._x_sh, self._state_sh, self._acc_sh,
-                           self._slot_acc_sh),
-            donate_argnums=(1, 2, 7, 8))
+                           self._slot_acc_sh, self._metrics_sh),
+            donate_argnums=(1, 2, 7, 8, 9))
         self._reset = jax.jit(
             reset_fn, in_shardings=(self._state_sh, rep),
             out_shardings=self._state_sh, donate_argnums=(0,))
@@ -255,7 +264,7 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
             self.runner, self._unplaced_params, max_slots=self.S,
             num_steps=self.num_steps, guidance_scale=self.guidance_scale,
             num_train_steps=self.num_train_steps, max_steps=self.max_steps,
-            cfg_rows=self.cfg_rows)
+            cfg_rows=self.cfg_rows, enable_metrics=bool(self.metrics))
         eff = self.rows_per_slot * self.S    # state rows (CFG pairs or not)
         x0 = jax.random.normal(jax.random.PRNGKey(0), self.x.shape,
                                jnp.float32)
@@ -268,20 +277,23 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         ref_acc, ref_sacc = self._zero_acc(), ref_eng._zero_slot_acc()
         got_acc = jax.device_put(self._zero_acc(), self._acc_sh)
         got_sacc = jax.device_put(self._zero_slot_acc(), self._slot_acc_sh)
+        ref_m = ref_eng.metrics
+        got_m = jax.device_put(
+            jax.tree.map(jnp.zeros_like, self.metrics), self._metrics_sh)
         flat = getattr(jax.tree, "flatten_with_path", None) \
             or jax.tree_util.tree_flatten_with_path
         for step in range(2):
             idx = jnp.full((self.S,), step, jnp.int32)
-            rx, rs, ref_acc, ref_sacc = ref_eng._step(
+            rx, rs, ref_acc, ref_sacc, ref_m = ref_eng._step(
                 ref[0], ref[1], ref[2], ref_eng.plan, idx, labels, active,
-                ref_acc, ref_sacc)
-            gx, gs, got_acc, got_sacc = self._step(
+                ref_acc, ref_sacc, ref_m)
+            gx, gs, got_acc, got_sacc, got_m = self._step(
                 got[0], got[1], got[2], self.plan, idx, labels, active,
-                got_acc, got_sacc)
+                got_acc, got_sacc, got_m)
             ref, got = (ref_eng.params, rs, rx), (self.params, gs, gx)
-            for (path, a), b in zip(flat((rx, rs, ref_acc, ref_sacc))[0],
-                                    jax.tree.leaves((gx, gs, got_acc,
-                                                     got_sacc))):
+            for (path, a), b in zip(
+                    flat((rx, rs, ref_acc, ref_sacc, ref_m))[0],
+                    jax.tree.leaves((gx, gs, got_acc, got_sacc, got_m))):
                 name = jax.tree_util.keystr(path)
                 a, b = np.asarray(a), np.asarray(b)
                 if np.issubdtype(a.dtype, np.floating):

@@ -1,0 +1,25 @@
+"""Fixture obs metrics module: the registration helpers and collector the
+obs-discipline check recognizes structurally.  One duplicate registration
+(the second ``steps_total``) and a harvest method made jit-reachable by
+``serving/eng.py`` — both must be flagged."""
+METRICS = {}
+
+
+def counter(name: str, help: str = "") -> str:
+    METRICS[name] = ("counter", help)
+    return name
+
+
+def histogram(name: str, buckets=(1, 2, 4)) -> str:
+    METRICS[name] = ("histogram", buckets)
+    return name
+
+
+class MetricsCollector:
+    def harvest(self, device_metrics=None):  # LINT: obs-discipline
+        return dict(METRICS)
+
+
+STEPS = counter("steps_total")
+LATENCY = histogram("latency_steps")
+DUP = counter("steps_total")  # LINT: obs-discipline

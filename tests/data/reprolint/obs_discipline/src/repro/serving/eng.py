@@ -1,0 +1,16 @@
+"""Fixture: ``MetricsCollector.harvest`` called inside a jitted step —
+obs-discipline must fire at the call site (and at the now-jit-reachable
+harvest definition in the fixture obs module)."""
+import jax
+import jax.numpy as jnp
+
+from repro.obs.metrics import MetricsCollector
+
+
+def _impl(x: jax.Array, collector: MetricsCollector):
+    s = jnp.sum(x)
+    collector.harvest()  # LINT: obs-discipline
+    return s
+
+
+step = jax.jit(_impl)

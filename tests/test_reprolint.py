@@ -25,7 +25,8 @@ DATA = REPO / "tests" / "data" / "reprolint"
 
 EXPECTED_CHECKS = {"no-bare-assert", "host-sync-in-jit",
                    "tracer-control-flow", "policy-contract",
-                   "donation-discipline", "kernel-parity"}
+                   "donation-discipline", "kernel-parity",
+                   "obs-discipline"}
 
 
 def _marked(case):
@@ -48,6 +49,7 @@ def test_all_builtin_checks_registered():
     ("host_sync", "host-sync-in-jit"),
     ("tracer_flow", "tracer-control-flow"),
     ("donation", "donation-discipline"),
+    ("obs_discipline", "obs-discipline"),
 ])
 def test_check_fires_exactly_at_markers(case, check):
     diags = run_checks(DATA / case / "src", checks=[check],

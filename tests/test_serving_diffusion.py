@@ -16,7 +16,8 @@ from repro.core import CachedDiT, POLICIES, summarize_stats
 from repro.diffusion import sample
 from repro.models import build_model
 from repro.serving import (DiffusionRequest, DiffusionServingEngine,
-                           RequestQueue, SamplingPlan, poisson_trace)
+                           RequestQueue, SamplingPlan, poisson_trace,
+                           summarize_by_steps)
 from tests.conftest import assert_solo_replay_parity, f32_cfg
 
 pytestmark = pytest.mark.serving
@@ -374,6 +375,33 @@ def test_queue_tolerates_duplicate_keys(policy):
     q.push(b)
     assert {q.pop_arrived(0), q.pop_arrived(0)} == {a, b}
     assert q.pop_arrived(0) is None
+
+
+def test_summarize_by_steps_tolerates_empty_and_unfinished_groups():
+    """Regression: truncated traces used to trip ``np.percentile`` on an
+    empty array.  Empty input -> {}; a group whose every request was cut
+    off unfinished reports its count with -1.0 sentinel percentiles; and
+    requests with an unresolved plan (num_steps=None) are excluded instead
+    of materializing a 'None' group."""
+    assert summarize_by_steps([]) == {}
+
+    cut = DiffusionRequest(rid=0, label=0, arrival_step=0, num_steps=8)
+    ok = DiffusionRequest(rid=1, label=0, arrival_step=2, num_steps=4)
+    ok.finish_step = 10
+    unresolved = DiffusionRequest(rid=2, label=0, arrival_step=0)
+    out = summarize_by_steps([cut, ok, unresolved])
+    assert set(out) == {"4", "8"}
+    assert out["8"] == {"requests": 1, "finished": 0,
+                        "latency_steps_p50": -1.0,
+                        "latency_steps_p95": -1.0}
+    assert out["4"]["finished"] == 1
+    assert out["4"]["latency_steps_p50"] == 8.0
+    # cache aggregation only engages when every request carries counters
+    ok.cache = {"blocks_skipped": 3.0, "blocks_computed": 1.0,
+                "steps_reused": 2.0}
+    out = summarize_by_steps([ok])
+    assert out["4"]["cache_ratio"] == 0.75
+    assert out["4"]["steps_reused"] == 2.0
 
 
 def test_sampling_plan_rows_match_solo_schedule():

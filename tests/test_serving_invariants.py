@@ -17,6 +17,8 @@ from repro.configs import get_reduced
 from repro.configs.base import FastCacheConfig
 from repro.core import CachedDiT
 from repro.models import build_model
+from repro.obs import MetricsCollector
+from repro.obs import metrics as obs_metrics
 from repro.serving import (DiffusionRequest, DiffusionServingEngine,
                            Request, ServingEngine)
 from tests.conftest import f32_cfg, steady_state_guard
@@ -88,6 +90,72 @@ def test_diffusion_mid_window_admission_is_compile_free(dit):
             raise AssertionError("mid-flight admission must land")
         for _ in range(4):
             assert eng.step() == []
+
+
+def test_diffusion_steady_state_with_metrics_plane(dit):
+    """The telemetry tentpole's acceptance bar: with the device metrics
+    plane live AND a collector attached, the steady-state window is still
+    compile-free and transfer-free — metric updates are pure jnp inside
+    the jitted step, and ``harvest`` (the only sync) stays outside the
+    window.  The post-window harvest then proves the plane actually
+    counted the window's steps."""
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    collector = MetricsCollector(labels={"policy": "fastcache"})
+    eng = DiffusionServingEngine(runner, params, max_slots=2,
+                                 num_steps=12, guidance_scale=4.0,
+                                 collector=collector)
+    assert eng.metrics, "metrics plane must be on by default"
+    warm = DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0,
+                            num_steps=4)
+    if not eng.add_request(warm):
+        raise AssertionError("warm-up admission must land in a free slot")
+    done = []
+    while not done:
+        done += eng.step()
+    for r in (DiffusionRequest(rid=1, label=2, seed=11, arrival_step=0),
+              DiffusionRequest(rid=2, label=3, seed=12, arrival_step=0)):
+        if not eng.add_request(r):
+            raise AssertionError("resident admission must land")
+    eng.step()  # settle: one post-admission step outside the window
+
+    clock_before = eng.clock
+    with steady_state_guard(eng._step, eng._reset, eng._admit):
+        for _ in range(8):
+            assert eng.step() == []
+
+    harvested = eng.harvest_metrics()
+    assert harvested["counters"][obs_metrics.SERVE_STEPS] \
+        == eng.model_steps
+    assert eng.clock - clock_before == 8
+
+
+def test_ar_engine_steady_state_with_collector():
+    """Host-plane metrics on the AR engine (per-step token fetch is by
+    design there): a live collector must not add recompiles."""
+    cfg = f32_cfg(get_reduced("qwen3-0.6b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    collector = MetricsCollector()
+    eng = ServingEngine(model, params, max_batch=2, window=64,
+                        fastcache=FastCacheConfig(), collector=collector)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=32)
+            for i in range(2)]
+    for r in reqs:
+        if not eng.add_request(r):
+            raise AssertionError("admission must land in a free slot")
+    for _ in range(3):
+        eng.step()
+    with steady_state_guard(eng._prefill, eng._decode, transfers="allow"):
+        for _ in range(16):
+            eng.step()
+    totals = collector.totals()
+    assert totals[obs_metrics.ADMISSIONS] == 2.0
+    assert totals[obs_metrics.PREFILLS] == 2.0
+    assert totals[obs_metrics.DECODE_TOKENS] > 0.0
 
 
 def test_ar_engine_steady_state():

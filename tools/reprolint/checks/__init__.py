@@ -15,7 +15,7 @@ from tools.reprolint.jitscope import JitScope
 CHECKS: Dict[str, Callable[["LintContext"], List[Diagnostic]]] = {}
 
 _BUILTINS = ("bare_assert", "host_sync", "tracer_flow", "policy_contract",
-             "donation", "kernel_parity")
+             "donation", "kernel_parity", "obs_discipline")
 
 
 def register_check(name: str):

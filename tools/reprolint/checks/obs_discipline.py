@@ -1,0 +1,146 @@
+"""obs-discipline: the observability plane's two standing rules.
+
+1. **Unique metric names.**  Every metric is registered through the
+   ``counter(...)`` / ``histogram(...)`` helpers of the obs metrics
+   module; registering the same name twice means two call sites believe
+   they own the series and their increments silently merge.  The runtime
+   registry raises on conflicting re-registration, but only on the code
+   path that actually imports both sites — this check catches it
+   statically across the whole tree.
+
+2. **``MetricsCollector.harvest`` stays off the jit path.**  Harvest is
+   the metrics plane's ONLY device->host sync point, sanctioned at run
+   end / window close on the host orchestration path.  A harvest call
+   reachable from a jit root would either fail at trace time or — worse —
+   silently pin device values into the trace and force per-step syncs,
+   exactly what the device-resident design exists to prevent.  Reuses the
+   JitScope call graph: any call in a jit-reachable function that
+   resolves to a ``harvest`` method of a ``MetricsCollector`` class is
+   flagged.
+
+The registration helpers are recognized structurally (functions named
+``counter``/``histogram`` defined in an ``obs`` module; collectors as
+classes named ``MetricsCollector``), so fixture trees exercise the check
+without importing the real package.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.reprolint.checks import LintContext, register_check
+from tools.reprolint.diagnostics import Diagnostic
+from tools.reprolint.jitscope import own_nodes
+
+REGISTER_FN_NAMES = ("counter", "histogram")
+COLLECTOR_CLASS = "MetricsCollector"
+HARVEST_METHOD = "harvest"
+
+
+def _is_obs_module(module: str) -> bool:
+    parts = module.split(".")
+    return "obs" in parts
+
+
+def _register_fns(ctx: LintContext) -> Set[str]:
+    """Qualnames of the metric-registration helpers: top-level functions
+    named counter/histogram living in an ``obs`` package module."""
+    out: Set[str] = set()
+    for qn, fi in ctx.index.functions.items():
+        if fi.cls is None and fi.name in REGISTER_FN_NAMES \
+                and _is_obs_module(fi.module):
+            out.add(qn)
+    return out
+
+
+def _harvest_fns(ctx: LintContext) -> Set[str]:
+    """Qualnames of ``MetricsCollector.harvest`` methods (any class of
+    that name, across the scanned tree)."""
+    out: Set[str] = set()
+    for ci in ctx.index.classes.values():
+        if ci.name == COLLECTOR_CLASS and HARVEST_METHOD in ci.methods:
+            out.add(ci.methods[HARVEST_METHOD])
+    return out
+
+
+def _literal_name(call: ast.Call) -> Optional[str]:
+    """The registered metric name when it is a string literal (first
+    positional arg or ``name=``); None for computed names."""
+    target: Optional[ast.AST] = call.args[0] if call.args else None
+    if target is None:
+        for kw in call.keywords:
+            if kw.arg == "name":
+                target = kw.value
+    if isinstance(target, ast.Constant) and isinstance(target.value, str):
+        return target.value
+    return None
+
+
+@register_check("obs-discipline")
+def check(ctx: LintContext) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    register_fns = _register_fns(ctx)
+    harvest_fns = _harvest_fns(ctx)
+
+    # ---- rule 1: metric names registered at most once -----------------
+    # walk every call site in the tree (module level + function bodies),
+    # resolve it through the scope machinery, and track name -> first site
+    first_site: Dict[str, Tuple[str, int]] = {}
+    if register_fns:
+        sites = []
+        for mod in ctx.index.modules.values():
+            for node in own_nodes(mod.tree):
+                if isinstance(node, ast.Call):
+                    sites.append((node, None, mod))
+        for fi in ctx.index.functions.values():
+            mod = ctx.index.modules[fi.module]
+            for node in own_nodes(fi.node):
+                if isinstance(node, ast.Call):
+                    sites.append((node, fi, mod))
+        # deterministic order: by file then line
+        sites.sort(key=lambda s: (s[2].path, s[0].lineno))
+        for node, fi, mod in sites:
+            if not ctx.scope.resolve_callable(node.func, fi, mod) \
+                    & register_fns:
+                continue
+            name = _literal_name(node)
+            if name is None:
+                continue
+            prev = first_site.get(name)
+            if prev is None:
+                first_site[name] = (mod.path, node.lineno)
+            elif prev != (mod.path, node.lineno):
+                diags.append(Diagnostic(
+                    mod.path, node.lineno, "obs-discipline",
+                    f"metric {name!r} is already registered at "
+                    f"{prev[0]}:{prev[1]}; two registration sites would "
+                    f"silently merge their series — reuse the exported "
+                    f"name instead"))
+
+    # ---- rule 2: harvest unreachable from any jit region --------------
+    if harvest_fns:
+        for qn in sorted(ctx.scope.reachable):
+            fi = ctx.index.functions[qn]
+            mod = ctx.index.modules[fi.module]
+            for node in own_nodes(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                if ctx.scope.resolve_callable(node.func, fi, mod) \
+                        & harvest_fns:
+                    diags.append(Diagnostic(
+                        mod.path, node.lineno, "obs-discipline",
+                        f"`MetricsCollector.harvest()` called in "
+                        f"`{fi.name}`, which is reachable from a jitted "
+                        f"entry point; harvest is the metrics plane's "
+                        f"only device->host sync and must stay on the "
+                        f"host orchestration path (run end / window "
+                        f"close)"))
+        for hq in sorted(harvest_fns & ctx.scope.reachable):
+            fi = ctx.index.functions[hq]
+            mod = ctx.index.modules[fi.module]
+            diags.append(Diagnostic(
+                mod.path, fi.node.lineno, "obs-discipline",
+                f"`{fi.qualname}` is itself reachable from a jitted "
+                f"entry point; the harvest sync point must never enter "
+                f"a trace"))
+    return diags
