@@ -1,6 +1,7 @@
 # One-command verify/bench entry points (the tier-1 command of ROADMAP.md).
 .PHONY: test test-fast test-serving test-sharded test-policies test-obs \
-	lint bench-smoke bench-serve bench bench-trajectory
+	lint bench-smoke bench-serve bench bench-trajectory bench-check \
+	metrics-doc
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -41,9 +42,21 @@ bench-smoke:
 	PYTHONPATH=src python -m benchmarks.run --only batched_gate,decode_gate
 
 # append one per-policy perf-trajectory entry to the committed BENCH file
+# (re-runs on the same day with the same config replace, not duplicate)
 bench-trajectory:
 	PYTHONPATH=src python -m benchmarks.run --suite serving \
 		--bench-out BENCH_serving.json
+
+# CI perf-regression gate: fresh trajectory point vs the committed BENCH
+# baseline; fails on >25% model_step_ms regression for any policy
+# (override with BENCH_CHECK_OVERRIDE=<reason>)
+bench-check:
+	PYTHONPATH=src python -m benchmarks.bench_check
+
+# regenerate METRICS.md (reference table of every registered metric)
+# from the obs registry; commit the result
+metrics-doc:
+	PYTHONPATH=src python -m repro.obs.metrics_doc METRICS.md
 
 # smoke both serving engines for a few steps on reduced configs
 bench-serve:

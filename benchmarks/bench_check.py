@@ -1,0 +1,122 @@
+"""CI perf-regression gate against the committed serving trajectory.
+
+    PYTHONPATH=src python -m benchmarks.bench_check [--bench BENCH_serving.json]
+
+Measures a FRESH trajectory point (same benchmark config as the committed
+baseline's latest entry, same policies) and fails — exit 1 with a
+per-policy table — if any policy's ``model_step_ms`` regressed more than
+``--max-regress-pct`` (default 25%) against the committed number.  Only
+slowdowns gate; speedups and new policies pass.
+
+The 25% default is deliberately loose: these are short reduced-scale CPU
+runs on shared CI machines, so the gate is meant to catch "the serve step
+got 2x slower" structural regressions, not 5% noise.  A legitimate
+slowdown (e.g. a PR that knowingly trades step time for quality) is
+ridden past the gate by setting ``BENCH_CHECK_OVERRIDE=<reason>`` in the
+environment — CI wires that to a ``perf-regression-ok`` PR label — which
+downgrades failures to warnings.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+from benchmarks.serving_diffusion import trajectory
+
+OVERRIDE_ENV = "BENCH_CHECK_OVERRIDE"
+
+
+def check_regression(baseline_entry: Dict, fresh_entry: Dict,
+                     max_regress_pct: float = 25.0) -> List[Dict]:
+    """Compare two trajectory entries policy-by-policy; return one record
+    per policy whose fresh ``model_step_ms`` exceeds the baseline's by
+    more than ``max_regress_pct`` percent.  Policies present only on one
+    side are skipped (renames/additions must not gate), as are baseline
+    points with non-positive step time (corrupt/placeholder data)."""
+    base = {p["policy"]: p for p in baseline_entry.get("points", [])}
+    fresh = {p["policy"]: p for p in fresh_entry.get("points", [])}
+    failures = []
+    for policy in base:
+        if policy not in fresh:
+            continue
+        b = float(base[policy].get("model_step_ms", 0.0))
+        f = float(fresh[policy].get("model_step_ms", 0.0))
+        if b <= 0.0:
+            continue
+        pct = (f - b) / b * 100.0
+        if pct > max_regress_pct:
+            failures.append({"policy": policy, "baseline_ms": b,
+                             "fresh_ms": f, "regress_pct": pct})
+    return failures
+
+
+def _config_kwargs(config: Dict) -> Dict:
+    """Map a committed entry's config record back to ``trajectory()``
+    keyword arguments (``poisson_rate`` -> ``rate``; ``mode`` is implied)."""
+    kw = {k: config[k] for k in ("dit", "requests", "slots", "steps",
+                                 "guidance", "seed", "repeats")
+          if k in config}
+    if "poisson_rate" in config:
+        kw["rate"] = config["poisson_rate"]
+    return kw
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_serving.json",
+                    help="committed trajectory file to gate against")
+    ap.add_argument("--max-regress-pct", type=float, default=25.0)
+    args = ap.parse_args()
+    try:
+        with open(args.bench) as f:
+            doc = json.load(f)
+        baseline = doc["entries"][-1]
+    except (OSError, ValueError, KeyError, IndexError):
+        print(f"[bench-check] no usable baseline in {args.bench}; "
+              "nothing to gate against (pass)")
+        return
+    policies = tuple(p["policy"] for p in baseline.get("points", []))
+    if not policies:
+        print("[bench-check] baseline entry has no points (pass)")
+        return
+    print(f"[bench-check] baseline {baseline['date']} "
+          f"({len(policies)} policies); measuring fresh point ...",
+          flush=True)
+    fresh = trajectory(policies=policies,
+                       **_config_kwargs(baseline.get("config", {})))
+    failures = check_regression(baseline, fresh, args.max_regress_pct)
+    for p in fresh["points"]:
+        base = next((b for b in baseline["points"]
+                     if b["policy"] == p["policy"]), None)
+        tag = ""
+        if base and float(base.get("model_step_ms", 0.0)) > 0.0:
+            pct = ((p["model_step_ms"] - base["model_step_ms"])
+                   / base["model_step_ms"] * 100.0)
+            tag = f" ({pct:+.1f}% vs baseline)"
+        print(f"[bench-check]   {p['policy']}: "
+              f"{p['model_step_ms']:.3f} ms/step{tag}")
+    if not failures:
+        print(f"[bench-check] OK: no policy regressed more than "
+              f"{args.max_regress_pct:.0f}%")
+        return
+    override = os.environ.get(OVERRIDE_ENV, "")
+    for f_ in failures:
+        print(f"[bench-check] REGRESSION {f_['policy']}: "
+              f"{f_['baseline_ms']:.3f} -> {f_['fresh_ms']:.3f} ms/step "
+              f"({f_['regress_pct']:+.1f}% > "
+              f"{args.max_regress_pct:.0f}%)", file=sys.stderr)
+    if override:
+        print(f"[bench-check] overridden ({OVERRIDE_ENV}={override!r}); "
+              "treating regressions as warnings")
+        return
+    print(f"[bench-check] FAIL: set {OVERRIDE_ENV} (CI: the "
+          "perf-regression-ok label) to override a known slowdown",
+          file=sys.stderr)
+    raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

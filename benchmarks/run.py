@@ -72,11 +72,15 @@ def main() -> None:
                         f"suite {name!r} has no trajectory writer")
                 doc = mod.write_trajectory(args.bench_out)
                 entry = doc["entries"][-1]
-                print(f"{name}: appended trajectory entry "
+                extra = ""
+                if "audit_overhead_pct" in entry:
+                    extra = (f", audit overhead "
+                             f"{entry['audit_overhead_pct']:+.2f}%")
+                print(f"{name}: wrote trajectory entry "
                       f"({len(entry['points'])} points, "
                       f"metrics overhead "
-                      f"{entry['metrics_overhead_pct']:+.2f}%) "
-                      f"-> {args.bench_out}", flush=True)
+                      f"{entry['metrics_overhead_pct']:+.2f}%"
+                      f"{extra}) -> {args.bench_out}", flush=True)
             except Exception as e:  # noqa: BLE001
                 failures += 1
                 print(f"{name}: ERROR: {type(e).__name__}: {e}",

@@ -37,7 +37,7 @@ import numpy as np
 from benchmarks.common import build_dit
 from repro.configs.base import FastCacheConfig
 from repro.core import CachedDiT, registered_policies
-from repro.obs import MetricsCollector
+from repro.obs import DEFAULT_AUDIT_FRACTION, MetricsCollector
 from repro.serving import (DiffusionRequest, DiffusionServingEngine,
                            ShardedDiffusionEngine, make_serving_mesh,
                            poisson_trace)
@@ -53,7 +53,8 @@ def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
                guidance: float, lockstep: bool, topology=None,
                async_admission: bool = True, max_steps=None,
                sched_policy: str = "fifo", collector=None,
-               enable_metrics: bool = True
+               enable_metrics: bool = True, audit_fraction: float = 0.0,
+               audit_seed: int = 0
                ) -> Tuple[Dict, List[DiffusionRequest]]:
     """One engine run over a fresh copy of ``trace``; returns (result row,
     finished requests).  ``topology`` (data, model) != (1, 1) serves
@@ -62,7 +63,9 @@ def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
     ``sched_policy`` picks the admission order (fifo / sjf);
     ``collector``/``enable_metrics`` thread the obs plane through the
     engine (``enable_metrics=False`` traces a metrics-free step, the
-    A/B baseline for the telemetry-overhead row in the trajectory)."""
+    A/B baseline for the telemetry-overhead row in the trajectory);
+    ``audit_fraction > 0`` arms the shadow-compute audit plane on that
+    fraction of serve steps (requires metrics)."""
     runner = CachedDiT(model, FastCacheConfig(), policy=policy)
     if topology and tuple(topology) != (1, 1):
         data, tp = topology
@@ -71,14 +74,17 @@ def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
             guidance_scale=guidance, max_steps=max_steps,
             mesh=make_serving_mesh(data, tp),
             async_admission=async_admission, collector=collector,
-            enable_metrics=enable_metrics)
+            enable_metrics=enable_metrics, audit_fraction=audit_fraction,
+            audit_seed=audit_seed)
     else:
         engine = DiffusionServingEngine(runner, params, max_slots=slots,
                                         num_steps=steps,
                                         guidance_scale=guidance,
                                         max_steps=max_steps,
                                         collector=collector,
-                                        enable_metrics=enable_metrics)
+                                        enable_metrics=enable_metrics,
+                                        audit_fraction=audit_fraction,
+                                        audit_seed=audit_seed)
     reqs = _fresh_trace(trace)
     # warm the jitted serve_step so wall-time excludes compilation, then
     # rewind the clock so the trace's absolute arrival steps line up
@@ -157,11 +163,21 @@ def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
     per-policy serving numbers and the telemetry-overhead headline.
 
     A single short CPU run is wall-clock noisy, so each (policy, mode)
-    pair is served ``repeats`` times interleaved (off/on/off/on ... to
+    pair is served ``repeats`` times interleaved (off/on/audit ... to
     cancel clock drift) and scored by its best wall time; the headline
     ``metrics_overhead_pct`` further aggregates best-run model-step wall
     across ALL policies, which is what the < 5% acceptance bar is
-    checked against."""
+    checked against.
+
+    Quality columns (the audit plane, PR 8): every policy is additionally
+    served once with ``audit_fraction=1.0`` — every step shadow-audited —
+    and the per-policy ``audit_err_p50/p95`` quantiles of the measured
+    cached-vs-true relative error land next to its perf numbers, plus
+    ``bound_violations`` against the policy's chi^2-predicted bound.  The
+    cost of auditing at the production ``DEFAULT_AUDIT_FRACTION`` is
+    measured separately (``model_step_ms_audit``) and aggregated into the
+    ``audit_overhead_pct`` headline (vs the metrics-on baseline — the <5%
+    acceptance bar)."""
     policies = tuple(policies) if policies else registered_policies()
     cfg, model, params = build_dit(dit)
     trace = poisson_trace(requests, rate, seed=seed,
@@ -174,10 +190,10 @@ def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
                    "mode": "continuous"},
         "points": [],
     }
-    wall_on = wall_off = 0.0
-    steps_on = steps_off = 0
+    wall_on = wall_off = wall_audit = 0.0
+    steps_on = steps_off = steps_audit = 0
     for policy in policies:
-        res_off = res_on = collector = None
+        res_off = res_on = res_audit = collector = None
         for _ in range(max(1, repeats)):
             off, _ = serve_once(model, params, trace, policy=policy,
                                 slots=slots, steps=steps,
@@ -188,15 +204,31 @@ def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
                                slots=slots, steps=steps,
                                guidance=guidance, lockstep=False,
                                collector=coll)
+            aud, _ = serve_once(model, params, trace, policy=policy,
+                                slots=slots, steps=steps,
+                                guidance=guidance, lockstep=False,
+                                collector=MetricsCollector(),
+                                audit_fraction=DEFAULT_AUDIT_FRACTION)
             if res_off is None or off["wall_s"] < res_off["wall_s"]:
                 res_off = off
             if res_on is None or on["wall_s"] < res_on["wall_s"]:
                 res_on, collector = on, coll
+            if res_audit is None or aud["wall_s"] < res_audit["wall_s"]:
+                res_audit = aud
         totals = collector.totals()
+        # quality row: audit EVERY step once (wall time unused — this run
+        # pays the full shadow forward, it is not a perf measurement)
+        coll_q = MetricsCollector(labels={"policy": policy, "dit": dit})
+        _, _ = serve_once(model, params, trace, policy=policy, slots=slots,
+                          steps=steps, guidance=guidance, lockstep=False,
+                          collector=coll_q, audit_fraction=1.0)
+        q_totals = coll_q.totals()
         wall_on += res_on["wall_s"]
         wall_off += res_off["wall_s"]
+        wall_audit += res_audit["wall_s"]
         steps_on += res_on["model_steps"]
         steps_off += res_off["model_steps"]
+        steps_audit += res_audit["model_steps"]
         entry["points"].append({
             "policy": policy,
             "requests": res_on["requests"],
@@ -205,24 +237,46 @@ def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
             "steps_per_s": res_on["steps_per_s"],
             "model_step_ms": res_on["model_step_ms"],
             "model_step_ms_metrics_off": res_off["model_step_ms"],
+            "model_step_ms_audit": res_audit["model_step_ms"],
             "cache_ratio": res_on["cache"]["block_cache_ratio"],
             "serve_steps_total": totals.get("serve_steps_total", 0.0),
             "cache_step_reuses_total": totals.get(
                 "cache_step_reuses_total", 0.0),
+            "audit_err_p50": coll_q.quantile("audit_rel_err", 0.50),
+            "audit_err_p95": coll_q.quantile("audit_rel_err", 0.95),
+            "bound_violations": q_totals.get("bound_violations_total",
+                                             0.0),
         })
     ms_on = wall_on / max(1, steps_on) * 1e3
     ms_off = wall_off / max(1, steps_off) * 1e3
+    ms_audit = wall_audit / max(1, steps_audit) * 1e3
     entry["model_step_ms_on"] = ms_on
     entry["model_step_ms_off"] = ms_off
     entry["metrics_overhead_pct"] = (ms_on - ms_off) / ms_off * 100.0 \
         if ms_off else 0.0
+    # audit overhead is measured against the metrics-on baseline (the
+    # audit plane requires the metrics plane) at the production fraction
+    entry["audit_fraction"] = DEFAULT_AUDIT_FRACTION
+    entry["model_step_ms_audit"] = ms_audit
+    entry["audit_overhead_pct"] = (ms_audit - ms_on) / ms_on * 100.0 \
+        if ms_on else 0.0
     return entry
+
+
+def _entry_key(entry: Dict) -> Tuple[str, str]:
+    """Dedupe identity for a trajectory entry: same day + same benchmark
+    config (canonical JSON) means a re-run, not a new point."""
+    return (entry.get("date", ""),
+            json.dumps(entry.get("config", {}), sort_keys=True))
 
 
 def write_trajectory(path: str, **kw) -> Dict:
     """Append one ``trajectory()`` entry to the BENCH file at ``path``
     (created if absent), preserving prior entries so the file accumulates
-    one point per PR."""
+    one point per PR.  Re-running on the same day with the same config
+    REPLACES that entry in place instead of appending a duplicate — the
+    trajectory stays one point per (date, config), so iterating on a PR
+    does not pad the committed history."""
     doc = {"schema": 1, "suite": "serving", "entries": []}
     try:
         with open(path) as f:
@@ -233,6 +287,11 @@ def write_trajectory(path: str, **kw) -> Dict:
     except (OSError, ValueError):
         pass
     entry = trajectory(**kw)
+    key = _entry_key(entry)
+    # drop any same-(date, config) predecessors, then append: the fresh
+    # entry is always entries[-1] and entries stay date-ordered (the key
+    # includes today's date, so only today's re-runs are replaced)
+    doc["entries"] = [e for e in doc["entries"] if _entry_key(e) != key]
     doc["entries"].append(entry)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)

@@ -184,6 +184,37 @@ class CachePolicy:
         return unpatchify(out[..., :self.model.patch_dim], p,
                           self.model.grid)
 
+    # -- audit plane (obs.audit) ---------------------------------------
+
+    def audit_forward(self, params, x_in: jax.Array, c
+                      ) -> Tuple[jax.Array, jax.Array]:
+        """The full-forward twin the shadow-compute audit plane runs
+        alongside the cached path: an uncached evaluation of the SAME
+        inputs, returning ``(eps_true, hidden)`` where ``hidden``
+        (L+1, B, N, D) stacks each block's input plus the final hidden —
+        the layout ``audit_hidden`` mirrors, so per-layer cached-vs-true
+        errors compare like with like.  Stateless and side-effect-free:
+        it must never touch the policy's cache payloads or counters."""
+        x_out, inputs = self._full_forward(params, x_in, c)
+        hidden = jnp.concatenate([inputs, x_out[None]], axis=0)
+        return self._eps(params, x_out, c), hidden
+
+    def audit_hidden(self, state: Dict) -> Optional[jax.Array]:
+        """The per-layer hidden stack the cached path produced this step,
+        (L+1, B, N, D) in ``audit_forward``'s layout — or None when the
+        policy keeps no such payload (step-level policies cache eps, not
+        hiddens).  None statically disables the audit plane's per-layer
+        error accumulation for this policy; end-to-end eps error is
+        always audited."""
+        return None
+
+    def predicted_error_bound(self) -> Optional[float]:
+        """The per-step relative approximation error this policy claims
+        for its cached outputs, or None for policies that make no bound
+        claim (None never trips ``bound_violations_total``).  FastCache
+        derives it from the chi^2 gate (Eq. 9); see ``core/chi2.py``."""
+        return None
+
     def _rel_change(self, x: jax.Array, prev: jax.Array) -> jax.Array:
         """Per-sample relative Frobenius change, (B,).  In global mode the
         statistic is reduced over the batch and broadcast."""

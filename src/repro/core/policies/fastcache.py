@@ -15,7 +15,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core import linear_approx, saliency, statcache
+from repro.core import chi2, linear_approx, saliency, statcache
 from repro.core.policies.base import F32, CachePolicy, register
 from repro.distributed.sharding import constrain
 from repro.kernels import ops as kernel_ops
@@ -48,6 +48,23 @@ class FastCache(CachePolicy):
         st["gate"] = statcache.reset_gate_slot(state["gate"], rows)
         st["have_cache"] = state["have_cache"].at[rows].set(False)
         return st
+
+    # -- audit plane ---------------------------------------------------
+
+    def audit_hidden(self, state):
+        """After ``step``, ``prev_hidden`` IS this step's hidden stack —
+        block inputs plus the reassembled final hidden, in exactly
+        ``audit_forward``'s (L+1, B, N, D) layout — so the audit plane can
+        compare it against the true stack layer by layer."""
+        return state["prev_hidden"]
+
+    def predicted_error_bound(self):
+        """Eq. 9 bound from the chi^2 gate: the per-step relative error the
+        hypothesis test guarantees for a cached block, with the df the gate
+        actually uses (motion capacity x d_model — one sample's observed
+        elements, matching ``nd`` in ``_gated_step``)."""
+        nd = self.capacity * self.model.cfg.d_model
+        return chi2.error_bound(self.fc.alpha, nd)
 
     # ------------------------------------------------------------------
 

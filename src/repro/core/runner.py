@@ -119,3 +119,27 @@ class CachedDiT:
     def stats(self, state: Dict) -> Dict[str, float]:
         """Host-side summary of the cache counters (``summarize_stats``)."""
         return self.impl.stats(state)
+
+    # -- audit plane (obs.audit) ---------------------------------------
+
+    def audit_eval(self, params, latents, t, labels
+                   ) -> Tuple[jax.Array, jax.Array]:
+        """The shadow-compute twin of ``step``: the same tokens-in /
+        conditioning plumbing feeding the policy's uncached full forward.
+        Returns ``(eps_true, hidden)`` — hidden is the (L+1, B, N, D) stack
+        ``CachePolicy.audit_forward`` documents.  Stateless: never touches
+        cache payloads or stats, so auditing cannot perturb the run it
+        measures."""
+        x_in = self.model.tokens_in(params, latents)
+        c = self.model.conditioning(params, t, labels)
+        return self.impl.audit_forward(params, x_in, c)
+
+    def audit_hidden(self, state: Dict):
+        """The cached path's per-layer hidden stack for this step, or None
+        when the policy keeps none (see ``CachePolicy.audit_hidden``)."""
+        return self.impl.audit_hidden(state)
+
+    def audit_bound(self) -> Optional[float]:
+        """The policy's claimed per-step relative error bound (None = no
+        claim; see ``CachePolicy.predicted_error_bound``)."""
+        return self.impl.predicted_error_bound()

@@ -30,8 +30,8 @@ GuidanceLike = Union[float, int, jax.Array]
 
 def denoise_step(runner: CachedDiT, params, sched: sch.Schedule, state,
                  x: jax.Array, t: jax.Array, t_prev: jax.Array,
-                 labels: jax.Array, *, guidance_scale: GuidanceLike = 4.0
-                 ) -> Tuple[jax.Array, Dict]:
+                 labels: jax.Array, *, guidance_scale: GuidanceLike = 4.0,
+                 model_eval=None, return_eps: bool = False):
     """One denoising step x_t -> x_{t_prev} for a (possibly heterogeneous)
     batch: per-sample integer timesteps ``t``/``t_prev`` (B,), per-sample
     ``labels`` (B,).  With guidance the model batch is doubled internally
@@ -44,7 +44,13 @@ def denoise_step(runner: CachedDiT, params, sched: sch.Schedule, state,
     array of per-sample scales.  The array form ALWAYS materializes the CFG
     rows — heterogeneity is expressed in the blend weights, with
     ``scale == 1.0`` rows selecting the conditional eps outright so they
-    stay bitwise-equal to an unguided run of that sample."""
+    stay bitwise-equal to an unguided run of that sample.
+
+    ``model_eval`` replaces ``runner.step`` (same signature) — the audit
+    plane (obs/audit.py) uses it to route the identical CFG/guidance/DDIM
+    plumbing through the uncached full forward.  ``return_eps`` additionally
+    returns the post-guidance-blend eps (B, ...) as a third element, the
+    quantity the audit plane compares cached-vs-true."""
     per_sample = not isinstance(guidance_scale, (int, float))
     use_cfg = per_sample or guidance_scale != 1.0
     b = x.shape[0]
@@ -61,8 +67,9 @@ def denoise_step(runner: CachedDiT, params, sched: sch.Schedule, state,
                                    jnp.full((b,), null_label, jnp.int32)])
     else:
         x_in, t_in, lab = x, t, labels
+    eval_fn = runner.step if model_eval is None else model_eval
     with jax.named_scope("model_eval"):
-        eps, state = runner.step(params, state, x_in, t_in, lab)
+        eps, state = eval_fn(params, state, x_in, t_in, lab)
     if use_cfg:
         with jax.named_scope("cfg_blend"):
             eps_c, eps_u = jnp.split(eps, 2, axis=0)
@@ -79,6 +86,8 @@ def denoise_step(runner: CachedDiT, params, sched: sch.Schedule, state,
                 eps = eps_u + guidance_scale * (eps_c - eps_u)
     with jax.named_scope("ddim_update"):
         x = sch.ddim_step(sched, x, eps, t, t_prev)
+    if return_eps:
+        return x, state, eps
     return x, state
 
 

@@ -289,7 +289,11 @@ def serve_metrics_specs(metrics, ctx: Optional[ShardingCtx] = None):
     (S,) leaves shard over ``slot`` — they live with the rest of that
     slot's state on the same ``data`` shard — while counters and histogram
     bins replicate (they are whole-batch reductions; per-device partials
-    would need a collective at every read).
+    would need a collective at every read).  The audit plane's extra
+    leaves need no rule of their own: its per-slot accumulators land in
+    ``per_slot`` and shard with the slot rows, and the small ``audit``
+    group (per-layer error sums) replicates through the else branch like
+    the counters.
 
     This is a dedicated walker rather than ``serve_state_specs`` on
     purpose: metrics shapes are structural (a histogram's bucket-count

@@ -27,6 +27,14 @@ a Chrome/Perfetto trace of the run (open in ``ui.perfetto.dev``) with
 per-request admit/finish spans and per-slot denoise slices annotated with
 the policy's cache decision.
 
+``--audit-fraction 0.03125`` turns on the shadow-compute audit plane
+(``src/repro/obs/audit.py``): a deterministic seeded fraction of serve
+steps also runs the full uncached forward and measures cached-vs-true
+error on device, checked against the policy's chi^2-predicted bound.
+``--audit-baseline calib.npz`` arms the drift gauge against a PR 7
+calibration recording; ``--audit-out audit.json`` writes per-request
+error budgets plus the windowed drift/burn summary at run end.
+
 ``--mesh data,model`` serves through ``ShardedDiffusionEngine`` on a
 ``(data, model)`` device mesh (slots over ``data``, DiT weights over
 ``model``) with async host admission — disable the overlap with
@@ -51,7 +59,9 @@ from repro.configs.base import FastCacheConfig
 from repro.core import CachedDiT, POLICIES
 from repro.models import build_model
 from repro.launch.mesh import make_serving_mesh
-from repro.obs import MetricsCollector, TraceRecorder, validate_trace
+from repro.obs import (MetricsCollector, TraceRecorder, load_calibration,
+                       validate_trace)
+from repro.obs import audit as obs_audit
 from repro.serving import (DiffusionServingEngine, ShardedDiffusionEngine,
                            poisson_trace, summarize_by_steps)
 
@@ -121,7 +131,25 @@ def main() -> None:
                     help="write a Chrome/Perfetto trace JSON of the run "
                          "here (per-request spans, per-slot denoise "
                          "slices with cache decisions)")
+    ap.add_argument("--audit-fraction", type=float, default=0.0,
+                    help="shadow-audit this fraction of serve steps "
+                         "(deterministic seeded schedule; 0 disables the "
+                         "audit plane entirely — it is statically dead "
+                         "code in the jitted step)")
+    ap.add_argument("--audit-seed", type=int, default=0,
+                    help="seed for the audit sampling schedule")
+    ap.add_argument("--audit-baseline", default="",
+                    help="calibration .npz (obs.calibration) to arm the "
+                         "audit_drift_ratio gauge: measured per-layer "
+                         "cache error vs the nocache run's natural "
+                         "inter-step deltas")
+    ap.add_argument("--audit-out", default="",
+                    help="write the audit report JSON (per-request error "
+                         "budgets, windowed drift/burn summary) here at "
+                         "run end")
     args = ap.parse_args()
+    if args.audit_out and args.audit_fraction <= 0.0:
+        raise SystemExit("--audit-out needs --audit-fraction > 0")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     if args.reduced:
@@ -140,10 +168,16 @@ def main() -> None:
                         or any(g != 1.0 for g in guidance_mix)):
         raise SystemExit("--no-cfg serves guidance==1.0 only; pass "
                          "--guidance 1.0 and an all-1.0 --guidance-mix")
-    want_metrics = bool(args.metrics_out or args.metrics_jsonl)
+    # the audit plane folds into the device metrics pytree, so auditing
+    # implies the metrics plane (and a collector to harvest drift/burn)
+    want_metrics = bool(args.metrics_out or args.metrics_jsonl
+                        or args.audit_fraction > 0.0)
     collector = MetricsCollector(
         labels={"policy": args.policy, "arch": args.arch},
         window_steps=args.metrics_window or None) if want_metrics else None
+    if collector is not None and args.audit_baseline:
+        calib = load_calibration(args.audit_baseline)
+        collector.set_audit_context(baseline=calib["errors_mean"])
     tracer = TraceRecorder() if args.trace_out else None
     if args.mesh:
         data, tp = parse_mesh(args.mesh)
@@ -152,7 +186,8 @@ def main() -> None:
             guidance_scale=args.guidance, max_steps=max_steps,
             mesh=make_serving_mesh(data, tp),
             async_admission=not args.sync_admission,
-            cfg_rows=not args.no_cfg, collector=collector, tracer=tracer)
+            cfg_rows=not args.no_cfg, collector=collector, tracer=tracer,
+            audit_fraction=args.audit_fraction, audit_seed=args.audit_seed)
     else:
         engine = DiffusionServingEngine(runner, params,
                                         max_slots=args.slots,
@@ -160,7 +195,9 @@ def main() -> None:
                                         guidance_scale=args.guidance,
                                         max_steps=max_steps,
                                         cfg_rows=not args.no_cfg,
-                                        collector=collector, tracer=tracer)
+                                        collector=collector, tracer=tracer,
+                                        audit_fraction=args.audit_fraction,
+                                        audit_seed=args.audit_seed)
     trace = poisson_trace(args.requests, args.rate, seed=args.seed,
                           num_classes=cfg.dit.num_classes,
                           steps_mix=steps_mix or None,
@@ -199,6 +236,16 @@ def main() -> None:
         if args.metrics_jsonl:
             with open(args.metrics_jsonl, "w") as f:
                 f.write(collector.to_jsonl())
+    if args.audit_fraction > 0.0:
+        report = obs_audit.audit_report(done, fraction=args.audit_fraction,
+                                        bound=runner.audit_bound(),
+                                        collector=collector)
+        summary["audit"] = {k: report[k] for k in
+                            ("audit_fraction", "predicted_bound",
+                             "violations_total")}
+        if args.audit_out:
+            with open(args.audit_out, "w") as f:
+                json.dump(report, f, indent=2)
     if tracer is not None:
         doc = tracer.to_json()
         validate_trace(doc)

@@ -1,0 +1,229 @@
+"""Shadow-compute audit plane: online cached-vs-true error measurement.
+
+The paper's headline theoretical claim is a *bounded approximation error*
+under the chi^2 decision rule — this module measures that error while the
+cache is serving.  On a deterministic seeded schedule (``audit_mask``,
+computed host-side from the engine's step counter, so the jitted program
+is compile-static), the serve_step runs the full uncached forward
+alongside the cached path for the same inputs and accumulates:
+
+- **end-to-end error**: per-slot relative eps error after the identical
+  CFG/guidance blend (``sampler.denoise_step`` with ``model_eval`` routed
+  through ``CachedDiT.audit_eval``) — observed into the ``audit_rel_err``
+  histogram and the per-slot / per-request accumulators;
+- **per-layer error**: when the policy exposes its hidden stack
+  (``CachePolicy.audit_hidden``; fastcache's ``prev_hidden``), the
+  relative error of every block's cached hidden vs the true stack, into
+  the metrics pytree's ``audit`` group;
+- **bound violations**: audited rows whose measured error exceeds the
+  policy's ``predicted_error_bound()`` (Eq. 9 for fastcache) bump
+  ``bound_violations_total``;
+- **per-request error budget**: ``audit_err_sum / audit_err_sq_sum /
+  audit_steps / audit_violations`` ride the engines' per-slot ``slot_acc``
+  accumulators, so they are zeroed at admission and harvested into
+  ``req.cache`` at finish like every policy stat.
+
+Sync discipline (the reason this lives under ``obs/``): everything here is
+pure ``jnp`` inside the jitted step, wrapped in one ``lax.cond`` on a
+traced boolean flag — non-audited steps execute none of the shadow
+forward, audited steps recompile nothing, and no value crosses to the
+host.  The engines guard every call with a static ``if self._audit_on:``
+so the whole plane is dead code when ``audit_fraction == 0`` — reprolint's
+``obs-discipline`` check enforces that guard at every call site.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion import sampler
+from repro.obs import metrics as obs_metrics
+
+F32 = jnp.float32
+
+# 1/32 of serve steps: measured overhead well under the 5% budget (the
+# shadow forward roughly doubles an audited step, so fraction ~= overhead)
+DEFAULT_AUDIT_FRACTION = 1.0 / 32.0
+
+# per-request error-budget keys that ride the engines' slot_acc pytree
+# (zeroed at admission, harvested into req.cache at finish)
+ACC_ERR_SUM = "audit_err_sum"
+ACC_ERR_SQ = "audit_err_sq_sum"
+ACC_STEPS = "audit_steps"
+ACC_VIOLATIONS = "audit_violations"
+AUDIT_ACC_KEYS = (ACC_ERR_SUM, ACC_ERR_SQ, ACC_STEPS, ACC_VIOLATIONS)
+
+
+def _splitmix64(z: int) -> int:
+    """SplitMix64 finalizer: a cheap, well-mixed 64-bit hash."""
+    z = (z + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return z ^ (z >> 31)
+
+
+def audit_mask(step: int, fraction: float, seed: int = 0) -> bool:
+    """Deterministic stratified audit schedule: the step counter is
+    partitioned into windows of ``round(1/fraction)`` steps and exactly
+    one hashed offset per window is audited.  Stratification (vs an
+    i.i.d. per-step hash) pins the realized rate to the nominal fraction
+    over ANY horizon — no audit bursts inflating a short run's overhead,
+    no droughts starving drift detection — while staying unpredictable
+    per window.  Host-side Python on the engine's step counter — the jit
+    sees only the resulting boolean as a traced ``()`` argument, so the
+    schedule is compile-static and reproducible across runs/engines for
+    the same seed."""
+    if fraction <= 0.0:
+        return False
+    if fraction >= 1.0:
+        return True
+    period = max(2, round(1.0 / fraction))
+    window, offset = divmod(int(step), period)
+    h = _splitmix64((window << 17) ^ (int(seed) * 0x5851F42D4C957F2D
+                                      & 0xFFFFFFFFFFFFFFFF))
+    return offset == h % period
+
+
+def rel_err_rows(a: jax.Array, b: jax.Array,
+                 eps: float = 1e-12) -> jax.Array:
+    """Per-row relative Frobenius error ||a - b|| / ||b||, reducing every
+    axis but the leading one.  ``b`` is the reference (the true forward)."""
+    axes = tuple(range(1, b.ndim))
+    num = jnp.sum(jnp.square(a.astype(F32) - b.astype(F32)), axis=axes)
+    den = jnp.sum(jnp.square(b.astype(F32)), axis=axes)
+    return jnp.sqrt(num / jnp.maximum(den, eps))
+
+
+def layer_rel_err(cached: jax.Array, true: jax.Array,
+                  eps: float = 1e-12) -> jax.Array:
+    """Per-layer per-row relative Frobenius error for (L+1, B, N, D)
+    hidden stacks -> (L+1, B)."""
+    num = jnp.sum(jnp.square(cached.astype(F32) - true.astype(F32)),
+                  axis=(2, 3))
+    den = jnp.sum(jnp.square(true.astype(F32)), axis=(2, 3))
+    return jnp.sqrt(num / jnp.maximum(den, eps))
+
+
+def apply_audit(runner, params, sched, state: Dict, x: jax.Array,
+                t: jax.Array, t_prev: jax.Array, labels: jax.Array,
+                guidance, active: jax.Array, eps_cached: jax.Array,
+                cfg_rows: bool, bound: Optional[float], metrics: Dict,
+                slot_acc: Dict, audit_flag: jax.Array
+                ) -> Tuple[Dict, Dict]:
+    """One audit decision inside the jitted serve_step: ``lax.cond`` on the
+    traced ``audit_flag`` — the true branch runs the shadow full forward on
+    the SAME pre-step latents ``x`` and folds cached-vs-true errors into
+    the metrics pytree and the per-slot request accumulators; the false
+    branch passes both through untouched (one executable, no recompiles,
+    nothing leaves the device).
+
+    ``state`` is the post-step policy state (read-only here: the hidden
+    stack the cached path just produced), ``eps_cached`` the post-blend eps
+    the cached path fed its DDIM update, ``bound`` the policy's claimed
+    per-step relative error bound (None = no claim, never violates)."""
+    bound_val = float("inf") if bound is None else float(bound)
+
+    def audited(ops):
+        metrics, slot_acc = ops
+        hidden_box = []
+
+        def shadow_eval(p, st, lat, t_in, lab):
+            eps_true, hid = runner.audit_eval(p, lat, t_in, lab)
+            hidden_box.append(hid)
+            return eps_true, st
+
+        _, _, eps_true = sampler.denoise_step(
+            runner, params, sched, {}, x, t, t_prev, labels,
+            guidance_scale=guidance, model_eval=shadow_eval,
+            return_eps=True)
+
+        act = active.astype(F32)                        # (S,)
+        err = rel_err_rows(eps_cached, eps_true) * act  # (S,)
+        viol = ((err > bound_val) & active).astype(F32)
+
+        metrics = obs_metrics.inc(metrics, obs_metrics.AUDIT_STEPS, 1.0)
+        metrics = obs_metrics.inc(metrics, obs_metrics.AUDIT_SLOT_STEPS,
+                                  jnp.sum(act))
+        metrics = obs_metrics.inc(metrics, obs_metrics.BOUND_VIOLATIONS,
+                                  jnp.sum(viol))
+        metrics = obs_metrics.observe_many(metrics,
+                                           obs_metrics.AUDIT_REL_ERR,
+                                           err, act)
+        metrics = obs_metrics.slot_add(metrics, obs_metrics.SLOT_AUDIT_ERR,
+                                       err)
+        metrics = obs_metrics.slot_add(metrics,
+                                       obs_metrics.SLOT_AUDIT_STEPS, act)
+
+        hid_cached = runner.audit_hidden(state)
+        if hid_cached is not None:      # static per policy: None = the
+            #                             policy caches no hidden stack
+            hid_true = hidden_box[0]
+            act_rows = (jnp.concatenate([act, act]) if cfg_rows else act)
+            lerr = layer_rel_err(hid_cached, hid_true)  # (L+1, B_eff)
+            grp = dict(metrics["audit"])
+            grp["layer_err_sum"] = (grp["layer_err_sum"]
+                                    + jnp.sum(lerr * act_rows[None],
+                                              axis=1))
+            grp["layer_rows"] = grp["layer_rows"] + jnp.sum(act_rows)
+            metrics = {**metrics, "audit": grp}
+
+        slot_acc = dict(slot_acc)
+        slot_acc[ACC_ERR_SUM] = slot_acc[ACC_ERR_SUM] + err
+        slot_acc[ACC_ERR_SQ] = slot_acc[ACC_ERR_SQ] + err * err
+        slot_acc[ACC_STEPS] = slot_acc[ACC_STEPS] + act
+        slot_acc[ACC_VIOLATIONS] = slot_acc[ACC_VIOLATIONS] + viol
+        return metrics, slot_acc
+
+    def passthrough(ops):
+        return ops
+
+    return jax.lax.cond(audit_flag, audited, passthrough,
+                        (metrics, slot_acc))
+
+
+# --------------------------------------------------------------------------
+# Host-side reporting (--audit-out)
+# --------------------------------------------------------------------------
+
+
+def request_budget(cache: Dict) -> Dict[str, float]:
+    """Summarize one finished request's harvested error budget (the
+    ``AUDIT_ACC_KEYS`` the engine copied into ``req.cache``)."""
+    steps = float(cache.get(ACC_STEPS, 0.0))
+    err_sum = float(cache.get(ACC_ERR_SUM, 0.0))
+    err_sq = float(cache.get(ACC_ERR_SQ, 0.0))
+    mean = err_sum / steps if steps > 0 else 0.0
+    var = max(err_sq / steps - mean * mean, 0.0) if steps > 0 else 0.0
+    return {
+        "audited_steps": steps,
+        "err_sum": err_sum,
+        "err_mean": mean,
+        "err_std": var ** 0.5,
+        "violations": float(cache.get(ACC_VIOLATIONS, 0.0)),
+    }
+
+
+def audit_report(finished, *, fraction: float,
+                 bound: Optional[float] = None,
+                 collector=None) -> Dict:
+    """The ``--audit-out`` JSON document: per-request error budgets plus
+    the collector's latest windowed drift/burn summary (when a collector
+    with harvested audit metrics is supplied)."""
+    requests = []
+    for r in finished:
+        row = {"rid": r.rid}
+        row.update(request_budget(r.cache or {}))
+        requests.append(row)
+    doc = {
+        "audit_fraction": fraction,
+        "predicted_bound": bound,
+        "requests": requests,
+        "violations_total": sum(r["violations"] for r in requests),
+    }
+    if collector is not None and collector.windows:
+        last = collector.windows[-1]
+        if "audit" in last:
+            doc["window"] = last["audit"]
+    return doc

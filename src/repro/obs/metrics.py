@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import re
 import time
 from typing import Dict, List, Optional, Tuple
@@ -135,11 +136,38 @@ SLOT_ACTIVE_STEPS = counter(
     "slot_active_steps", "per-slot steps carrying a live request "
     "(device-resident (S,) counter, sharded over the mesh data axis)")
 
+# -- audit plane (obs/audit.py): shadow-compute quality metrics ------------
+
+AUDIT_STEPS = counter(
+    "audit_steps_total", "serve_steps that ran the shadow full-forward "
+    "audit")
+AUDIT_SLOT_STEPS = counter(
+    "audit_slot_steps_total", "active slot-steps audited against the true "
+    "forward")
+BOUND_VIOLATIONS = counter(
+    "bound_violations_total", "audited slot-steps whose measured relative "
+    "error exceeded the policy's predicted bound")
+AUDIT_REL_ERR = histogram(
+    "audit_rel_err", "end-to-end relative eps error of the cached path vs "
+    "the true forward, per audited slot-step",
+    buckets=(1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3, 1.0))
+SLOT_AUDIT_ERR = counter(
+    "slot_audit_err_sum", "per-slot cumulative audited relative error "
+    "(device-resident (S,), sharded over the mesh data axis)")
+SLOT_AUDIT_STEPS = counter(
+    "slot_audit_steps", "per-slot audited slot-steps (device-resident "
+    "(S,), sharded over the mesh data axis)")
+
 # device-plane membership for the diffusion serve_step
 DEVICE_COUNTERS = (SERVE_STEPS, ACTIVE_SLOT_STEPS, BLOCKS_COMPUTED,
                    BLOCKS_SKIPPED, STEP_REUSES)
 DEVICE_HISTOGRAMS = (ACTIVE_SLOTS, SKIP_FRACTION)
 DEVICE_PER_SLOT = (SLOT_ACTIVE_STEPS,)
+
+# extra membership when the audit plane is on (audit_layers is set)
+AUDIT_COUNTERS = (AUDIT_STEPS, AUDIT_SLOT_STEPS, BOUND_VIOLATIONS)
+AUDIT_HISTOGRAMS = (AUDIT_REL_ERR,)
+AUDIT_PER_SLOT = (SLOT_AUDIT_ERR, SLOT_AUDIT_STEPS)
 
 
 # --------------------------------------------------------------------------
@@ -147,21 +175,37 @@ DEVICE_PER_SLOT = (SLOT_ACTIVE_STEPS,)
 # --------------------------------------------------------------------------
 
 
-def init_device_metrics(max_slots: int) -> Dict:
+def init_device_metrics(max_slots: int, *,
+                        audit_layers: Optional[int] = None) -> Dict:
     """The serving device-metrics pytree: scalar counters, per-bin
     histogram counts (+ sum/count), and per-slot ``(S,)`` accumulators.
     Arrays only — the engines donate it buffer-for-buffer alongside the
     cache state, and the sharding walker places the per-slot group over
-    the mesh ``data`` axis."""
-    return {
-        "counters": {n: jnp.zeros((), F32) for n in DEVICE_COUNTERS},
+    the mesh ``data`` axis.
+
+    ``audit_layers`` (= L+1 when the shadow-compute audit plane is on)
+    additionally installs the audit counters / error histogram / per-slot
+    accumulators plus an ``audit`` group carrying the per-layer error sum —
+    the walker shards the per-slot audit keys over ``data`` like every
+    other per-slot leaf and replicates the small ``audit`` group."""
+    counters = DEVICE_COUNTERS + (AUDIT_COUNTERS
+                                  if audit_layers is not None else ())
+    hists = DEVICE_HISTOGRAMS + (AUDIT_HISTOGRAMS
+                                 if audit_layers is not None else ())
+    per_slot = DEVICE_PER_SLOT + (AUDIT_PER_SLOT
+                                  if audit_layers is not None else ())
+    m = {
+        "counters": {n: jnp.zeros((), F32) for n in counters},
         "hist": {n: {"bucket": jnp.zeros((len(spec(n).buckets) + 1,), F32),
                      "sum": jnp.zeros((), F32),
                      "count": jnp.zeros((), F32)}
-                 for n in DEVICE_HISTOGRAMS},
-        "per_slot": {n: jnp.zeros((max_slots,), F32)
-                     for n in DEVICE_PER_SLOT},
+                 for n in hists},
+        "per_slot": {n: jnp.zeros((max_slots,), F32) for n in per_slot},
     }
+    if audit_layers is not None:
+        m["audit"] = {"layer_err_sum": jnp.zeros((audit_layers,), F32),
+                      "layer_rows": jnp.zeros((), F32)}
+    return m
 
 
 def inc(m: Dict, name: str, value) -> Dict:
@@ -186,11 +230,51 @@ def observe(m: Dict, name: str, value) -> Dict:
     return {**m, "hist": hist}
 
 
+def observe_many(m: Dict, name: str, values, weights) -> Dict:
+    """Pure vectorized histogram observation: bin each entry of ``values``
+    (S,) and scatter-add its ``weights`` entry (weight 0 = not observed) —
+    one fused update for a whole batch of observations.  The audit plane
+    uses this to observe one error per active audited slot."""
+    bounds = jnp.asarray(spec(name).buckets, F32)
+    v = jnp.asarray(values, F32)
+    w = jnp.asarray(weights, F32)
+    idx = jnp.searchsorted(bounds, v, side="left")
+    hist = dict(m["hist"])
+    h = dict(hist[name])
+    h["bucket"] = h["bucket"].at[idx].add(w)
+    h["sum"] = h["sum"] + jnp.sum(v * w)
+    h["count"] = h["count"] + jnp.sum(w)
+    hist[name] = h
+    return {**m, "hist": hist}
+
+
 def slot_add(m: Dict, name: str, values) -> Dict:
     """Pure per-slot accumulation: ``per_slot[name] += values`` ((S,))."""
     per_slot = dict(m["per_slot"])
     per_slot[name] = per_slot[name] + values
     return {**m, "per_slot": per_slot}
+
+
+def histogram_quantile(buckets: Tuple[float, ...], bucket_counts,
+                       q: float) -> float:
+    """Host-side Prometheus-style quantile estimate from per-bin counts
+    (``len(buckets) + 1`` entries, overflow last): linear interpolation
+    within the bucket the rank lands in, with observations in the overflow
+    bin clamped to the last finite bound.  Returns 0.0 for an empty
+    histogram."""
+    counts = np.asarray(bucket_counts, np.float64)
+    total = float(counts.sum())
+    if total <= 0.0:
+        return 0.0
+    rank = q * total
+    cum, lo = 0.0, 0.0
+    for bound, cnt in zip(buckets, counts[:-1]):
+        hi = float(bound)
+        if cnt > 0 and cum + float(cnt) >= rank:
+            return lo + (rank - cum) / float(cnt) * (hi - lo)
+        cum += float(cnt)
+        lo = hi
+    return float(buckets[-1]) if buckets else 0.0
 
 
 # --------------------------------------------------------------------------
@@ -221,6 +305,12 @@ class MetricsCollector:
         self._gauges: Dict[str, float] = {}
         self.windows: List[Dict] = []
         self._t0 = time.perf_counter()
+        # audit plane comparison context + previous-harvest totals (the
+        # windowed drift / burn-rate summaries are deltas between harvests)
+        self._audit_bound: Optional[float] = None
+        self._audit_baseline: Optional[np.ndarray] = None
+        self._audit_fraction: Optional[float] = None
+        self._prev_audit = {"rows": 0.0, "err": 0.0, "viol": 0.0}
 
     # -- host observations (no device involvement) ---------------------
 
@@ -248,6 +338,28 @@ class MetricsCollector:
         accumulated series, so the uniqueness rule does not apply."""
         self._gauges[name] = float(value)
 
+    def set_audit_context(self, *, bound: Optional[float] = None,
+                          baseline=None,
+                          fraction: Optional[float] = None) -> None:
+        """Install the audit plane's comparison context: the policy's
+        predicted per-step relative error bound (the burn-rate
+        denominator), a calibration baseline (``errors_mean`` (L, T) from
+        ``obs/calibration.py`` — the drift denominator), and the sampling
+        fraction (recorded in windows).  None leaves a field untouched, so
+        the engine (bound, fraction) and the launcher (baseline) each
+        contribute their half."""
+        if bound is not None:
+            self._audit_bound = float(bound)
+        if baseline is not None:
+            base = np.asarray(baseline, np.float64)
+            if base.ndim != 2:
+                raise ValueError(f"audit baseline must be an (L, T) "
+                                 f"errors_mean array, got shape "
+                                 f"{base.shape}")
+            self._audit_baseline = base
+        if fraction is not None:
+            self._audit_fraction = float(fraction)
+
     # -- the sync point -------------------------------------------------
 
     def harvest(self, device_metrics: Optional[Dict] = None, *,
@@ -260,6 +372,7 @@ class MetricsCollector:
         if device_metrics:
             host = jax.tree.map(np.asarray, device_metrics)
             self._device = host
+        audit = self._audit_window()    # sets the drift/burn gauges first
         window = {
             "at_step": at_step,
             "wall_s": time.perf_counter() - self._t0,
@@ -277,8 +390,72 @@ class MetricsCollector:
             window["per_slot"] = {
                 n: [float(x) for x in v]
                 for n, v in self._device["per_slot"].items()}
+        if audit is not None:
+            window["audit"] = audit
         self.windows.append(window)
         return window
+
+    def _audit_window(self) -> Optional[Dict]:
+        """Windowed audit summary (None when no audit metrics have been
+        harvested): deltas of the audited totals since the previous harvest
+        become error-mean / violation-rate gauges; with a bound installed,
+        ``audit_burn_rate_window`` reads the fraction of the per-step error
+        budget the window consumed; with a calibration baseline,
+        ``audit_drift_ratio`` compares the measured per-layer cache error
+        against the nocache run's natural inter-step deltas — the
+        SmoothCache/SpectralCache health signal that says when a calibrated
+        schedule is no longer safe."""
+        dev = self._device
+        counters = dev.get("counters", {})
+        if AUDIT_SLOT_STEPS not in counters:
+            return None
+        per_slot = dev.get("per_slot", {})
+        rows = float(counters.get(AUDIT_SLOT_STEPS, 0.0))
+        err = float(np.sum(per_slot.get(SLOT_AUDIT_ERR, 0.0)))
+        viol = float(counters.get(BOUND_VIOLATIONS, 0.0))
+        d_rows = rows - self._prev_audit["rows"]
+        d_err = err - self._prev_audit["err"]
+        d_viol = viol - self._prev_audit["viol"]
+        self._prev_audit = {"rows": rows, "err": err, "viol": viol}
+        err_mean = d_err / d_rows if d_rows > 0 else 0.0
+        viol_rate = d_viol / d_rows if d_rows > 0 else 0.0
+        out = {
+            "audited_rows_total": rows,
+            "audited_rows_window": d_rows,
+            "err_mean_window": err_mean,
+            "violation_rate_window": viol_rate,
+        }
+        if self._audit_fraction is not None:
+            out["audit_fraction"] = self._audit_fraction
+        self.set_gauge("audit_err_mean_window", err_mean)
+        self.set_gauge("audit_violation_rate_window", viol_rate)
+        if self._audit_bound is not None:
+            out["predicted_bound"] = self._audit_bound
+            burn = (err_mean / self._audit_bound
+                    if self._audit_bound > 0 else 0.0)
+            out["burn_rate_window"] = burn
+            self.set_gauge("audit_burn_rate_window", burn)
+        grp = dev.get("audit")
+        if grp is not None:
+            sums = np.asarray(grp["layer_err_sum"], np.float64)
+            n = float(grp["layer_rows"])
+            layer_mean = sums / n if n > 0 else np.zeros_like(sums)
+            out["layer_err_mean"] = [float(x) for x in layer_mean]
+            if self._audit_baseline is not None and n > 0:
+                # measured stack entry l+1 is block l's output; the
+                # calibration rows are block outputs over the schedule
+                # (its forced step-0 column of 1.0 excluded)
+                base_cols = (self._audit_baseline[:, 1:]
+                             if self._audit_baseline.shape[1] > 1
+                             else self._audit_baseline)
+                base = float(np.mean(base_cols))
+                measured = float(np.mean(layer_mean[1:])
+                                 if layer_mean.shape[0] > 1
+                                 else np.mean(layer_mean))
+                drift = measured / base if base > 0 else 0.0
+                out["drift_ratio"] = drift
+                self.set_gauge("audit_drift_ratio", drift)
+        return out
 
     # -- merged views ---------------------------------------------------
 
@@ -308,13 +485,27 @@ class MetricsCollector:
         """Cumulative counters (host + last-harvested device values)."""
         return self._merged_counters()
 
+    def quantile(self, name: str, q: float) -> float:
+        """Quantile estimate over a registered histogram's merged (host +
+        harvested device) counts — e.g. ``quantile(AUDIT_REL_ERR, 0.95)``
+        is the trajectory's ``audit_err_p95`` column.  0.0 when the
+        histogram has no observations."""
+        s = spec(name)
+        if s.kind != "histogram":
+            raise ValueError(f"metric {name!r} is not a histogram")
+        h = self._all_hists().get(name)
+        if h is None:
+            return 0.0
+        return histogram_quantile(s.buckets, h["bucket"], q)
+
     # -- exports --------------------------------------------------------
 
     def _label_str(self, extra: Optional[Dict[str, str]] = None) -> str:
         labels = {**self.labels, **(extra or {})}
         if not labels:
             return ""
-        body = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+        body = ",".join(f'{k}="{_escape_label(str(v))}"'
+                        for k, v in sorted(labels.items()))
         return "{" + body + "}"
 
     def to_prometheus(self, prefix: str = "repro_") -> str:
@@ -357,25 +548,89 @@ class MetricsCollector:
             "\n" if self.windows else "")
 
 
+def _escape_label(v: str) -> str:
+    """Prometheus text-format label-value escaping (v0.0.4): backslash,
+    double-quote, and newline."""
+    return (v.replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def _fmt(v: float) -> str:
     f = float(v)
+    if math.isnan(f):
+        return "NaN"
+    if math.isinf(f):
+        return "+Inf" if f > 0 else "-Inf"
     return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+def _parse_value(s: str) -> float:
+    """A sample value in the exposition format: the canonical non-finite
+    spellings plus ordinary floats."""
+    if s == "NaN":
+        return float("nan")
+    if s == "+Inf":
+        return float("inf")
+    if s == "-Inf":
+        return float("-inf")
+    return float(s)
 
 
 # --------------------------------------------------------------------------
 # Exposition parser (round-trip validation; also used by tests)
 # --------------------------------------------------------------------------
 
-_SAMPLE_RE = re.compile(
-    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
-    r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)$")
+_METRIC_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*")
+
+_ESCAPES = {"\\": "\\", '"': '"', "n": "\n"}
+
+
+def _scan_labels(line: str, i: int, lineno: int
+                 ) -> Tuple[Dict[str, str], int]:
+    """Scan a ``{k="v",...}`` label block starting at ``line[i] == "{"``;
+    returns ``(labels, index past the closing brace)``.  Quoted values may
+    contain escaped backslashes / quotes / newlines and literal ``,`` or
+    ``}`` — the character scan respects quoting, which a fixed ``[^}]*``
+    regex cannot."""
+    labels: Dict[str, str] = {}
+    i += 1
+    n = len(line)
+    while i < n and line[i] != "}":
+        j = line.find("=", i)
+        if j < 0 or j + 1 >= n or line[j + 1] != '"':
+            raise ValueError(f"malformed label on line {lineno}: "
+                             f"{line[i:]!r}")
+        key = line[i:j]
+        i = j + 2
+        buf: List[str] = []
+        while i < n and line[i] != '"':
+            ch = line[i]
+            if ch == "\\":
+                if i + 1 >= n:
+                    raise ValueError(f"dangling escape on line {lineno}")
+                buf.append(_ESCAPES.get(line[i + 1], line[i + 1]))
+                i += 2
+            else:
+                buf.append(ch)
+                i += 1
+        if i >= n:
+            raise ValueError(f"unterminated label value on line {lineno}")
+        i += 1                        # closing quote
+        labels[key] = "".join(buf)
+        if i < n and line[i] == ",":
+            i += 1
+    if i >= n or line[i] != "}":
+        raise ValueError(f"unterminated label block on line {lineno}")
+    return labels, i + 1
 
 
 def parse_prometheus(text: str) -> Dict[str, Dict]:
     """Parse Prometheus text exposition into
     ``{metric: {"type": ..., "samples": [(labels dict, value)]}}``.
     Raises ``ValueError`` on any malformed line — the tests use this to
-    assert the export parses cleanly."""
+    assert the export parses cleanly.  Handles escaped label values,
+    ``+Inf``/``-Inf`` bucket bounds, and ``NaN`` gauge values (all of
+    which the exporter can legitimately emit)."""
     out: Dict[str, Dict] = {}
     types: Dict[str, str] = {}
     for lineno, line in enumerate(text.splitlines(), 1):
@@ -388,23 +643,25 @@ def parse_prometheus(text: str) -> Dict[str, Dict]:
             continue
         if line.startswith("#"):
             continue
-        m = _SAMPLE_RE.match(line)
+        m = _METRIC_NAME_RE.match(line)
         if m is None:
             raise ValueError(f"malformed exposition line {lineno}: "
                              f"{line!r}")
+        name = m.group(0)
+        i = m.end()
         labels: Dict[str, str] = {}
-        if m.group("labels"):
-            for part in m.group("labels").split(","):
-                if not part:
-                    continue
-                k, _, v = part.partition("=")
-                if not (v.startswith('"') and v.endswith('"')):
-                    raise ValueError(f"malformed label on line {lineno}: "
-                                     f"{part!r}")
-                labels[k] = v[1:-1]
-        value = float(m.group("value")) if m.group("value") != "+Inf" \
-            else float("inf")
-        base = m.group("name")
+        if i < len(line) and line[i] == "{":
+            labels, i = _scan_labels(line, i, lineno)
+        rest = line[i:].split()
+        if len(rest) != 1:
+            raise ValueError(f"malformed exposition line {lineno}: "
+                             f"{line!r}")
+        try:
+            value = _parse_value(rest[0])
+        except ValueError:
+            raise ValueError(f"malformed value on line {lineno}: "
+                             f"{rest[0]!r}") from None
+        base = name
         for suffix in ("_bucket", "_sum", "_count"):
             if base.endswith(suffix) and base[:-len(suffix)] in types:
                 base = base[:-len(suffix)]

@@ -16,7 +16,11 @@ Event model (Chrome trace-event format, ``displayTimeUnit: ms``):
   label, step counts;
 - per-step "denoise" slices on each slot's track, annotated post-hoc with
   the policy's gate/skip decision for that step (reconstructed by
-  diffing consecutive accumulator snapshots at finalize).
+  diffing consecutive accumulator snapshots at finalize);
+- ``ph="C"`` counter tracks: the running block-cache ratio and, when the
+  audit plane's per-slot accumulators ride the snapshots, the running
+  mean audited error — rendered by Perfetto as counter plots alongside
+  the slices.
 
 Device-side phases (CFG split, eps, guidance blend, DDIM update) are
 annotated with ``jax.named_scope`` in ``diffusion/sampler.py`` and
@@ -113,7 +117,10 @@ class TraceRecorder:
     def finalize(self) -> None:
         """Fetch deferred snapshots (the single sync) and turn consecutive
         diffs into per-slot per-step "denoise" slices annotated with the
-        policy's skip/compute decision."""
+        policy's skip/compute decision, plus Perfetto counter tracks
+        (``ph="C"``) for the running cache ratio and — when the audit
+        plane's accumulators ride the snapshots — the running mean
+        audited error."""
         if self._finalized:
             return
         self._finalized = True
@@ -123,6 +130,7 @@ class TraceRecorder:
                             for k, v in s["stats"].items()}}
                  for s in self._snapshots]
         self._snapshots = []
+        self._emit_counter_tracks(snaps)
         for prev, cur in zip(snaps, snaps[1:]):
             dur = max(cur["ts"] - prev["ts"], 1.0)
             d = {k: cur["stats"][k] - prev["stats"][k]
@@ -142,6 +150,32 @@ class TraceRecorder:
                     "ph": "X", "ts": prev["ts"], "dur": dur,
                     "pid": self.pid, "tid": s + 1, "cat": "denoise",
                     "args": args})
+
+    def _emit_counter_tracks(self, snaps: List[Dict[str, Any]]) -> None:
+        """Counter-track events from the cumulative per-slot snapshots:
+        Perfetto renders each ``args`` key of a same-named ``ph="C"``
+        event series as a stacked counter plot.  The snapshots are
+        running totals, so each point is a cumulative ratio — the curves
+        converge to the run's headline numbers."""
+        for s in snaps:
+            st = s["stats"]
+            if "blocks_computed" in st:
+                skipped = float(np.sum(st.get("blocks_skipped", 0.0)))
+                computed = float(np.sum(st["blocks_computed"]))
+                total = skipped + computed
+                self.events.append({
+                    "name": "cache ratio (running)", "ph": "C",
+                    "ts": s["ts"], "pid": self.pid, "cat": "counter",
+                    "args": {"cache_ratio":
+                             skipped / total if total else 0.0}})
+            if "audit_err_sum" in st and "audit_steps" in st:
+                err = float(np.sum(st["audit_err_sum"]))
+                steps = float(np.sum(st["audit_steps"]))
+                self.events.append({
+                    "name": "audit error (running mean)", "ph": "C",
+                    "ts": s["ts"], "pid": self.pid, "cat": "counter",
+                    "args": {"audit_err_mean":
+                             err / steps if steps else 0.0}})
 
     def to_json(self) -> Dict[str, Any]:
         self.finalize()
@@ -195,9 +229,11 @@ def validate_trace(doc: Dict[str, Any]) -> None:
             if key not in ev:
                 raise ValueError(f"event {i} missing {key!r}: {ev}")
         ph = ev["ph"]
-        if ph not in ("X", "i", "B", "E", "M"):
+        if ph not in ("X", "i", "B", "E", "M", "C"):
             raise ValueError(f"event {i} has unknown phase {ph!r}")
         if ph == "X" and ("ts" not in ev or "dur" not in ev):
             raise ValueError(f"complete event {i} missing ts/dur: {ev}")
-        if ph == "i" and "ts" not in ev:
-            raise ValueError(f"instant event {i} missing ts: {ev}")
+        if ph in ("i", "C") and "ts" not in ev:
+            raise ValueError(f"event {i} ({ph!r}) missing ts: {ev}")
+        if ph == "C" and not ev.get("args"):
+            raise ValueError(f"counter event {i} has no series args: {ev}")

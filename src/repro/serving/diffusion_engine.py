@@ -61,6 +61,7 @@ import numpy as np
 from repro.core.runner import CachedDiT
 from repro.diffusion import sampler
 from repro.diffusion import schedule as sch
+from repro.obs import audit as obs_audit
 from repro.obs import metrics as obs_metrics
 from repro.obs.metrics import MetricsCollector
 from repro.obs.tracing import TraceRecorder
@@ -78,7 +79,9 @@ class DiffusionServingEngine:
                  cfg_rows: bool = True,
                  collector: Optional[MetricsCollector] = None,
                  tracer: Optional[TraceRecorder] = None,
-                 enable_metrics: bool = True):
+                 enable_metrics: bool = True,
+                 audit_fraction: float = 0.0,
+                 audit_seed: int = 0):
         # the bitwise admission-invariance contract needs per-sample gating:
         # global mode reduces the chi^2 statistic over the whole batch, so
         # an admission would silently change residents' gate decisions
@@ -135,6 +138,24 @@ class DiffusionServingEngine:
         # stat keys the POLICY's state carries — the engine names none
         self._acc_keys = tuple(k for k, v in self.state["stats"].items()
                                if getattr(v, "ndim", 0) == 1)
+        # shadow-compute audit plane (obs/audit.py): on a deterministic
+        # seeded fraction of serve steps, the jitted step also runs the
+        # full uncached forward and accumulates cached-vs-true error into
+        # the metrics pytree + the per-request slot accumulators.  The
+        # fraction only picks which host-computed booleans are True — the
+        # traced program is identical for every step, so audit-on steady
+        # state stays compile-free.
+        if not 0.0 <= audit_fraction <= 1.0:
+            raise ValueError(f"audit_fraction must be in [0, 1], got "
+                             f"{audit_fraction}")
+        if audit_fraction > 0.0 and not enable_metrics:
+            raise ValueError("audit_fraction > 0 needs the metrics plane; "
+                             "enable_metrics=False has nowhere to "
+                             "accumulate audit error")
+        self.audit_fraction = float(audit_fraction)
+        self.audit_seed = int(audit_seed)
+        self._audit_on = audit_fraction > 0.0
+        self._audit_bound = runner.audit_bound() if self._audit_on else None
         self.x = jnp.zeros((max_slots, self.img, self.img, self.ch), F32)
         self.slots: List[Optional[DiffusionRequest]] = [None] * max_slots
         self.slot_step = np.full((max_slots,), -1, np.int32)
@@ -155,8 +176,13 @@ class DiffusionServingEngine:
         self.collector = collector
         self.tracer = tracer
         self._metrics_on = enable_metrics
-        self.metrics = (obs_metrics.init_device_metrics(max_slots)
-                        if enable_metrics else {})
+        audit_layers = (runner.L + 1) if self._audit_on else None
+        self.metrics = (obs_metrics.init_device_metrics(
+            max_slots, audit_layers=audit_layers)
+            if enable_metrics else {})
+        if collector is not None and self._audit_on:
+            collector.set_audit_context(bound=self._audit_bound,
+                                        fraction=self.audit_fraction)
 
         self._place_and_compile()
 
@@ -176,28 +202,41 @@ class DiffusionServingEngine:
         return {k: jnp.zeros((), F32) for k in self._acc_keys}
 
     def _zero_slot_acc(self) -> Dict[str, jax.Array]:
-        return {k: jnp.zeros((self.S,), F32) for k in self._acc_keys}
+        # with the audit plane on, the per-request error budget rides the
+        # same accumulator: zeroed at admission, harvested into req.cache
+        keys = self._acc_keys + (obs_audit.AUDIT_ACC_KEYS
+                                 if self._audit_on else ())
+        return {k: jnp.zeros((self.S,), F32) for k in keys}
 
     # -- jitted body ----------------------------------------------------
 
     def _serve_step_impl(self, params, state, x, plan, step_idx, labels,
-                         active, acc, slot_acc, metrics):
+                         active, acc, slot_acc, metrics, audit_flag):
         """Advance all slots one denoising step.  ``step_idx`` (S,) is each
         slot's position in ITS OWN plan row of the ``(S, max_steps)``
         tables; idle slots (active=False) run through the model as padding
         but their latents are frozen and their cache decisions are excluded
-        from the ``acc`` headline counters."""
+        from the ``acc`` headline counters.  ``audit_flag`` is the
+        host-computed () boolean from the audit schedule — traced, so one
+        executable serves audited and plain steps alike (always False when
+        the audit plane is off; the cond below is then statically dead)."""
         idx = jnp.clip(step_idx, 0, self.max_steps - 1)
         t = jnp.take_along_axis(plan["ts"], idx[:, None], axis=1)[:, 0]
         t_prev = jnp.take_along_axis(plan["ts_prev"], idx[:, None],
                                      axis=1)[:, 0]
         before = state["stats"]
+        guidance = plan["guidance"] if self.cfg_rows else 1.0
         # cfg_rows=False is the static no-CFG fast path: a scalar 1.0
         # statically disables guidance inside denoise_step, so the model
         # batch is S (no uncond half) instead of 2S
-        x_new, state = sampler.denoise_step(
-            self.runner, params, self.sched, state, x, t, t_prev, labels,
-            guidance_scale=plan["guidance"] if self.cfg_rows else 1.0)
+        if self._audit_on:  # static: the audit plane also needs the eps
+            x_new, state, eps = sampler.denoise_step(
+                self.runner, params, self.sched, state, x, t, t_prev,
+                labels, guidance_scale=guidance, return_eps=True)
+        else:
+            x_new, state = sampler.denoise_step(
+                self.runner, params, self.sched, state, x, t, t_prev,
+                labels, guidance_scale=guidance)
         x_new = jnp.where(active[:, None, None, None], x_new, x)
         act_rows = (jnp.concatenate([active, active]) if self.cfg_rows
                     else active)
@@ -206,9 +245,15 @@ class DiffusionServingEngine:
         acc = {k: acc[k] + jnp.sum(delta[k]) for k in acc}
         fold = ((lambda d: d[:self.S] + d[self.S:]) if self.cfg_rows
                 else (lambda d: d))
-        slot_acc = {k: slot_acc[k] + fold(delta[k]) for k in slot_acc}
+        slot_acc = {**slot_acc,
+                    **{k: slot_acc[k] + fold(delta[k]) for k in delta}}
         if self._metrics_on:  # static: off traces a metrics-free step
             metrics = self._update_metrics(metrics, active, delta)
+        if self._audit_on:  # static: off is a plain cached-only step
+            metrics, slot_acc = obs_audit.apply_audit(
+                self.runner, params, self.sched, state, x, t, t_prev,
+                labels, guidance, active, eps, self.cfg_rows,
+                self._audit_bound, metrics, slot_acc, audit_flag)
         return x_new, state, acc, slot_acc, metrics
 
     def _update_metrics(self, metrics, active, delta):
@@ -358,6 +403,13 @@ class DiffusionServingEngine:
         self.clock += 1
         if not active.any():            # idle tick: time passes, no compute
             return []
+        # the audit schedule is a host-side hash of the model-step counter:
+        # the jit only ever sees the resulting traced () boolean, so the
+        # sampled schedule never recompiles (and is False forever when the
+        # audit plane is off)
+        audit_now = self._audit_on and obs_audit.audit_mask(
+            self.model_steps, self.audit_fraction, self.audit_seed)
+        aflag = jnp.asarray(audit_now)
         if self.tracer is not None:
             with self.tracer.step_begin(self.clock,
                                         active=int(active.sum())):
@@ -367,7 +419,7 @@ class DiffusionServingEngine:
                     jnp.asarray(np.where(active,
                                          self.slot_step, 0).astype(np.int32)),
                     jnp.asarray(self.slot_label), jnp.asarray(active),
-                    self.acc, self.slot_acc, self.metrics)
+                    self.acc, self.slot_acc, self.metrics, aflag)
             self.tracer.snapshot_slots(self.clock, active, self.slot_acc)
         else:
             (self.x, self.state, self.acc, self.slot_acc,
@@ -376,7 +428,7 @@ class DiffusionServingEngine:
                 jnp.asarray(np.where(active,
                                      self.slot_step, 0).astype(np.int32)),
                 jnp.asarray(self.slot_label), jnp.asarray(active), self.acc,
-                self.slot_acc, self.metrics)
+                self.slot_acc, self.metrics, aflag)
         self.model_steps += 1
 
         finished: List[DiffusionRequest] = []

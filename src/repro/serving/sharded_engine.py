@@ -95,7 +95,8 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
                  async_admission: bool = True,
                  numerics_check: Optional[bool] = None,
                  cfg_rows: bool = True, collector=None, tracer=None,
-                 enable_metrics: bool = True):
+                 enable_metrics: bool = True, audit_fraction: float = 0.0,
+                 audit_seed: int = 0):
         self.mesh = mesh if mesh is not None else make_serving_mesh()
         self.rules = make_rules("serve")
         self._ctx = ShardingCtx(self.mesh, self.rules)
@@ -105,7 +106,9 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
                          num_train_steps=num_train_steps,
                          max_steps=max_steps, cfg_rows=cfg_rows,
                          collector=collector, tracer=tracer,
-                         enable_metrics=enable_metrics)
+                         enable_metrics=enable_metrics,
+                         audit_fraction=audit_fraction,
+                         audit_seed=audit_seed)
         # default: self-check exactly the regime where the partitioner has
         # been caught miscompiling (a model axis wider than one device);
         # model==1 topologies are covered bitwise by the parity tests
@@ -169,11 +172,11 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
         # trace under the serve sharding ctx so `constrain` calls in the
         # model blocks and the fastcache scan carry bind to this mesh
         def step_fn(params, state, x, plan, step_idx, labels, active, acc,
-                    slot_acc, metrics):
+                    slot_acc, metrics, audit_flag):
             with use_sharding(mesh, rules):
                 return self._serve_step_impl(params, state, x, plan,
                                              step_idx, labels, active, acc,
-                                             slot_acc, metrics)
+                                             slot_acc, metrics, audit_flag)
 
         def reset_fn(state, rows):
             with use_sharding(mesh, rules):
@@ -190,7 +193,7 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
             step_fn,
             in_shardings=(self._params_sh, self._state_sh, self._x_sh,
                           self._plan_sh, rep, rep, rep, self._acc_sh,
-                          self._slot_acc_sh, self._metrics_sh),
+                          self._slot_acc_sh, self._metrics_sh, rep),
             out_shardings=(self._x_sh, self._state_sh, self._acc_sh,
                            self._slot_acc_sh, self._metrics_sh),
             donate_argnums=(1, 2, 7, 8, 9))
@@ -264,7 +267,11 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
             self.runner, self._unplaced_params, max_slots=self.S,
             num_steps=self.num_steps, guidance_scale=self.guidance_scale,
             num_train_steps=self.num_train_steps, max_steps=self.max_steps,
-            cfg_rows=self.cfg_rows, enable_metrics=bool(self.metrics))
+            cfg_rows=self.cfg_rows, enable_metrics=bool(self.metrics),
+            audit_fraction=self.audit_fraction, audit_seed=self.audit_seed)
+        # with the audit plane on, force the flag True so the self-check
+        # also exercises the shadow-forward branch under SPMD partitioning
+        aflag = jnp.asarray(self._audit_on)
         eff = self.rows_per_slot * self.S    # state rows (CFG pairs or not)
         x0 = jax.random.normal(jax.random.PRNGKey(0), self.x.shape,
                                jnp.float32)
@@ -286,10 +293,10 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
             idx = jnp.full((self.S,), step, jnp.int32)
             rx, rs, ref_acc, ref_sacc, ref_m = ref_eng._step(
                 ref[0], ref[1], ref[2], ref_eng.plan, idx, labels, active,
-                ref_acc, ref_sacc, ref_m)
+                ref_acc, ref_sacc, ref_m, aflag)
             gx, gs, got_acc, got_sacc, got_m = self._step(
                 got[0], got[1], got[2], self.plan, idx, labels, active,
-                got_acc, got_sacc, got_m)
+                got_acc, got_sacc, got_m, aflag)
             ref, got = (ref_eng.params, rs, rx), (self.params, gs, gx)
             for (path, a), b in zip(
                     flat((rx, rs, ref_acc, ref_sacc, ref_m))[0],

@@ -1,0 +1,12 @@
+"""Fixture audit module: the shadow-compute plane whose call sites rule 3
+of obs-discipline polices — calls into here from jit-reachable code must
+sit under a static ``if <audit flag>:`` guard."""
+import jax.numpy as jnp
+
+
+def apply_audit(metrics, x):
+    return {**metrics, "audit_err": metrics["audit_err"] + jnp.sum(x)}
+
+
+def audit_mask(step: int, fraction: float) -> bool:
+    return fraction > 0.0 and step % max(1, int(1.0 / fraction)) == 0

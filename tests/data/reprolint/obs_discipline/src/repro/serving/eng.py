@@ -1,9 +1,12 @@
 """Fixture: ``MetricsCollector.harvest`` called inside a jitted step —
 obs-discipline must fire at the call site (and at the now-jit-reachable
-harvest definition in the fixture obs module)."""
+harvest definition in the fixture obs module).  The audit-plane calls
+exercise rule 3: the guarded call (inside ``if self._audit_on:``) is
+fine, the bare one must be flagged."""
 import jax
 import jax.numpy as jnp
 
+from repro.obs import audit as obs_audit
 from repro.obs.metrics import MetricsCollector
 
 
@@ -14,3 +17,18 @@ def _impl(x: jax.Array, collector: MetricsCollector):
 
 
 step = jax.jit(_impl)
+
+
+class Engine:
+    def __init__(self, audit_fraction: float = 0.0):
+        self._audit_on = audit_fraction > 0.0
+
+    def _serve_step_impl(self, metrics, x):
+        if self._audit_on:
+            metrics = obs_audit.apply_audit(metrics, x)  # guarded: ok
+        metrics = obs_audit.apply_audit(metrics, x)  # LINT: obs-discipline
+        return metrics, jnp.sum(x)
+
+    def step(self, metrics, x):
+        fn = jax.jit(self._serve_step_impl)
+        return fn(metrics, x)

@@ -1,0 +1,292 @@
+"""Shadow-compute audit plane (obs/audit.py): schedule determinism, error
+measurement against the true forward, chi^2 bound accounting, drift/burn
+summaries, and the host-side report.
+
+The module fixture perturbs ``model.init`` params: DiT's adaLN-zero init
+makes every block the identity and the zero-init head makes eps == 0
+identically, so an unperturbed model has *exactly zero* end-to-end error
+under any policy — useless for exercising the audit plane.  A small
+seeded perturbation (0.02) keeps fastcache's gates firing (blocks
+actually skip) while its measured error stays well inside the Eq. 9
+chi^2 bound — which is precisely the acceptance criterion the
+``test_fastcache_respects_chi2_bound`` case pins down.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import FastCacheConfig
+from repro.core import CachedDiT
+from repro.core.policies import base as policies_base
+from repro.core.policies.fastcache import FastCache
+from repro.models import build_model
+from repro.obs import MetricsCollector, audit_mask, audit_report
+from repro.obs import audit as obs_audit
+from repro.obs import metrics as obs_metrics
+from repro.serving import DiffusionRequest, DiffusionServingEngine
+from tests.conftest import f32_cfg
+
+pytestmark = pytest.mark.obs
+
+
+@pytest.fixture(scope="module")
+def dit():
+    cfg = f32_cfg(get_reduced("dit-b2"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # break the adaLN-zero / zero-head degeneracy (see module docstring)
+    leaves, tdef = jax.tree.flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(42), len(leaves))
+    leaves = [p + 0.02 * jax.random.normal(k, p.shape, p.dtype)
+              for p, k in zip(leaves, keys)]
+    return cfg, model, jax.tree.unflatten(tdef, leaves)
+
+
+def _serve(runner, params, *, audit_fraction, num_steps=16, requests=2,
+           audit_seed=0, collector=None):
+    collector = collector or MetricsCollector()
+    eng = DiffusionServingEngine(runner, params, max_slots=2,
+                                 num_steps=num_steps, collector=collector,
+                                 audit_fraction=audit_fraction,
+                                 audit_seed=audit_seed)
+    for i in range(requests):
+        assert eng.add_request(DiffusionRequest(
+            rid=i, label=i + 1, seed=10 + i, arrival_step=0,
+            num_steps=num_steps))
+    done = []
+    for _ in range(10 * num_steps):
+        done += eng.step()
+        if len(done) == requests:
+            break
+    assert len(done) == requests
+    return eng, done
+
+
+# ---------------------------------------------------------------------------
+# Schedule
+# ---------------------------------------------------------------------------
+
+def test_audit_mask_edges_and_determinism():
+    assert not audit_mask(5, 0.0) and not audit_mask(5, -1.0)
+    assert audit_mask(5, 1.0) and audit_mask(0, 2.0)
+    picks = [audit_mask(s, 0.25, seed=7) for s in range(4096)]
+    assert picks == [audit_mask(s, 0.25, seed=7) for s in range(4096)]
+    rate = sum(picks) / len(picks)
+    assert rate == 0.25, f"stratified rate {rate} must be exactly 0.25"
+    # stratification: exactly one audited step per 4-step window, so the
+    # realized rate matches the nominal fraction over ANY horizon
+    assert all(sum(picks[w:w + 4]) == 1 for w in range(0, 4096, 4))
+    # a different seed reshuffles which steps are audited
+    other = [audit_mask(s, 0.25, seed=8) for s in range(4096)]
+    assert other != picks
+
+
+def test_rel_err_shapes_and_values():
+    a = jnp.ones((3, 4, 5))
+    assert np.allclose(np.asarray(obs_audit.rel_err_rows(a, a)), 0.0)
+    b = a.at[0].multiply(2.0)
+    err = np.asarray(obs_audit.rel_err_rows(b, a))
+    assert err.shape == (3,)
+    assert np.isclose(err[0], 1.0) and np.allclose(err[1:], 0.0)
+    # zero reference rows clamp the denominator instead of dividing by 0
+    z = jnp.zeros((2, 4))
+    assert np.all(np.isfinite(np.asarray(obs_audit.rel_err_rows(z, z))))
+    stack = jnp.ones((3, 2, 4, 5))
+    lerr = np.asarray(obs_audit.layer_rel_err(stack * 1.5, stack))
+    assert lerr.shape == (3, 2) and np.allclose(lerr, 0.5)
+
+
+# ---------------------------------------------------------------------------
+# The acceptance-criteria pair: bound respected / bound tripped
+# ---------------------------------------------------------------------------
+
+def test_fastcache_respects_chi2_bound(dit):
+    """Seeded end-to-end: fastcache actually caches (blocks skip), the
+    measured audited error is nonzero and finite, and every audited
+    slot-step respects the policy's Eq. 9 chi^2-predicted bound."""
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    bound = runner.audit_bound()
+    nd = runner.impl.capacity * cfg.d_model
+    assert bound is not None and 1.0 < bound < 1.1  # chi2(0.95, nd)/nd
+    assert nd == runner.impl.capacity * cfg.d_model
+
+    col = MetricsCollector()
+    eng, done = _serve(runner, params, audit_fraction=1.0, collector=col)
+    w = eng.harvest_metrics()
+    c = w["counters"]
+    assert c[obs_metrics.AUDIT_STEPS] == eng.model_steps
+    assert c[obs_metrics.AUDIT_SLOT_STEPS] > 0
+    assert c["blocks_skipped_total"] > 0, "gates never fired: nothing cached"
+    h = w["histograms"]["audit_rel_err"]
+    assert h["count"] == c[obs_metrics.AUDIT_SLOT_STEPS]
+    assert h["sum"] > 0.0, "audited error must be nonzero once blocks skip"
+    assert c[obs_metrics.BOUND_VIOLATIONS] == 0.0, \
+        "fastcache exceeded its own chi^2 bound"
+    # per-request budgets harvested into req.cache
+    for r in done:
+        assert float(r.cache[obs_audit.ACC_STEPS]) == 16.0
+        assert float(r.cache[obs_audit.ACC_ERR_SUM]) > 0.0
+        assert float(r.cache[obs_audit.ACC_VIOLATIONS]) == 0.0
+    # per-layer error accumulated for the L+1 cached hidden stack
+    assert "audit" in w
+    layer_mean = w["audit"]["layer_err_mean"]
+    assert len(layer_mean) == runner.L + 1
+    assert all(np.isfinite(layer_mean)) and max(layer_mean) > 0.0
+    # window summary: burn rate is err_mean / bound, strictly inside budget
+    assert 0.0 < w["audit"]["burn_rate_window"] < 1.0
+    assert w["audit"]["violation_rate_window"] == 0.0
+
+
+def test_misthresholded_policy_trips_bound_violations(dit):
+    """A policy claiming an absurdly tight error bound must rack up
+    ``bound_violations_total``: same fastcache execution, but
+    ``predicted_error_bound`` overridden to 1e-6."""
+    cfg, model, params = dit
+
+    @policies_base.register("_audit_badbound")
+    class BadBound(FastCache):
+        def predicted_error_bound(self):
+            return 1e-6
+
+    try:
+        runner = CachedDiT(model, FastCacheConfig(),
+                           policy="_audit_badbound")
+        assert runner.audit_bound() == 1e-6
+        eng, done = _serve(runner, params, audit_fraction=1.0)
+        w = eng.harvest_metrics()
+        assert w["counters"][obs_metrics.BOUND_VIOLATIONS] > 0.0
+        assert sum(float(r.cache[obs_audit.ACC_VIOLATIONS])
+                   for r in done) \
+            == w["counters"][obs_metrics.BOUND_VIOLATIONS]
+        assert w["audit"]["violation_rate_window"] > 0.0
+    finally:
+        del policies_base._REGISTRY["_audit_badbound"]
+
+
+def test_nocache_audits_exactly_zero(dit):
+    """nocache computes the true forward every step, so the shadow audit
+    must measure (bitwise) zero error and no hidden-stack group."""
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="nocache")
+    assert runner.audit_bound() is None
+    eng, done = _serve(runner, params, audit_fraction=1.0, num_steps=8)
+    w = eng.harvest_metrics()
+    h = w["histograms"]["audit_rel_err"]
+    assert h["count"] > 0 and h["sum"] == 0.0
+    assert w["counters"][obs_metrics.BOUND_VIOLATIONS] == 0.0
+    for r in done:
+        assert float(r.cache[obs_audit.ACC_ERR_SUM]) == 0.0
+
+
+def test_sampled_schedule_audits_subset(dit):
+    """fraction=0.5: the engine audits exactly the host-hash-selected
+    steps — reproducible across runs with the same seed."""
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    eng, _ = _serve(runner, params, audit_fraction=0.5, audit_seed=3,
+                    num_steps=8)
+    w = eng.harvest_metrics()
+    audited = w["counters"][obs_metrics.AUDIT_STEPS]
+    expect = sum(audit_mask(s, 0.5, seed=3)
+                 for s in range(eng.model_steps))
+    assert audited == expect
+    assert 0 < audited < eng.model_steps
+
+
+# ---------------------------------------------------------------------------
+# Collector: drift, burn, exports, quantiles
+# ---------------------------------------------------------------------------
+
+def test_drift_ratio_against_synthetic_baseline(dit):
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    col = MetricsCollector()
+    # baseline (L, T): the calibration recorder's nocache inter-step
+    # deltas; step 0 is its forced-1.0 column and is excluded
+    baseline = np.full((runner.L + 1, 16), 0.05, np.float64)
+    baseline[:, 0] = 1.0
+    col.set_audit_context(baseline=baseline)
+    eng, _ = _serve(runner, params, audit_fraction=1.0, collector=col)
+    eng.harvest_metrics()
+    w = col.windows[-1]
+    assert "drift_ratio" in w["audit"]
+    measured = float(np.mean(w["audit"]["layer_err_mean"][1:]))
+    assert np.isclose(w["audit"]["drift_ratio"], measured / 0.05,
+                      rtol=1e-6)
+    assert w["gauges"]["audit_drift_ratio"] == w["audit"]["drift_ratio"]
+    with pytest.raises(ValueError):
+        col.set_audit_context(baseline=np.zeros((3,)))
+
+
+def test_audit_gauges_export_and_quantiles(dit):
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    col = MetricsCollector(labels={"policy": "fastcache"})
+    eng, _ = _serve(runner, params, audit_fraction=1.0, collector=col)
+    eng.harvest_metrics()
+    text = col.to_prometheus()
+    parsed = obs_metrics.parse_prometheus(text)
+    for g in ("audit_err_mean_window", "audit_burn_rate_window",
+              "audit_violation_rate_window"):
+        full = f"repro_{g}"      # the exporter's namespace prefix
+        assert full in parsed and parsed[full]["samples"], f"missing {g}"
+    assert "audit_rel_err_bucket" in text
+    # JSONL windows carry the audit section verbatim
+    lines = [json.loads(ln) for ln in col.to_jsonl().splitlines()]
+    assert any("audit" in ln for ln in lines)
+    p50 = col.quantile("audit_rel_err", 0.50)
+    p95 = col.quantile("audit_rel_err", 0.95)
+    assert 0.0 <= p50 <= p95
+
+
+def test_histogram_quantile_interpolation():
+    buckets = (1.0, 2.0, 4.0)
+    # counts per bin (le=1, le=2, le=4, +Inf)
+    counts = (0.0, 10.0, 0.0, 0.0)
+    q = obs_metrics.histogram_quantile(buckets, counts, 0.5)
+    assert 1.0 <= q <= 2.0
+    # all mass in the overflow bin clamps to the last finite bound
+    assert obs_metrics.histogram_quantile(buckets, (0, 0, 0, 5), 0.9) \
+        == 4.0
+    assert obs_metrics.histogram_quantile(buckets, (0, 0, 0, 0), 0.9) \
+        == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Host-side report
+# ---------------------------------------------------------------------------
+
+def test_request_budget_and_report(dit):
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    col = MetricsCollector()
+    eng, done = _serve(runner, params, audit_fraction=1.0, collector=col)
+    eng.harvest_metrics()
+    budget = obs_audit.request_budget(done[0].cache)
+    assert budget["audited_steps"] == 16.0
+    assert budget["err_mean"] > 0.0 and budget["err_std"] >= 0.0
+    doc = audit_report(done, fraction=1.0, bound=runner.audit_bound(),
+                       collector=col)
+    assert doc["predicted_bound"] == runner.audit_bound()
+    assert len(doc["requests"]) == len(done)
+    assert doc["violations_total"] == 0.0
+    assert "window" in doc and "burn_rate_window" in doc["window"]
+    json.dumps(doc)  # must be JSON-serializable as written by --audit-out
+    # empty-cache requests (audit off / never audited) summarize to zeros
+    assert obs_audit.request_budget({})["audited_steps"] == 0.0
+
+
+def test_audit_requires_metrics_plane(dit):
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    with pytest.raises(ValueError, match="metrics"):
+        DiffusionServingEngine(runner, params, max_slots=2, num_steps=8,
+                               enable_metrics=False, audit_fraction=0.5)
+    with pytest.raises(ValueError, match="audit_fraction"):
+        DiffusionServingEngine(runner, params, max_slots=2, num_steps=8,
+                               audit_fraction=1.5)

@@ -1,0 +1,81 @@
+"""BENCH trajectory plumbing: write_trajectory's (date, config) dedupe
+and the bench_check perf-regression gate.  Both are exercised with
+synthetic entries (monkeypatched ``trajectory``) — no engine runs, so
+these stay cheap enough for the obs CI job.
+"""
+import json
+
+import pytest
+
+from benchmarks import serving_diffusion as sd
+from benchmarks.bench_check import check_regression
+
+pytestmark = pytest.mark.obs
+
+
+def _entry(date="2026-08-08", seed=0, points=None):
+    return {
+        "date": date,
+        "config": {"dit": "dit-b2", "requests": 6, "seed": seed},
+        "points": points or [{"policy": "fastcache", "model_step_ms": 5.0}],
+        "metrics_overhead_pct": 1.0,
+    }
+
+
+def test_write_trajectory_dedupes_same_day_same_config(tmp_path,
+                                                       monkeypatch):
+    path = str(tmp_path / "BENCH.json")
+    entries = iter([_entry(), _entry(), _entry(seed=1),
+                    _entry(date="2026-08-09")])
+    monkeypatch.setattr(sd, "trajectory", lambda **kw: next(entries))
+
+    doc = sd.write_trajectory(path)
+    assert len(doc["entries"]) == 1
+    # same (date, config): replaces, not appends
+    doc = sd.write_trajectory(path)
+    assert len(doc["entries"]) == 1
+    # same day, different config: a new point
+    doc = sd.write_trajectory(path)
+    assert len(doc["entries"]) == 2
+    # different day, original config: a new point
+    doc = sd.write_trajectory(path)
+    assert len(doc["entries"]) == 3
+    with open(path) as f:
+        on_disk = json.load(f)
+    assert [e["date"] for e in on_disk["entries"]] \
+        == ["2026-08-08", "2026-08-08", "2026-08-09"]
+    # the fresh entry is always last (run.py prints entries[-1])
+    assert on_disk["entries"][-1]["date"] == "2026-08-09"
+
+
+def test_write_trajectory_survives_corrupt_prior_file(tmp_path,
+                                                      monkeypatch):
+    path = tmp_path / "BENCH.json"
+    path.write_text("{ not json")
+    monkeypatch.setattr(sd, "trajectory", lambda **kw: _entry())
+    doc = sd.write_trajectory(str(path))
+    assert doc["schema"] == 1 and len(doc["entries"]) == 1
+
+
+def test_check_regression_gates_only_real_slowdowns():
+    base = _entry(points=[
+        {"policy": "nocache", "model_step_ms": 10.0},
+        {"policy": "fastcache", "model_step_ms": 5.0},
+        {"policy": "retired", "model_step_ms": 3.0},
+        {"policy": "corrupt", "model_step_ms": 0.0},
+    ])
+    fresh = _entry(points=[
+        {"policy": "nocache", "model_step_ms": 11.0},    # +10%: fine
+        {"policy": "fastcache", "model_step_ms": 7.0},   # +40%: gates
+        {"policy": "brand_new", "model_step_ms": 99.0},  # no baseline
+        {"policy": "corrupt", "model_step_ms": 99.0},    # bad baseline
+    ])
+    failures = check_regression(base, fresh, max_regress_pct=25.0)
+    assert [f["policy"] for f in failures] == ["fastcache"]
+    assert failures[0]["regress_pct"] == pytest.approx(40.0)
+    # a looser gate passes everything
+    assert check_regression(base, fresh, max_regress_pct=50.0) == []
+    # speedups never gate
+    faster = _entry(points=[{"policy": "fastcache",
+                             "model_step_ms": 0.5}])
+    assert check_regression(base, faster) == []

@@ -158,6 +158,64 @@ def test_parse_prometheus_rejects_malformed():
         parse_prometheus("this is { not exposition\n")
 
 
+def test_prometheus_round_trip_escaped_label_values():
+    """Label values carrying the three characters the text format escapes
+    (backslash, double quote, newline) must survive export -> parse."""
+    nasty = 'a\\b"c\nd'
+    c = MetricsCollector(labels={"policy": nasty, "plain": "ok"})
+    c.inc(obs_metrics.ADMISSIONS, 1)
+    text = c.to_prometheus()
+    # the raw exposition must stay line-oriented: no literal newline may
+    # leak out of the quoted label value
+    sample_lines = [ln for ln in text.splitlines()
+                    if ln and not ln.startswith("#")]
+    assert all("admissions" in ln or "policy" not in ln
+               for ln in sample_lines)
+    parsed = parse_prometheus(text)
+    labels, value = parsed["repro_" + obs_metrics.ADMISSIONS]["samples"][0]
+    assert labels == {"policy": nasty, "plain": "ok"}
+    assert value == 1.0
+    # a quote inside a label value must not terminate label scanning early
+    assert parse_prometheus(
+        'm{a="x\\"y",b="z"} 2\n')["m"]["samples"][0] \
+        == ({"a": 'x"y', "b": "z"}, 2.0)
+    with pytest.raises(ValueError, match="unterminated|malformed"):
+        parse_prometheus('m{a="never closed\n')
+
+
+def test_prometheus_round_trip_inf_buckets():
+    """The implicit +Inf overflow bucket and observations beyond the last
+    finite bound round-trip as +Inf, not a float-repr like 'inf'."""
+    c = MetricsCollector()
+    c.observe(obs_metrics.REQUEST_LATENCY, 1e12)  # overflow bin
+    text = c.to_prometheus()
+    assert 'le="+Inf"' in text
+    parsed = parse_prometheus(text)
+    lat = parsed["repro_" + obs_metrics.REQUEST_LATENCY]
+    by_le = {s[0]["le"]: s[1] for s in lat["samples"] if "le" in s[0]}
+    assert by_le["+Inf"] == 1.0
+    assert all(v == 0.0 for le, v in by_le.items() if le != "+Inf")
+    # explicit ±Inf sample VALUES parse too (gauges may legitimately hit)
+    parsed = parse_prometheus("g 1\nh +Inf\ni -Inf\n")
+    assert parsed["h"]["samples"][0][1] == float("inf")
+    assert parsed["i"]["samples"][0][1] == float("-inf")
+
+
+def test_prometheus_round_trip_nan_gauge():
+    """A NaN gauge (e.g. a 0/0 ratio window) must export as the canonical
+    'NaN' token and parse back to a float NaN rather than erroring."""
+    c = MetricsCollector()
+    c.set_gauge("empty_window_ratio", float("nan"))
+    text = c.to_prometheus()
+    assert "NaN" in text
+    parsed = parse_prometheus(text)
+    val = parsed["repro_empty_window_ratio"]["samples"][0][1]
+    assert val != val  # NaN is the only float unequal to itself
+    # arbitrary-case NaN tokens are rejected — only canonical spellings
+    with pytest.raises(ValueError, match="malformed"):
+        parse_prometheus("g not_a_number\n")
+
+
 def test_jsonl_windows():
     c = MetricsCollector()
     c.inc(obs_metrics.ADMISSIONS)
@@ -210,6 +268,48 @@ def test_validate_trace_rejects_bad_docs():
     with pytest.raises(ValueError, match="unknown phase"):
         validate_trace({"traceEvents": [
             {"name": "x", "ph": "Z", "pid": 0}]})
+    with pytest.raises(ValueError, match="missing ts"):
+        validate_trace({"traceEvents": [
+            {"name": "x", "ph": "C", "pid": 0, "args": {"v": 1.0}}]})
+    with pytest.raises(ValueError, match="no series args"):
+        validate_trace({"traceEvents": [
+            {"name": "x", "ph": "C", "pid": 0, "ts": 1.0}]})
+
+
+def test_trace_counter_tracks():
+    """Perfetto counter tracks (ph="C") from the cumulative snapshots:
+    the running cache ratio always, the running mean audit error when the
+    audit plane's accumulators ride the slot stats."""
+    rec = TraceRecorder()
+    active = np.array([True, True])
+    snaps = [
+        {"blocks_computed": jnp.array([4.0, 4.0]),
+         "blocks_skipped": jnp.array([0.0, 0.0]),
+         "audit_err_sum": jnp.array([0.0, 0.0]),
+         "audit_steps": jnp.array([0.0, 0.0])},
+        {"blocks_computed": jnp.array([6.0, 6.0]),
+         "blocks_skipped": jnp.array([2.0, 2.0]),
+         "audit_err_sum": jnp.array([0.3, 0.1]),
+         "audit_steps": jnp.array([2.0, 2.0])},
+    ]
+    for step, st in enumerate(snaps):
+        rec.snapshot_slots(step, active, st)
+    doc = rec.to_json()
+    validate_trace(doc)
+    counters = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    ratios = [e["args"]["cache_ratio"] for e in counters
+              if e["name"] == "cache ratio (running)"]
+    errs = [e["args"]["audit_err_mean"] for e in counters
+            if e["name"] == "audit error (running mean)"]
+    assert ratios == [0.0, 4.0 / 16.0]
+    assert errs[0] == 0.0 and np.isclose(errs[1], 0.4 / 4.0)
+    # without audit accumulators only the cache-ratio track is emitted
+    rec2 = TraceRecorder()
+    rec2.snapshot_slots(0, active,
+                       {"blocks_computed": jnp.array([4.0, 4.0])})
+    names = [e["name"] for e in rec2.to_json()["traceEvents"]
+             if e["ph"] == "C"]
+    assert names == ["cache ratio (running)"]
 
 
 # ---------------------------------------------------------------------------

@@ -130,6 +130,78 @@ def test_diffusion_steady_state_with_metrics_plane(dit):
     assert eng.clock - clock_before == 8
 
 
+def test_diffusion_steady_state_with_audit_plane(dit):
+    """The audit tentpole's acceptance bar: with the shadow-compute audit
+    plane armed (``audit_fraction=0.5`` — the window mixes audited and
+    non-audited steps, exercising BOTH ``lax.cond`` branches), the
+    steady-state window stays compile- and transfer-free.  The audit
+    decision is a host-side hash of the step counter handed to the jit as
+    a traced flag, so one executable serves every step."""
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    collector = MetricsCollector(labels={"policy": "fastcache"})
+    eng = DiffusionServingEngine(runner, params, max_slots=2,
+                                 num_steps=12, guidance_scale=4.0,
+                                 collector=collector, audit_fraction=0.5)
+    warm = DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0,
+                            num_steps=4)
+    if not eng.add_request(warm):
+        raise AssertionError("warm-up admission must land in a free slot")
+    done = []
+    while not done:
+        done += eng.step()
+    for r in (DiffusionRequest(rid=1, label=2, seed=11, arrival_step=0),
+              DiffusionRequest(rid=2, label=3, seed=12, arrival_step=0)):
+        if not eng.add_request(r):
+            raise AssertionError("resident admission must land")
+    eng.step()  # settle: one post-admission step outside the window
+
+    with steady_state_guard(eng._step, eng._reset, eng._admit):
+        for _ in range(8):
+            assert eng.step() == []
+
+    harvested = eng.harvest_metrics()
+    audited = harvested["counters"][obs_metrics.AUDIT_STEPS]
+    # fraction=0.5 over 13+ model steps: both branches must have run
+    assert 0 < audited < eng.model_steps
+    assert harvested["counters"][obs_metrics.AUDIT_SLOT_STEPS] > 0
+
+
+def test_sharded_diffusion_steady_state_with_audit_plane(dit):
+    """Same bar for the sharded engine (1x1 mesh runs single-device): the
+    SPMD serve_step with the audit plane armed must be compile- and
+    transfer-free across the steady window."""
+    from repro.serving import ShardedDiffusionEngine, make_serving_mesh
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    collector = MetricsCollector(labels={"policy": "fastcache"})
+    eng = ShardedDiffusionEngine(runner, params, max_slots=2,
+                                 num_steps=12, guidance_scale=4.0,
+                                 mesh=make_serving_mesh(1, 1),
+                                 collector=collector, audit_fraction=0.5)
+    warm = DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0,
+                            num_steps=4)
+    if not eng.add_request(warm):
+        raise AssertionError("warm-up admission must land in a free slot")
+    done = []
+    while not done:
+        done += eng.step()
+    for r in (DiffusionRequest(rid=1, label=2, seed=11, arrival_step=0),
+              DiffusionRequest(rid=2, label=3, seed=12, arrival_step=0)):
+        if not eng.add_request(r):
+            raise AssertionError("resident admission must land")
+    eng.step()  # settle: one post-admission step outside the window
+
+    with steady_state_guard(eng._step, eng._reset, eng._admit):
+        for _ in range(8):
+            assert eng.step() == []
+
+    harvested = eng.harvest_metrics()
+    audited = harvested["counters"][obs_metrics.AUDIT_STEPS]
+    assert 0 < audited < eng.model_steps
+    assert harvested["counters"][obs_metrics.AUDIT_SLOT_STEPS] > 0
+
+
 def test_ar_engine_steady_state_with_collector():
     """Host-plane metrics on the AR engine (per-step token fetch is by
     design there): a live collector must not add recompiles."""

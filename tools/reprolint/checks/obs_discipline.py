@@ -18,9 +18,21 @@
    resolves to a ``harvest`` method of a ``MetricsCollector`` class is
    flagged.
 
+3. **Audit calls stay statically guarded.**  The shadow-compute audit
+   plane (the obs package's ``audit`` module) roughly doubles an audited
+   step; the engines' contract is that with ``audit_fraction == 0`` the
+   whole plane is *statically dead* — not traced, not compiled.  The only
+   construct that guarantees that is a host-side Python ``if`` on a
+   static flag, so: any call from jit-reachable code *outside* the audit
+   module that resolves into the audit module must sit lexically inside
+   an ``if`` whose test mentions an audit-named flag (``self._audit_on``,
+   ``audit_fraction``, ...).  A ``lax.cond``/``jnp.where`` guard does NOT
+   count — both branches still trace.
+
 The registration helpers are recognized structurally (functions named
 ``counter``/``histogram`` defined in an ``obs`` module; collectors as
-classes named ``MetricsCollector``), so fixture trees exercise the check
+classes named ``MetricsCollector``; the audit plane as any module named
+``audit`` inside an ``obs`` package), so fixture trees exercise the check
 without importing the real package.
 """
 from __future__ import annotations
@@ -35,11 +47,17 @@ from tools.reprolint.jitscope import own_nodes
 REGISTER_FN_NAMES = ("counter", "histogram")
 COLLECTOR_CLASS = "MetricsCollector"
 HARVEST_METHOD = "harvest"
+AUDIT_MODULE = "audit"
 
 
 def _is_obs_module(module: str) -> bool:
     parts = module.split(".")
     return "obs" in parts
+
+
+def _is_audit_module(module: str) -> bool:
+    parts = module.split(".")
+    return "obs" in parts and parts[-1] == AUDIT_MODULE
 
 
 def _register_fns(ctx: LintContext) -> Set[str]:
@@ -60,6 +78,55 @@ def _harvest_fns(ctx: LintContext) -> Set[str]:
     for ci in ctx.index.classes.values():
         if ci.name == COLLECTOR_CLASS and HARVEST_METHOD in ci.methods:
             out.add(ci.methods[HARVEST_METHOD])
+    return out
+
+
+def _audit_fns(ctx: LintContext) -> Set[str]:
+    """Qualnames of every function/method defined in an obs package's
+    ``audit`` module — the surface whose call sites rule 3 polices."""
+    out: Set[str] = set()
+    for qn, fi in ctx.index.functions.items():
+        if _is_audit_module(fi.module):
+            out.add(qn)
+    return out
+
+
+def _mentions_audit(test: ast.AST) -> bool:
+    for n in ast.walk(test):
+        if isinstance(n, ast.Name) and "audit" in n.id.lower():
+            return True
+        if isinstance(n, ast.Attribute) and "audit" in n.attr.lower():
+            return True
+    return False
+
+
+def _own_calls_with_guard(fn_node: ast.AST) -> List[Tuple[ast.Call, bool]]:
+    """Every Call belonging to this scope (same boundary as
+    ``own_nodes``: stops at nested function/class bodies, keeps their
+    decorators and inline lambdas), paired with whether it sits lexically
+    inside an ``if`` whose test mentions an audit-named flag.  Both the
+    body and the else arm count as guarded — only the *static* Python
+    branch matters, and either arm is dead for one flag value."""
+    out: List[Tuple[ast.Call, bool]] = []
+
+    def rec(node: ast.AST, guarded: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            g = guarded
+            if isinstance(node, ast.If) and child is not node.test \
+                    and _mentions_audit(node.test):
+                g = True
+            if isinstance(child, ast.Call):
+                out.append((child, g))
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                for dec in child.decorator_list:
+                    if isinstance(dec, ast.Call):
+                        out.append((dec, g))
+                    rec(dec, g)
+                continue
+            rec(child, g)
+
+    rec(fn_node, False)
     return out
 
 
@@ -143,4 +210,26 @@ def check(ctx: LintContext) -> List[Diagnostic]:
                 f"`{fi.qualname}` is itself reachable from a jitted "
                 f"entry point; the harvest sync point must never enter "
                 f"a trace"))
+
+    # ---- rule 3: audit-plane calls statically guarded -----------------
+    audit_fns = _audit_fns(ctx)
+    if audit_fns:
+        for qn in sorted(ctx.scope.reachable):
+            fi = ctx.index.functions[qn]
+            if _is_audit_module(fi.module):
+                continue        # the plane may call itself freely
+            mod = ctx.index.modules[fi.module]
+            for call, guarded in _own_calls_with_guard(fi.node):
+                if guarded:
+                    continue
+                if ctx.scope.resolve_callable(call.func, fi, mod) \
+                        & audit_fns:
+                    diags.append(Diagnostic(
+                        mod.path, call.lineno, "obs-discipline",
+                        f"audit-plane call in `{fi.name}` (jit-reachable) "
+                        f"is not under a static `if <audit flag>:` guard; "
+                        f"without one the shadow forward traces into "
+                        f"every program even at audit_fraction == 0 — "
+                        f"guard the call with the engine's static audit "
+                        f"flag (e.g. `if self._audit_on:`)"))
     return diags
