@@ -64,6 +64,9 @@ bench-serve:
 		--requests 4 --new-tokens 8 --max-batch 2 --fastcache
 	PYTHONPATH=src python -m repro.launch.serve_diffusion --arch dit-b2 \
 		--reduced --requests 4 --slots 2 --steps 6 --rate 0.5 --json
+	PYTHONPATH=src python -m repro.launch.serve_diffusion --arch dit-b2 \
+		--reduced --requests 4 --slots 2 --steps 6 --rate 0.5 --json \
+		--token-merge-ratio 0.5 --token-merge-window 8
 	PYTHONPATH=src python -m benchmarks.run --only serving,serving_sharded
 
 bench:

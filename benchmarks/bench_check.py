@@ -57,7 +57,8 @@ def _config_kwargs(config: Dict) -> Dict:
     """Map a committed entry's config record back to ``trajectory()``
     keyword arguments (``poisson_rate`` -> ``rate``; ``mode`` is implied)."""
     kw = {k: config[k] for k in ("dit", "requests", "slots", "steps",
-                                 "guidance", "seed", "repeats")
+                                 "guidance", "seed", "repeats",
+                                 "merge_ratio", "merge_window")
           if k in config}
     if "poisson_rate" in config:
         kw["rate"] = config["poisson_rate"]

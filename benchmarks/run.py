@@ -25,7 +25,9 @@ SUITES = {
                "Table 5/Fig 1: static-ratio under motion"),
     "table6": ("benchmarks.table6_thresholds",
                "Table 6/Fig 3: threshold robustness"),
-    "table15": ("benchmarks.table15_knn", "Table 15: token-merge kNN K"),
+    "tokens": ("benchmarks.table_tokens",
+               "Token compression on the serving path: keep-ratio + Table "
+               "15 kNN-K sweep (latency, audit error, latent FID-proxy)"),
     "decode_gate": ("benchmarks.decode_gate",
                     "Beyond-paper: AR-decode statistical gate"),
     "batched_gate": ("benchmarks.batched_gate",

@@ -54,7 +54,7 @@ def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
                async_admission: bool = True, max_steps=None,
                sched_policy: str = "fifo", collector=None,
                enable_metrics: bool = True, audit_fraction: float = 0.0,
-               audit_seed: int = 0
+               audit_seed: int = 0, fc: FastCacheConfig = None
                ) -> Tuple[Dict, List[DiffusionRequest]]:
     """One engine run over a fresh copy of ``trace``; returns (result row,
     finished requests).  ``topology`` (data, model) != (1, 1) serves
@@ -65,8 +65,9 @@ def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
     engine (``enable_metrics=False`` traces a metrics-free step, the
     A/B baseline for the telemetry-overhead row in the trajectory);
     ``audit_fraction > 0`` arms the shadow-compute audit plane on that
-    fraction of serve steps (requires metrics)."""
-    runner = CachedDiT(model, FastCacheConfig(), policy=policy)
+    fraction of serve steps (requires metrics); ``fc`` overrides the
+    runner's FastCacheConfig (e.g. to switch the token-merge stage on)."""
+    runner = CachedDiT(model, fc or FastCacheConfig(), policy=policy)
     if topology and tuple(topology) != (1, 1):
         data, tp = topology
         engine = ShardedDiffusionEngine(
@@ -154,8 +155,8 @@ def benchmark(*, dit: str = "dit-b2", policies=("nocache", "fastcache"),
 
 def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
                slots: int = 2, steps: int = 8, guidance: float = 4.0,
-               rate: float = 0.25, seed: int = 0,
-               repeats: int = 3) -> Dict:
+               rate: float = 0.25, seed: int = 0, repeats: int = 3,
+               merge_ratio: float = 0.5, merge_window: int = 16) -> Dict:
     """One perf-trajectory entry: every registered cache policy served
     through the continuous engine with the metrics plane ON (a live
     ``MetricsCollector``, harvested at run end) and OFF (the A/B
@@ -177,7 +178,15 @@ def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
     cost of auditing at the production ``DEFAULT_AUDIT_FRACTION`` is
     measured separately (``model_step_ms_audit``) and aggregated into the
     ``audit_overhead_pct`` headline (vs the metrics-on baseline — the <5%
-    acceptance bar)."""
+    acceptance bar).
+
+    Token-compression columns: every policy is additionally served with
+    the serving-path merge stage ON (``merge_ratio`` centers kept per
+    ``merge_window`` tokens, the same repeats/best-wall protocol) —
+    ``model_step_ms_merge`` next to the merge-off ``model_step_ms``
+    quantifies the reduced-grid speedup, and a fully-audited merge run
+    reports ``merge_audit_err_p50/p95``, the realized end-to-end error of
+    merge+cache vs the uncached full-resolution forward."""
     policies = tuple(policies) if policies else registered_policies()
     cfg, model, params = build_dit(dit)
     trace = poisson_trace(requests, rate, seed=seed,
@@ -187,13 +196,16 @@ def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
         "config": {"dit": dit, "requests": requests, "slots": slots,
                    "steps": steps, "guidance": guidance,
                    "poisson_rate": rate, "seed": seed, "repeats": repeats,
-                   "mode": "continuous"},
+                   "merge_ratio": merge_ratio,
+                   "merge_window": merge_window, "mode": "continuous"},
         "points": [],
     }
+    fc_merge = FastCacheConfig(merge_enabled=True, merge_ratio=merge_ratio,
+                               merge_window=merge_window)
     wall_on = wall_off = wall_audit = 0.0
     steps_on = steps_off = steps_audit = 0
     for policy in policies:
-        res_off = res_on = res_audit = collector = None
+        res_off = res_on = res_audit = res_merge = collector = None
         for _ in range(max(1, repeats)):
             off, _ = serve_once(model, params, trace, policy=policy,
                                 slots=slots, steps=steps,
@@ -209,12 +221,19 @@ def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
                                 guidance=guidance, lockstep=False,
                                 collector=MetricsCollector(),
                                 audit_fraction=DEFAULT_AUDIT_FRACTION)
+            mrg, _ = serve_once(model, params, trace, policy=policy,
+                                slots=slots, steps=steps,
+                                guidance=guidance, lockstep=False,
+                                collector=MetricsCollector(),
+                                fc=fc_merge)
             if res_off is None or off["wall_s"] < res_off["wall_s"]:
                 res_off = off
             if res_on is None or on["wall_s"] < res_on["wall_s"]:
                 res_on, collector = on, coll
             if res_audit is None or aud["wall_s"] < res_audit["wall_s"]:
                 res_audit = aud
+            if res_merge is None or mrg["wall_s"] < res_merge["wall_s"]:
+                res_merge = mrg
         totals = collector.totals()
         # quality row: audit EVERY step once (wall time unused — this run
         # pays the full shadow forward, it is not a perf measurement)
@@ -223,6 +242,13 @@ def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
                           steps=steps, guidance=guidance, lockstep=False,
                           collector=coll_q, audit_fraction=1.0)
         q_totals = coll_q.totals()
+        # merge quality row: the audit plane's shadow forward stays at
+        # full resolution, so the audited error IS merge+cache vs nocache
+        coll_m = MetricsCollector(labels={"policy": policy, "dit": dit})
+        _, _ = serve_once(model, params, trace, policy=policy, slots=slots,
+                          steps=steps, guidance=guidance, lockstep=False,
+                          collector=coll_m, audit_fraction=1.0, fc=fc_merge)
+        m_totals = coll_m.totals()
         wall_on += res_on["wall_s"]
         wall_off += res_off["wall_s"]
         wall_audit += res_audit["wall_s"]
@@ -246,6 +272,14 @@ def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
             "audit_err_p95": coll_q.quantile("audit_rel_err", 0.95),
             "bound_violations": q_totals.get("bound_violations_total",
                                              0.0),
+            "model_step_ms_merge": res_merge["model_step_ms"],
+            "merge_speedup": (res_on["model_step_ms"]
+                              / max(res_merge["model_step_ms"], 1e-9)),
+            "tokens_kept_total": m_totals.get("tokens_kept_total", 0.0),
+            "tokens_merged_total": m_totals.get("tokens_merged_total",
+                                                0.0),
+            "merge_audit_err_p50": coll_m.quantile("audit_rel_err", 0.50),
+            "merge_audit_err_p95": coll_m.quantile("audit_rel_err", 0.95),
         })
     ms_on = wall_on / max(1, steps_on) * 1e3
     ms_off = wall_off / max(1, steps_off) * 1e3

@@ -1,0 +1,100 @@
+"""Token-compression sweep: the serving-path merge stage measured end to
+end (replaces the old ``table15_knn`` microbenchmark, whose K sweep is
+folded in below).
+
+Per registered policy of interest the SAME Poisson trace is served through
+the continuous engine with the merge stage off (the r=1.0 baseline) and at
+each keep ratio r, measuring what the stage actually buys and costs on the
+serving path rather than on a synthetic tensor:
+
+- ``model_step_ms`` — per-model-step wall time on the reduced grid;
+- ``audit_err_p50`` — the shadow-audit plane's end-to-end relative eps
+  error (merge+cache vs the uncached full-resolution forward, every step
+  audited);
+- ``latent_rel_err`` — an FID-proxy: per-request relative error of the
+  finished latents against the merge-off run of the same request.
+
+The paper's Table 15 K sweep rides the same harness: fastcache at r=0.5
+across kNN K values, reporting the same three columns.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import build_dit
+from benchmarks.serving_diffusion import serve_once
+from repro.configs.base import FastCacheConfig
+from repro.obs import MetricsCollector
+from repro.serving import poisson_trace
+
+RATIOS = (0.75, 0.5, 0.25)
+KNN_KS = (3, 5, 7, 10)
+POLICIES = ("nocache", "fastcache")
+
+
+def _latent_rel_err(done, baseline: Dict[int, np.ndarray]) -> float:
+    errs = []
+    for r in done:
+        ref = baseline[r.rid]
+        x = np.asarray(r.latents, np.float64)
+        errs.append(float(np.linalg.norm(x - ref)
+                          / max(np.linalg.norm(ref), 1e-12)))
+    return float(np.mean(errs))
+
+
+def _serve(model, params, trace, policy, fc, **kw):
+    coll = MetricsCollector()
+    res, done = serve_once(model, params, trace, policy=policy, slots=2,
+                           steps=6, guidance=4.0, lockstep=False,
+                           collector=coll, audit_fraction=1.0, fc=fc, **kw)
+    return res, done, coll
+
+
+def run(model_name: str = "dit-b2") -> List[dict]:
+    cfg, model, params = build_dit(model_name)
+    trace = poisson_trace(4, 0.25, seed=0, num_classes=cfg.dit.num_classes)
+    window = 16
+    rows: List[dict] = []
+    for policy in POLICIES:
+        res0, done0, _ = _serve(model, params, trace, policy, None)
+        baseline = {r.rid: np.asarray(r.latents, np.float64) for r in done0}
+        rows.append({
+            "name": f"tokens/{policy}/r=1.00",
+            "us_per_call": res0["model_step_ms"] * 1e3,
+            "derived": "tokens_kept=1.000 audit_err_p50=0"
+                       " latent_rel_err=0",
+        })
+        for ratio in RATIOS:
+            fc = FastCacheConfig(merge_enabled=True, merge_ratio=ratio,
+                                 merge_window=window)
+            res, done, coll = _serve(model, params, trace, policy, fc)
+            t = coll.totals()
+            kept = t.get("tokens_kept_total", 0.0)
+            frac = kept / max(kept + t.get("tokens_merged_total", 0.0), 1.0)
+            rows.append({
+                "name": f"tokens/{policy}/r={ratio:.2f}",
+                "us_per_call": res["model_step_ms"] * 1e3,
+                "derived": (f"tokens_kept={frac:.3f}"
+                            f" audit_err_p50="
+                            f"{coll.quantile('audit_rel_err', 0.5):.4f}"
+                            f" latent_rel_err="
+                            f"{_latent_rel_err(done, baseline):.4f}"),
+            })
+    # Table 15's K sweep on the serving path: fastcache, r=0.5
+    _, done0, _ = _serve(model, params, trace, "fastcache", None)
+    baseline = {r.rid: np.asarray(r.latents, np.float64) for r in done0}
+    for k in KNN_KS:
+        fc = FastCacheConfig(merge_enabled=True, merge_ratio=0.5,
+                             merge_window=window, knn_k=k)
+        res, done, coll = _serve(model, params, trace, "fastcache", fc)
+        rows.append({
+            "name": f"tokens/knn_k/K={k}",
+            "us_per_call": res["model_step_ms"] * 1e3,
+            "derived": (f"audit_err_p50="
+                        f"{coll.quantile('audit_rel_err', 0.5):.4f}"
+                        f" latent_rel_err="
+                        f"{_latent_rel_err(done, baseline):.4f}"),
+        })
+    return rows

@@ -25,7 +25,7 @@ class AdaCache(CachePolicy):
         m = self.model
         dt = self._state_dtype()
         return {
-            "prev_tokens_in": jnp.zeros((batch, m.num_tokens,
+            "prev_tokens_in": jnp.zeros((batch, self.n_tokens,
                                          m.cfg.d_model), dt),
             "prev_eps": jnp.zeros(self._eps_shape(batch), dt),
             "ada_skip_left": jnp.zeros((batch,), jnp.int32),

@@ -41,7 +41,13 @@ State-pytree contract with the engines / sharding walker:
     standard keys are ``blocks_computed / blocks_skipped / steps_reused /
     motion_frac_sum`` plus the scalar ``steps`` (bumped by the
     ``CachedDiT`` shell, not by policies);
-  - arrays only — the engines donate the whole pytree buffer-for-buffer.
+  - arrays only — the engines donate the whole pytree buffer-for-buffer;
+  - ``tokred`` is RESERVED: when the token-compression stage is on,
+    ``CachedDiT`` rides the TokenReducer's per-sample rows (previous
+    full-resolution tokens + warm flag; core/token_reduce.py) under that
+    key of the same state dict — policies must pass unknown keys through
+    untouched (every ``dict(state)`` copy-through does), and the stats
+    block gains the (B,) ``tokens_kept / tokens_merged`` counters.
 
 Registering:
 
@@ -118,13 +124,22 @@ class CachePolicy:
 
     def __init__(self, model: DiTModel, fc, fc_params, *,
                  gate_mode: str = "per_sample", use_fused: bool = False,
-                 **_unused):
+                 token_reducer=None, **_unused):
         self.model = model
         self.fc = fc
         self.fc_params = fc_params
         self.gate_mode = gate_mode
         self.use_fused = use_fused
         self.L = model.cfg.num_layers
+        # token-compression stage (core/token_reduce.py): when CachedDiT
+        # hands a reducer in, the policy's whole transformer path runs on
+        # the statically reduced grid — policies size their token-axis
+        # buffers with ``self.n_tokens`` and everything else composes
+        # untouched (``_eps`` unmerges back to full resolution, so cached
+        # eps / image-space buffers never see the reduced grid)
+        self.reducer = token_reducer
+        self.n_tokens = (token_reducer.reduced_tokens
+                         if token_reducer is not None else model.num_tokens)
 
     # -- protocol ------------------------------------------------------
 
@@ -147,14 +162,22 @@ class CachePolicy:
 
     def init_stats(self, batch: int) -> Dict[str, jax.Array]:
         """The standard per-sample stat accumulators every policy carries
-        (the serving engines accumulate every (B,) key per request)."""
-        return {
+        (the serving engines accumulate every (B,) key per request).  With
+        an active TokenReducer the merge stage's token counters join the
+        set — (B,) like every stat key, so the engines' per-request
+        accumulation and the obs token counters pick them up with no
+        policy or engine edits."""
+        out = {
             "blocks_computed": jnp.zeros((batch,), F32),
             "blocks_skipped": jnp.zeros((batch,), F32),
             "steps_reused": jnp.zeros((batch,), F32),
             "motion_frac_sum": jnp.zeros((batch,), F32),
             "steps": jnp.zeros((), F32),
         }
+        if self.reducer is not None:
+            out["tokens_kept"] = jnp.zeros((batch,), F32)
+            out["tokens_merged"] = jnp.zeros((batch,), F32)
+        return out
 
     def _state_dtype(self) -> jnp.dtype:
         return jnp.dtype(self.model.cfg.dtype)
@@ -178,6 +201,15 @@ class CachePolicy:
         return x_out, inputs
 
     def _eps(self, params, hidden_final, c) -> jax.Array:
+        # token-compression unmerge: a reduced-grid hidden (the cached
+        # path under an active TokenReducer) is scattered back to full
+        # resolution before the final layer; full-resolution hiddens
+        # (merge off, or the audit plane's shadow forward) pass through —
+        # the dispatch is on static shape, so both cases stay one trace
+        # each with no runtime branching
+        if (self.reducer is not None
+                and hidden_final.shape[-2] != self.model.num_tokens):
+            hidden_final = self.reducer.unmerge(hidden_final)
         out = self.model.final_layer(params, hidden_final, c)
         p = self.model.cfg.dit.patch_size
         from repro.models.common import unpatchify

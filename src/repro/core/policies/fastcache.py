@@ -26,12 +26,12 @@ from repro.kernels import ref as kernel_ref
 class FastCache(CachePolicy):
     def __init__(self, model, fc, fc_params, **kw):
         super().__init__(model, fc, fc_params, **kw)
-        n = model.num_tokens
+        n = self.n_tokens      # reduced grid when token compression is on
         self.capacity = max(1, int(round(fc.motion_capacity * n)))
 
     def init_state(self, batch: int) -> Dict:
         m = self.model
-        n, d = m.num_tokens, m.cfg.d_model
+        n, d = self.n_tokens, m.cfg.d_model
         dt = self._state_dtype()
         return {
             "prev_tokens_in": jnp.zeros((batch, n, d), dt),

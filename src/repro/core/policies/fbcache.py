@@ -26,7 +26,7 @@ class FirstBlockCache(CachePolicy):
         m = self.model
         dt = self._state_dtype()
         return {
-            "prev_h1": jnp.zeros((batch, m.num_tokens, m.cfg.d_model), dt),
+            "prev_h1": jnp.zeros((batch, self.n_tokens, m.cfg.d_model), dt),
             "prev_eps": jnp.zeros(self._eps_shape(batch), dt),
             "have_cache": jnp.zeros((batch,), bool),
             "stats": self.init_stats(batch),

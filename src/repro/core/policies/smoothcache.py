@@ -73,7 +73,7 @@ class SmoothCache(CachePolicy):
     def init_state(self, batch: int) -> Dict:
         m = self.model
         return {
-            "prev_delta": jnp.zeros((self.L, batch, m.num_tokens,
+            "prev_delta": jnp.zeros((self.L, batch, self.n_tokens,
                                      m.cfg.d_model), self._state_dtype()),
             "step_count": jnp.zeros((batch,), jnp.int32),
             "have_cache": jnp.zeros((batch,), bool),

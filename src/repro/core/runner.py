@@ -38,6 +38,8 @@ from repro.core import policies as _policies  # registers the built-ins
 from repro.core.policies.base import (get_policy_class, registered_policies,
                                       summarize_stats)  # noqa: F401  (re-export)
 from repro.core.policies.l2c import l2c_mask_from_deltas  # noqa: F401
+from repro.core.token_reduce import STATE_KEY as TOKRED_KEY
+from repro.core.token_reduce import TokenReducer
 from repro.kernels import ops as kernel_ops
 from repro.models.dit import DiTModel
 
@@ -67,6 +69,7 @@ class CachedDiT:
                  ada_thresholds: Tuple[float, float] = (0.05, 0.15),
                  fb_rdt: float = 0.08,
                  l2c_mask: Optional[jax.Array] = None,
+                 token_reduce: Optional[bool] = None,
                  **policy_kwargs):
         cls = get_policy_class(policy)     # ValueError on unknown names
         if fc.gate_mode not in GATE_MODES:
@@ -81,8 +84,22 @@ class CachedDiT:
         self.L = model.cfg.num_layers
         self.fc_params = fc_params or linear_approx.init_linear_params(
             self.L, model.cfg.d_model)
+        # token-compression stage (core/token_reduce.py): merge each
+        # window of fc.merge_window tokens down to ceil(merge_ratio * w)
+        # centers before the policy runs, unmerge inside its _eps.  The
+        # ``token_reduce`` kwarg overrides fc.merge_enabled; a ratio whose
+        # static M fills the window deactivates the stage entirely, so
+        # r=1.0 is bitwise-identical to merge-off (same traced program).
+        want_merge = (fc.merge_enabled if token_reduce is None
+                      else bool(token_reduce))
+        self.reducer: Optional[TokenReducer] = None
+        if want_merge:
+            red = TokenReducer(model, fc, use_fused=self.use_fused)
+            if red.active:
+                self.reducer = red
         self.impl = cls(model, fc, self.fc_params,
                         gate_mode=self.gate_mode, use_fused=self.use_fused,
+                        token_reducer=self.reducer,
                         fora_interval=fora_interval,
                         tea_threshold=tea_threshold,
                         ada_thresholds=ada_thresholds, fb_rdt=fb_rdt,
@@ -92,15 +109,26 @@ class CachedDiT:
 
     def init_state(self, batch: int) -> Dict:
         """The policy's own state pytree for ``batch`` samples — only that
-        policy's buffers (plus the standard ``stats`` block)."""
-        return self.impl.init_state(batch)
+        policy's buffers (plus the standard ``stats`` block).  With token
+        compression on, the reducer's per-sample rows ride the same pytree
+        under the reserved ``tokred`` key."""
+        state = self.impl.init_state(batch)
+        if self.reducer is not None:
+            state = dict(state)
+            state[TOKRED_KEY] = self.reducer.init_rows(batch)
+        return state
 
     def reset_slot(self, state: Dict, slot) -> Dict:
         """Re-arm one sample (or an index array of samples, e.g. a CFG
         cond/uncond pair) for a new request: drop its cache payload and
         policy counters without disturbing its batchmates.  Stats stay
         cumulative (engine-lifetime counters)."""
-        return self.impl.reset_rows(state, slot)
+        state = self.impl.reset_rows(state, slot)
+        if self.reducer is not None:
+            state = dict(state)
+            state[TOKRED_KEY] = self.reducer.reset_rows(
+                state[TOKRED_KEY], slot)
+        return state
 
     def step(self, params, state: Dict, latents, t, labels
              ) -> Tuple[jax.Array, Dict]:
@@ -109,10 +137,22 @@ class CachedDiT:
         batch.  Returns (eps, new_state)."""
         x_in = self.model.tokens_in(params, latents)
         c = self.model.conditioning(params, t, labels)
-        eps, state = self.impl.step(params, state, x_in, c)
+        if self.reducer is not None:
+            x_in, tokred = self.reducer.reduce(x_in, state[TOKRED_KEY])
+            state = {**state, TOKRED_KEY: tokred}
+        try:
+            eps, state = self.impl.step(params, state, x_in, c)
+        finally:
+            if self.reducer is not None:
+                self.reducer._mm = None    # MergeMap is per-trace only
         state = dict(state)
         stats = dict(state["stats"])
         stats["steps"] = stats["steps"] + 1.0
+        if self.reducer is not None:
+            kept = float(self.reducer.reduced_tokens)
+            merged = float(self.model.num_tokens - self.reducer.reduced_tokens)
+            stats["tokens_kept"] = stats["tokens_kept"] + kept
+            stats["tokens_merged"] = stats["tokens_merged"] + merged
         state["stats"] = stats
         return eps, state
 
@@ -136,7 +176,13 @@ class CachedDiT:
 
     def audit_hidden(self, state: Dict):
         """The cached path's per-layer hidden stack for this step, or None
-        when the policy keeps none (see ``CachePolicy.audit_hidden``)."""
+        when the policy keeps none (see ``CachePolicy.audit_hidden``).
+        With token compression on the cached stack lives on the reduced
+        grid and cannot be compared layerwise against the full-resolution
+        shadow forward, so the audit plane falls back to end-to-end eps
+        error — exactly the merge+cache vs nocache quantity we report."""
+        if self.reducer is not None:
+            return None
         return self.impl.audit_hidden(state)
 
     def audit_bound(self) -> Optional[float]:

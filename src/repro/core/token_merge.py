@@ -9,29 +9,52 @@ keeps a static number of cluster centers M = ceil(r * w).  Every token is
 assigned to its nearest kept center; merged tokens are the importance-weighted
 cluster means (Eq. 13); ``unmerge`` restores resolution via the stored
 assignment (Alg. 2's M mapping).
+
+The center-selection / assignment / weighted-mean core lives in
+``kernels/ref.py:merge_assign`` (the pure-jnp ground truth of the fused
+Pallas kernel ``kernels/token_merge.py``); ``merge_tokens`` routes through
+the kernel when ``use_fused`` is set (TPU serving path) and the reference
+otherwise, so both paths share one canonical definition.
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+
 F32 = jnp.float32
+
+
+def _check_k(k: int, w: int) -> None:
+    """The shared k-validation of every knn-density path (pure jnp here,
+    ``kernels/ref.py``, and the Pallas kernel's static-k unroll): a window
+    of ``w`` tokens has exactly ``w - 1`` off-diagonal neighbours, so any
+    ``k`` outside [1, w-1] is a caller bug.  All three paths raise the
+    SAME error instead of silently clamping — a clamp here while the
+    kernel unrolled the requested k (or vice versa) is exactly the
+    divergence the parity tests pin down."""
+    if not 1 <= k <= w - 1:
+        raise ValueError(f"knn_density k={k} out of range for window "
+                         f"w={w}; need 1 <= k <= w-1 = {w - 1}")
 
 
 def knn_density(h: jax.Array, k: int) -> jax.Array:
     """Eq. 10 within windows. h: (..., w, D) -> rho_sp (..., w)."""
+    w = h.shape[-2]
+    _check_k(k, w)
     hf = h.astype(F32)
     sq = jnp.sum(hf * hf, axis=-1)
     dist = (sq[..., :, None] + sq[..., None, :]
             - 2.0 * jnp.einsum("...id,...jd->...ij", hf, hf))
     dist = jnp.maximum(dist, 0.0)
-    w = h.shape[-2]
     # exclude self-distance (0) by pushing the diagonal to +inf
     eye = jnp.eye(w, dtype=bool)
     dist = jnp.where(eye, jnp.inf, dist)
-    k = min(k, w - 1)
     neg_topk, _ = jax.lax.top_k(-dist, k)                  # k smallest
     mean_knn = jnp.mean(-neg_topk, axis=-1)
     # normalize by feature dim: Eq. 10's exp(-dist) underflows for D >> 1
@@ -54,48 +77,72 @@ class MergeMap(NamedTuple):
     scores: jax.Array     # (B, n_win, w) importance
 
 
+def keep_count(window: int, keep_ratio: float) -> int:
+    """Static centers per window, M = ceil(r * w) clamped to [1, w] —
+    a ratio at or above 1.0 keeps every token (``merge_tokens`` is then
+    the bitwise-identity map), a tiny ratio still keeps one center so the
+    reduced grid never collapses (capacity overflow degrades speed, never
+    shape)."""
+    return min(window, max(1, math.ceil(keep_ratio * window)))
+
+
+def _identity_map(b: int, n_win: int, window: int) -> MergeMap:
+    idx = jnp.broadcast_to(jnp.arange(window, dtype=jnp.int32),
+                           (b, n_win, window))
+    return MergeMap(assign=idx, centers=idx,
+                    scores=jnp.ones((b, n_win, window), F32))
+
+
 def merge_tokens(h_t: jax.Array, h_prev: jax.Array, *, window: int,
-                 keep_ratio: float, k: int, lam: float):
-    """(B, N, D) -> merged (B, N_keep, D), MergeMap.  N % window == 0."""
+                 keep_ratio: float, k: int, lam: float,
+                 use_fused: bool = False):
+    """(B, N, D) -> merged (B, N_keep, D), MergeMap.  N % window == 0.
+    ``keep_ratio >= 1.0`` (M == w) short-circuits to the bitwise-identity
+    map: the weighted-mean reconstruction of singleton clusters is only
+    allclose-identical, and the r=1.0 contract is exact."""
     b, n, d = h_t.shape
     if n % window != 0:
         raise ValueError(f"token count {n} must be divisible by the merge "
                          f"window {window}")
+    _check_k(k, window)
     n_win = n // window
-    m = max(1, int(round(keep_ratio * window)))
+    m = keep_count(window, keep_ratio)
+    if m >= window:
+        return h_t, _identity_map(b, n_win, window)
     hw = h_t.reshape(b, n_win, window, d)
     pw = h_prev.reshape(b, n_win, window, d)
-    s = importance(hw, pw, k, lam)                         # (B,n_win,w)
+    flat = hw.reshape(b * n_win, window, d)
+    if use_fused:
+        rho_sp = kernel_ops.knn_density(flat, k=k).reshape(b, n_win, window)
+        rho_tm = jnp.linalg.norm(hw.astype(F32) - pw.astype(F32), axis=-1)
+        s = rho_sp * (1.0 + lam * rho_tm)                  # (B,n_win,w)
+    else:
+        s = importance(hw, pw, k, lam)                     # (B,n_win,w)
     # normalize scores per window: the weighted mean (Eq. 13) is invariant
     # to per-window scaling and this avoids denominator underflow
     s = s / jnp.maximum(jnp.max(s, axis=-1, keepdims=True), 1e-30)
 
-    _, centers = jax.lax.top_k(s, m)                       # (B,n_win,M)
-    ch = jnp.take_along_axis(hw, centers[..., None], axis=2)  # (B,n_win,M,D)
-
-    # assign every token to its nearest center (L2)
-    d2 = (jnp.sum(jnp.square(hw.astype(F32)), -1)[..., :, None]
-          + jnp.sum(jnp.square(ch.astype(F32)), -1)[..., None, :]
-          - 2.0 * jnp.einsum("bwid,bwjd->bwij", hw.astype(F32),
-                             ch.astype(F32)))              # (B,n_win,w,M)
-    assign = jnp.argmin(d2, axis=-1).astype(jnp.int32)     # (B,n_win,w)
-
-    # merged token = importance-weighted mean of its cluster (Eq. 13)
-    onehot = jax.nn.one_hot(assign, m, dtype=F32)          # (B,n_win,w,M)
-    wgt = onehot * s[..., None]
-    num = jnp.einsum("bwim,bwid->bwmd", wgt, hw.astype(F32))
-    den = jnp.maximum(jnp.sum(wgt, axis=2), 1e-9)          # (B,n_win,M)
-    merged = (num / den[..., None]).astype(h_t.dtype)      # (B,n_win,M,D)
+    sflat = s.reshape(b * n_win, window)
+    if use_fused:
+        merged, assign, centers = kernel_ops.merge_assign(flat, sflat, m=m)
+    else:
+        merged, assign, centers = kernel_ref.merge_assign(flat, sflat, m)
     merged = merged.reshape(b, n_win * m, d)
-    return merged, MergeMap(assign=assign, centers=centers, scores=s)
+    return merged, MergeMap(assign=assign.reshape(b, n_win, window),
+                            centers=centers.reshape(b, n_win, m),
+                            scores=s)
 
 
 def unmerge_tokens(merged: jax.Array, mm: MergeMap, *, window: int,
-                   n_tokens: int) -> jax.Array:
+                   n_tokens: int, use_fused: bool = False) -> jax.Array:
     """Restore (B, N, D): each token takes its cluster representative."""
     b, nk, d = merged.shape
     n_win = n_tokens // window
     m = nk // n_win
-    mw = merged.reshape(b, n_win, m, d)
-    out = jnp.take_along_axis(mw, mm.assign[..., None], axis=2)
+    flat = merged.reshape(b * n_win, m, d)
+    aflat = mm.assign.reshape(b * n_win, window)
+    if use_fused:
+        out = kernel_ops.unmerge_scatter(flat, aflat)
+    else:
+        out = kernel_ref.unmerge_scatter(flat, aflat)
     return out.reshape(b, n_tokens, d)

@@ -42,7 +42,12 @@ def knn_density(h: jax.Array, *, k: int = 5,
                 interpret: bool = True) -> jax.Array:
     """h: (n_windows, w, D) -> rho_sp (n_windows, w)."""
     nw, w, d = h.shape
-    k = min(k, w - 1)
+    if not 1 <= k <= w - 1:
+        # identical validation to kernels/ref.py and core/token_merge —
+        # the static-k unroll below must never silently diverge from the
+        # k the caller asked for (the pre-fix clamp did exactly that)
+        raise ValueError(f"knn_density k={k} out of range for window "
+                         f"w={w}; need 1 <= k <= w-1 = {w - 1}")
     return pl.pallas_call(
         functools.partial(_kernel, k=k, w=w, d=d),
         grid=(nw,),

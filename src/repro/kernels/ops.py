@@ -13,6 +13,7 @@ from repro.kernels import fused_gate as _fg
 from repro.kernels import knn_density as _knn
 from repro.kernels import linear_blend as _lb
 from repro.kernels import saliency_delta as _sd
+from repro.kernels import token_merge as _tm
 
 
 def _auto_interpret() -> bool:
@@ -63,3 +64,15 @@ def knn_density(h, *, k: int = 5, interpret=None):
     if interpret is None:
         interpret = _auto_interpret()
     return _knn.knn_density(h, k=k, interpret=interpret)
+
+
+def merge_assign(h, s, *, m: int, interpret=None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _tm.merge_assign(h, s, m=m, interpret=interpret)
+
+
+def unmerge_scatter(merged, assign, *, interpret=None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _tm.unmerge_scatter(merged, assign, interpret=interpret)

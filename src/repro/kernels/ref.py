@@ -73,12 +73,46 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def knn_density(h: jax.Array, k: int) -> jax.Array:
     """h: (W, w, D) windowed tokens -> rho_sp (W, w) (Eq. 10)."""
+    w = h.shape[-2]
+    if not 1 <= k <= w - 1:
+        # identical validation to the Pallas kernel's static-k unroll and
+        # core/token_merge.knn_density — no silent clamping on any path
+        raise ValueError(f"knn_density k={k} out of range for window "
+                         f"w={w}; need 1 <= k <= w-1 = {w - 1}")
     hf = h.astype(F32)
     sq = jnp.sum(hf * hf, axis=-1)
     dist = (sq[..., :, None] + sq[..., None, :]
             - 2.0 * jnp.einsum("wid,wjd->wij", hf, hf))
     dist = jnp.maximum(dist, 0.0)
-    w = h.shape[-2]
     dist = jnp.where(jnp.eye(w, dtype=bool), jnp.inf, dist)
-    neg_topk, _ = jax.lax.top_k(-dist, min(k, w - 1))
+    neg_topk, _ = jax.lax.top_k(-dist, k)
     return jnp.exp(-jnp.mean(-neg_topk, axis=-1) / h.shape[-1])
+
+
+def merge_assign(h: jax.Array, s: jax.Array, m: int
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Ground truth of the fused merge kernel (Eqs. 12-13, Alg. 2; one
+    window per leading row).  h: (W, w, D) tokens, s: (W, w) per-window-
+    normalized importance -> (merged (W, M, D) importance-weighted cluster
+    means, assign (W, w) int32 nearest-center ids, centers (W, M) int32
+    window-local center indices)."""
+    _, centers = jax.lax.top_k(s, m)                       # (W, M)
+    ch = jnp.take_along_axis(h, centers[..., None], axis=1)   # (W, M, D)
+    hf, cf = h.astype(F32), ch.astype(F32)
+    d2 = (jnp.sum(jnp.square(hf), -1)[..., :, None]
+          + jnp.sum(jnp.square(cf), -1)[..., None, :]
+          - 2.0 * jnp.einsum("wid,wjd->wij", hf, cf))      # (W, w, M)
+    assign = jnp.argmin(d2, axis=-1).astype(jnp.int32)     # (W, w)
+    onehot = jax.nn.one_hot(assign, m, dtype=F32)          # (W, w, M)
+    wgt = onehot * s.astype(F32)[..., None]
+    num = jnp.einsum("wim,wid->wmd", wgt, hf)
+    den = jnp.maximum(jnp.sum(wgt, axis=1), 1e-9)          # (W, M)
+    merged = (num / den[..., None]).astype(h.dtype)        # (W, M, D)
+    return merged, assign, centers.astype(jnp.int32)
+
+
+def unmerge_scatter(merged: jax.Array, assign: jax.Array) -> jax.Array:
+    """merged: (W, M, D), assign: (W, w) int32 -> (W, w, D): exact gather
+    of each token's cluster representative (the scatter that restores the
+    full-resolution grid)."""
+    return jnp.take_along_axis(merged, assign[..., None], axis=1)

@@ -1,0 +1,130 @@
+"""Fused token-merge Pallas kernels (CTM stages 2-3; Eqs. 12-13, Alg. 2).
+
+``merge_assign`` fuses center selection -> nearest-center assignment ->
+importance-weighted cluster means for one window per grid step, entirely in
+VMEM: M unrolled masked-max rounds pick the top-M scored tokens as centers
+(same first-occurrence tie-break as ``lax.top_k``), one (w, M) distance
+matrix assigns every token to its nearest center (first-occurrence argmin),
+and two MXU matmuls produce the merged (M, D) cluster means — no sort, no
+gather, mirroring the masked-min idiom of ``knn_density.py``.
+
+``unmerge_scatter`` restores the window: a one-hot (w, M) assignment matmul
+replicates each cluster representative back to every member token (the
+gather-as-matmul form the MXU wants; exact, since each row selects one
+element).
+
+Pure-jnp twins with the same names live in ``kernels/ref.py``; interpret-mode
+parity is pinned by tests/test_kernels.py per the reprolint kernel-parity
+rule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+NEG_INF = -jnp.inf
+
+
+def _merge_kernel(h_ref, s_ref, merged_ref, assign_ref, centers_ref, *,
+                  m: int, w: int, d: int):
+    h = h_ref[0].astype(F32)                               # (w, D)
+    s = s_ref[0].astype(F32).reshape(1, w)                 # (1, w)
+
+    # ---- top-M centers by score: M unrolled masked-max rounds with the
+    # cumsum first-occurrence dedup (ties resolve to the lower index,
+    # matching lax.top_k's stable ordering in ref.merge_assign)
+    sc = s
+    sel_rows = []
+    for _ in range(m):
+        mx = jnp.max(sc, axis=1, keepdims=True)            # (1, 1)
+        is_max = sc == mx
+        first = jnp.cumsum(is_max.astype(jnp.int32), axis=1) == 1
+        sel = (is_max & first).astype(F32)                 # (1, w) one-hot
+        sel_rows.append(sel)
+        sc = jnp.where(sel > 0.0, NEG_INF, sc)
+    sel_mat = jnp.concatenate(sel_rows, axis=0)            # (M, w)
+    jj_mw = jax.lax.broadcasted_iota(jnp.int32, (m, w), 1)
+    centers = jnp.sum(sel_mat * jj_mw.astype(F32), axis=1).astype(jnp.int32)
+    centers_ref[0] = centers                               # (M,)
+
+    # ---- nearest-center assignment: (w, M) squared distances, then a
+    # first-occurrence argmin via masked one-hot (matches jnp.argmin)
+    ch = jax.lax.dot_general(sel_mat, h, (((1,), (0,)), ((), ())),
+                             preferred_element_type=F32)   # (M, D)
+    hsq = jnp.sum(h * h, axis=1, keepdims=True)            # (w, 1)
+    csq = jnp.sum(ch * ch, axis=1, keepdims=True)          # (M, 1)
+    d2 = (hsq + csq.reshape(1, m)
+          - 2.0 * jax.lax.dot_general(h, ch, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=F32))  # (w, M)
+    mn = jnp.min(d2, axis=1, keepdims=True)
+    is_min = d2 == mn
+    firstm = jnp.cumsum(is_min.astype(jnp.int32), axis=1) == 1
+    onehot = (is_min & firstm).astype(F32)                 # (w, M)
+    jj_wm = jax.lax.broadcasted_iota(jnp.int32, (w, m), 1)
+    assign_ref[0] = jnp.sum(onehot * jj_wm.astype(F32),
+                            axis=1).astype(jnp.int32)      # (w,)
+
+    # ---- importance-weighted cluster means (Eq. 13)
+    wgt = onehot * s.reshape(w, 1)                         # (w, M)
+    num = jax.lax.dot_general(wgt, h, (((0,), (0,)), ((), ())),
+                              preferred_element_type=F32)  # (M, D)
+    den = jnp.maximum(jnp.sum(wgt, axis=0), 1e-9)          # (M,)
+    merged_ref[0] = (num / den[:, None]).astype(merged_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def merge_assign(h: jax.Array, s: jax.Array, *, m: int,
+                 interpret: bool = True):
+    """h: (W, w, D) windowed tokens, s: (W, w) per-window-normalized
+    importance -> (merged (W, M, D), assign (W, w) int32, centers (W, M)
+    int32) with M = ``m`` static centers per window."""
+    nw, w, d = h.shape
+    if not 1 <= m <= w:
+        raise ValueError(f"merge_assign m={m} out of range for window "
+                         f"w={w}; need 1 <= m <= w")
+    return pl.pallas_call(
+        functools.partial(_merge_kernel, m=m, w=w, d=d),
+        grid=(nw,),
+        in_specs=[pl.BlockSpec((1, w, d), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((1, w), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, m, d), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((1, w), lambda i: (i, 0)),
+                   pl.BlockSpec((1, m), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nw, m, d), h.dtype),
+                   jax.ShapeDtypeStruct((nw, w), jnp.int32),
+                   jax.ShapeDtypeStruct((nw, m), jnp.int32)],
+        interpret=interpret,
+    )(h, s)
+
+
+def _unmerge_kernel(merged_ref, assign_ref, out_ref, *, m: int, w: int,
+                    d: int):
+    mg = merged_ref[0].astype(F32)                         # (M, D)
+    a = assign_ref[0].reshape(w, 1)                        # (w, 1)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (w, m), 1)
+    onehot = (a == jj).astype(F32)                         # (w, M)
+    out = jax.lax.dot_general(onehot, mg, (((1,), (0,)), ((), ())),
+                              preferred_element_type=F32)  # (w, D)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def unmerge_scatter(merged: jax.Array, assign: jax.Array, *,
+                    interpret: bool = True) -> jax.Array:
+    """merged: (W, M, D) cluster means, assign: (W, w) int32 ->
+    (W, w, D): every token takes its cluster representative."""
+    nw, m, d = merged.shape
+    w = assign.shape[1]
+    return pl.pallas_call(
+        functools.partial(_unmerge_kernel, m=m, w=w, d=d),
+        grid=(nw,),
+        in_specs=[pl.BlockSpec((1, m, d), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((1, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, w, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nw, w, d), merged.dtype),
+        interpret=interpret,
+    )(merged, assign)

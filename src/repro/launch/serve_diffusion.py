@@ -105,6 +105,15 @@ def main() -> None:
                          "requires --guidance 1.0 and an all-1.0 "
                          "--guidance-mix")
     ap.add_argument("--policy", default="fastcache", choices=POLICIES)
+    ap.add_argument("--token-merge-ratio", type=float, default=1.0,
+                    help="serving-path token compression: keep "
+                         "ceil(ratio * window) cluster centers per window "
+                         "of tokens before the cache policy runs "
+                         "(core/token_reduce.py); 1.0 disables the stage "
+                         "(bitwise-identical to merge-off)")
+    ap.add_argument("--token-merge-window", type=int, default=16,
+                    help="token-compression window size w; the DiT token "
+                         "count must be divisible by it")
     ap.add_argument("--rate", type=float, default=0.5,
                     help="Poisson arrival rate (requests per engine step)")
     ap.add_argument("--lockstep", action="store_true",
@@ -158,7 +167,13 @@ def main() -> None:
         raise SystemExit(f"{cfg.name} is not a DiT — nothing to diffuse")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    runner = CachedDiT(model, FastCacheConfig(), policy=args.policy)
+    if not 0.0 < args.token_merge_ratio <= 1.0:
+        raise SystemExit(f"--token-merge-ratio must be in (0, 1], got "
+                         f"{args.token_merge_ratio}")
+    fc = FastCacheConfig(merge_enabled=args.token_merge_ratio < 1.0,
+                         merge_ratio=args.token_merge_ratio,
+                         merge_window=args.token_merge_window)
+    runner = CachedDiT(model, fc, policy=args.policy)
     steps_mix = [int(v) for v in args.steps_mix.split(",") if v.strip()]
     guidance_mix = [float(v) for v in args.guidance_mix.split(",")
                     if v.strip()]
@@ -227,6 +242,9 @@ def main() -> None:
         "latency_steps_p95": percentile(lats, 95),
         "latency_by_steps": summarize_by_steps(done),
         "cache": engine.cache_stats(),
+        "token_merge": {"ratio": args.token_merge_ratio,
+                        "window": args.token_merge_window,
+                        "active": runner.reducer is not None},
     }
     if collector is not None:
         collector.set_gauge("run_wall_seconds", dt)

@@ -136,6 +136,19 @@ SLOT_ACTIVE_STEPS = counter(
     "slot_active_steps", "per-slot steps carrying a live request "
     "(device-resident (S,) counter, sharded over the mesh data axis)")
 
+# -- token-compression plane (core/token_reduce.py) ------------------------
+
+TOKENS_MERGED = counter(
+    "tokens_merged_total", "tokens folded into cluster centers by the "
+    "serving-path merge stage, summed over active slot-steps")
+TOKENS_KEPT = counter(
+    "tokens_kept_total", "cluster centers the transformer actually ran on, "
+    "summed over active slot-steps")
+SLOT_MERGE_RATIO = counter(
+    "slot_merge_ratio_sum", "per-slot cumulative kept/(kept+merged) ratio "
+    "(device-resident (S,), sharded over the mesh data axis; divide by "
+    "slot_active_steps for the mean merge ratio)")
+
 # -- audit plane (obs/audit.py): shadow-compute quality metrics ------------
 
 AUDIT_STEPS = counter(
@@ -169,6 +182,10 @@ AUDIT_COUNTERS = (AUDIT_STEPS, AUDIT_SLOT_STEPS, BOUND_VIOLATIONS)
 AUDIT_HISTOGRAMS = (AUDIT_REL_ERR,)
 AUDIT_PER_SLOT = (SLOT_AUDIT_ERR, SLOT_AUDIT_STEPS)
 
+# extra membership when the token-compression stage is on
+TOKEN_COUNTERS = (TOKENS_MERGED, TOKENS_KEPT)
+TOKEN_PER_SLOT = (SLOT_MERGE_RATIO,)
+
 
 # --------------------------------------------------------------------------
 # Device plane: pure-jnp init / update (jit- and donation-safe)
@@ -176,7 +193,8 @@ AUDIT_PER_SLOT = (SLOT_AUDIT_ERR, SLOT_AUDIT_STEPS)
 
 
 def init_device_metrics(max_slots: int, *,
-                        audit_layers: Optional[int] = None) -> Dict:
+                        audit_layers: Optional[int] = None,
+                        token_metrics: bool = False) -> Dict:
     """The serving device-metrics pytree: scalar counters, per-bin
     histogram counts (+ sum/count), and per-slot ``(S,)`` accumulators.
     Arrays only — the engines donate it buffer-for-buffer alongside the
@@ -187,13 +205,19 @@ def init_device_metrics(max_slots: int, *,
     additionally installs the audit counters / error histogram / per-slot
     accumulators plus an ``audit`` group carrying the per-layer error sum —
     the walker shards the per-slot audit keys over ``data`` like every
-    other per-slot leaf and replicates the small ``audit`` group."""
-    counters = DEVICE_COUNTERS + (AUDIT_COUNTERS
-                                  if audit_layers is not None else ())
+    other per-slot leaf and replicates the small ``audit`` group.
+
+    ``token_metrics`` (the engine passes ``runner.reducer is not None``)
+    installs the token-compression counters and per-slot merge-ratio
+    accumulator — absent otherwise, so merge-off pytrees are unchanged."""
+    counters = (DEVICE_COUNTERS
+                + (AUDIT_COUNTERS if audit_layers is not None else ())
+                + (TOKEN_COUNTERS if token_metrics else ()))
     hists = DEVICE_HISTOGRAMS + (AUDIT_HISTOGRAMS
                                  if audit_layers is not None else ())
-    per_slot = DEVICE_PER_SLOT + (AUDIT_PER_SLOT
-                                  if audit_layers is not None else ())
+    per_slot = (DEVICE_PER_SLOT
+                + (AUDIT_PER_SLOT if audit_layers is not None else ())
+                + (TOKEN_PER_SLOT if token_metrics else ()))
     m = {
         "counters": {n: jnp.zeros((), F32) for n in counters},
         "hist": {n: {"bucket": jnp.zeros((len(spec(n).buckets) + 1,), F32),

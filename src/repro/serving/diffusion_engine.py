@@ -178,7 +178,8 @@ class DiffusionServingEngine:
         self._metrics_on = enable_metrics
         audit_layers = (runner.L + 1) if self._audit_on else None
         self.metrics = (obs_metrics.init_device_metrics(
-            max_slots, audit_layers=audit_layers)
+            max_slots, audit_layers=audit_layers,
+            token_metrics=runner.reducer is not None)
             if enable_metrics else {})
         if collector is not None and self._audit_on:
             collector.set_audit_context(bound=self._audit_bound,
@@ -279,6 +280,21 @@ class DiffusionServingEngine:
                 n_act * rows, 1.0)
             metrics = obs_metrics.observe(metrics,
                                           obs_metrics.SKIP_FRACTION, frac)
+        if "tokens_merged" in delta:
+            # token-compression stage on (runner.reducer): stats carry the
+            # per-row kept/merged token counts; per-slot we accumulate the
+            # realized kept/(kept+merged) ratio (idle slots contribute 0)
+            fold = ((lambda d: d[:self.S] + d[self.S:]) if self.cfg_rows
+                    else (lambda d: d))
+            kept, merged = fold(delta["tokens_kept"]), fold(
+                delta["tokens_merged"])
+            metrics = obs_metrics.inc(metrics, obs_metrics.TOKENS_KEPT,
+                                      jnp.sum(delta["tokens_kept"]))
+            metrics = obs_metrics.inc(metrics, obs_metrics.TOKENS_MERGED,
+                                      jnp.sum(delta["tokens_merged"]))
+            ratio = kept / jnp.maximum(kept + merged, 1.0)
+            metrics = obs_metrics.slot_add(
+                metrics, obs_metrics.SLOT_MERGE_RATIO, ratio)
         return obs_metrics.slot_add(metrics,
                                     obs_metrics.SLOT_ACTIVE_STEPS, act_f)
 

@@ -42,19 +42,21 @@ def steady_state_guard(*jitted_fns, transfers="disallow"):
         f"{before} -> {after}")
 
 
-def assert_solo_replay_parity(eng, model, params, policy, done):
+def assert_solo_replay_parity(eng, model, params, policy, done, fc=None):
     """Serving contract shared by the single-device and sharded suites:
     every finished request must match a solo ``sample()`` replay under ITS
     OWN resolved (num_steps, guidance_scale) bitwise.  ``params`` must be
     the UNPLACED tree (sharded engines hold device_put copies whose
-    committed shardings would leak into the solo jit)."""
+    committed shardings would leak into the solo jit).  ``fc`` overrides
+    the solo runner's FastCacheConfig — pass the engine runner's config so
+    a token-merge-enabled engine is replayed with the merge stage on."""
     import numpy as np
     import jax.numpy as jnp
     from repro.configs.base import FastCacheConfig
     from repro.core import CachedDiT
     from repro.diffusion import sample
     for r in done:
-        solo = CachedDiT(model, FastCacheConfig(), policy=policy)
+        solo = CachedDiT(model, fc or FastCacheConfig(), policy=policy)
         x, _ = sample(solo, params, jax.random.PRNGKey(0), batch=1,
                       labels=jnp.array([r.label]), num_steps=r.num_steps,
                       guidance_scale=r.guidance_scale,

@@ -1,5 +1,10 @@
-"""Fixture reference module: has `other`, lacks `myk`."""
+"""Fixture reference module: has `other` and `merge_assign`, lacks
+`myk` and `unmerge_scatter`."""
 
 
 def other(x):
     return x + 1.0
+
+
+def merge_assign(h, s):
+    return h * s

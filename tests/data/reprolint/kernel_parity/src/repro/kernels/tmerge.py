@@ -1,0 +1,21 @@
+"""Fixture: a token-merge-style kernel module with TWO public entries —
+kernel-parity must check each independently.  ``merge_assign`` has a ref
+twin but no parity test (must fire: unverified); ``unmerge_scatter`` has
+no twin at all (must fire: missing reference)."""
+from jax.experimental import pallas as pl
+
+
+def _merge_kernel(h_ref, s_ref, o_ref):
+    o_ref[...] = h_ref[...] * s_ref[...]
+
+
+def _scatter_kernel(m_ref, o_ref):
+    o_ref[...] = m_ref[...]
+
+
+def merge_assign(h, s):  # LINT: kernel-parity
+    return pl.pallas_call(_merge_kernel, out_shape=h)(h, s)
+
+
+def unmerge_scatter(merged):  # LINT: kernel-parity
+    return pl.pallas_call(_scatter_kernel, out_shape=merged)(merged)

@@ -22,4 +22,5 @@ class MetricsCollector:
 
 STEPS = counter("steps_total")
 LATENCY = histogram("latency_steps")
+TOKENS_KEPT = counter("tokens_kept_total")
 DUP = counter("steps_total")  # LINT: obs-discipline

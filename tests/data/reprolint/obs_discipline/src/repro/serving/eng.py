@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.obs import audit as obs_audit
-from repro.obs.metrics import MetricsCollector
+from repro.obs.metrics import MetricsCollector, counter
+
+# an engine re-registering a token counter instead of reusing the obs
+# module's exported one: rule 1 must flag the second site
+TOK = counter("tokens_kept_total")  # LINT: obs-discipline
 
 
 def _impl(x: jax.Array, collector: MetricsCollector):

@@ -120,6 +120,76 @@ def test_knn_density(nw, w, d, k, dtype, key):
     np.testing.assert_allclose(out, out_r, rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("nw,w,d,m", [(4, 16, 32, 8), (2, 32, 64, 8),
+                                      (8, 8, 16, 3), (3, 16, 48, 1)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_merge_assign(nw, w, d, m, dtype, key):
+    """Fused merge kernel (top-M centers -> nearest-center assign ->
+    importance-weighted cluster means) vs the pure-jnp ref, including the
+    integer outputs bitwise (same centers, same assignment)."""
+    h = jax.random.normal(key, (nw, w, d)).astype(dtype)
+    s = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1),
+                                         (nw, w)))
+    merged, assign, centers = ops.merge_assign(h, s, m=m, interpret=True)
+    merged_r, assign_r, centers_r = ref.merge_assign(h, s, m)
+    np.testing.assert_array_equal(np.asarray(centers),
+                                  np.asarray(centers_r))
+    np.testing.assert_array_equal(np.asarray(assign), np.asarray(assign_r))
+    assert merged.dtype == h.dtype and merged.shape == (nw, m, d)
+    tol = 1e-5 if dtype == "float32" else 5e-2
+    np.testing.assert_allclose(np.asarray(merged, np.float32),
+                               np.asarray(merged_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("nw,w,d,m", [(4, 16, 32, 8), (2, 8, 64, 4)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_unmerge_scatter(nw, w, d, m, dtype, key):
+    merged = jax.random.normal(key, (nw, m, d)).astype(dtype)
+    assign = jax.random.randint(jax.random.fold_in(key, 1), (nw, w), 0, m,
+                                jnp.int32)
+    out = ops.unmerge_scatter(merged, assign, interpret=True)
+    out_r = ref.unmerge_scatter(merged, assign)
+    assert out.dtype == merged.dtype and out.shape == (nw, w, d)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_merge_unmerge_identity_at_full_m(key):
+    """m == w keeps every token a center: unmerge(merge) is the identity
+    up to the kernel's f32 accumulate (cluster mean of one token)."""
+    h = jax.random.normal(key, (2, 16, 32))
+    s = jnp.ones((2, 16)) / 16.0
+    merged, assign, centers = ops.merge_assign(h, s, m=16, interpret=True)
+    out = ops.unmerge_scatter(merged, assign, interpret=True)
+    # every token is its own cluster: the "mean" is the token itself
+    np.testing.assert_allclose(
+        np.sort(np.asarray(centers), axis=1),
+        np.tile(np.arange(16), (2, 1)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(h), atol=1e-5)
+
+
+@pytest.mark.parametrize("k", [0, 16, 20])
+def test_knn_density_k_bounds_raise_in_both_paths(k, key):
+    """Out-of-range K raises the SAME error from the Pallas wrapper and
+    the pure-jnp ref (the pre-fix wrapper silently clamped, letting the
+    two paths compute different K)."""
+    h = jax.random.normal(key, (2, 16, 8))
+    with pytest.raises(ValueError, match="out of range for window"):
+        ops.knn_density(h, k=k, interpret=True)
+    with pytest.raises(ValueError, match="out of range for window"):
+        ref.knn_density(h, k)
+
+
+@pytest.mark.parametrize("m", [0, 17])
+def test_merge_assign_m_bounds_raise(m, key):
+    h = jax.random.normal(key, (2, 16, 8))
+    s = jnp.ones((2, 16))
+    with pytest.raises(ValueError, match="out of range"):
+        ops.merge_assign(h, s, m=m, interpret=True)
+
+
 def test_flash_attention_matches_model_attention(key):
     """Kernel layout (B,H,S,dh) agrees with the model's (B,S,H,dh) path."""
     from repro.models.attention import attend_direct

@@ -78,10 +78,23 @@ def test_policy_contract_static():
 def test_kernel_parity_fixture():
     diags = run_checks(DATA / "kernel_parity" / "src",
                        checks=["kernel-parity"], static_only=True)
-    by_file = {Path(d.file).name: d for d in diags}
-    assert set(by_file) == {"myk.py", "other.py"}, diags
-    assert "no pure-jnp counterpart" in by_file["myk.py"].message
-    assert "parity" in by_file["other.py"].message
+    by_file = {}
+    for d in diags:
+        by_file.setdefault(Path(d.file).name, []).append(d)
+    assert set(by_file) == {"myk.py", "other.py", "tmerge.py"}, diags
+    assert "no pure-jnp counterpart" in by_file["myk.py"][0].message
+    assert "parity" in by_file["other.py"][0].message
+    # multi-entry kernel modules (the token-merge shape): each public
+    # entry is checked on its own
+    tmerge = {d.line: d.message for d in by_file["tmerge.py"]}
+    assert {(d.file, d.line, "kernel-parity")
+            for d in diags} == _marked("kernel_parity") | {
+                (by_file["myk.py"][0].file, by_file["myk.py"][0].line,
+                 "kernel-parity"),
+                (by_file["other.py"][0].file, by_file["other.py"][0].line,
+                 "kernel-parity")}
+    assert any("unverified" in m for m in tmerge.values())
+    assert any("no pure-jnp counterpart" in m for m in tmerge.values())
 
 
 def test_kernel_parity_silent_on_real_kernels():

@@ -103,6 +103,105 @@ def test_mixed_plan_batch_parity(dit, policy):
         assert r.cache["blocks_computed"] > 0
 
 
+# ---------------------------------------------------------------------------
+# Token compression composes with serving: admission parity with merge on
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dit_real(dit):
+    """Same reduced model with the adaLN-zero modulation and output head
+    un-zeroed (as trained weights would be) — with plain init eps == 0 and
+    merge-on parity would be vacuously bitwise."""
+    cfg, model, params = dit
+    params = dict(params)
+    params["blocks"] = dict(params["blocks"])
+    k = jax.random.PRNGKey(7)
+    params["blocks"]["ada_w"] = 0.05 * jax.random.normal(
+        k, params["blocks"]["ada_w"].shape)
+    params["blocks"]["ada_b"] = 0.2 * jax.random.normal(
+        jax.random.fold_in(k, 1), params["blocks"]["ada_b"].shape)
+    params["final_w"] = (jax.random.normal(jax.random.fold_in(k, 2),
+                                           params["final_w"].shape)
+                         / cfg.d_model ** 0.5)
+    return cfg, model, params
+
+
+MERGE_FC = FastCacheConfig(merge_enabled=True, merge_ratio=0.5,
+                           merge_window=8)
+
+
+@pytest.mark.parametrize("policy", ("nocache", "fastcache", "teacache"))
+def test_merge_midflight_admission_parity(dit_real, policy):
+    """With the token-compression stage on (r=0.5), a request admitted
+    mid-flight next to warm residents still reproduces its solo merge-on
+    replay bitwise — the reducer's per-slot saliency state resets with the
+    slot like any policy state."""
+    cfg, model, params = dit_real
+    runner = CachedDiT(model, MERGE_FC, policy=policy)
+    assert runner.reducer is not None
+    eng = DiffusionServingEngine(runner, params, max_slots=2,
+                                 num_steps=STEPS, guidance_scale=4.0)
+    done = eng.run(_staggered_trace())
+    assert len(done) == 3
+    assert_solo_replay_parity(eng, model, params, policy, done, fc=MERGE_FC)
+
+
+def test_merge_mixed_plan_batch_parity(dit_real):
+    """Merge stage + heterogeneous per-request plans admitted mid-flight:
+    still bitwise-equal to the per-plan solo replay.  All plans keep
+    guidance > 1 so solo replays stay on the CFG-doubled path the engine
+    runs — with real (non-zero-eps) weights a g=1.0 solo replay takes the
+    undoubled batch shape, whose XLA:CPU gemms differ in the last bits."""
+    cfg, model, params = dit_real
+    trace = [DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0,
+                              num_steps=7, guidance_scale=4.0),
+             DiffusionRequest(rid=1, label=2, seed=11, arrival_step=2,
+                              num_steps=3, guidance_scale=3.0),
+             DiffusionRequest(rid=2, label=3, seed=12, arrival_step=3,
+                              num_steps=5, guidance_scale=2.0)]
+    runner = CachedDiT(model, MERGE_FC, policy="fastcache")
+    eng = DiffusionServingEngine(runner, params, max_slots=2,
+                                 num_steps=STEPS, guidance_scale=4.0,
+                                 max_steps=7)
+    done = eng.run(trace)
+    assert len(done) == 3
+    assert {r.rid: r.finish_step - r.admit_step for r in done} == \
+        {0: 7, 1: 3, 2: 5}
+    assert_solo_replay_parity(eng, model, params, "fastcache", done,
+                              fc=MERGE_FC)
+
+
+def test_merge_engine_counts_tokens(dit_real):
+    """The engine's metrics plane reports the realized merge ratio: total
+    kept/merged tokens and the per-slot kept/(kept+merged) accumulator."""
+    from repro.obs import MetricsCollector
+    from repro.obs import metrics as obs_metrics
+    cfg, model, params = dit_real
+    runner = CachedDiT(model, MERGE_FC, policy="fastcache")
+    coll = MetricsCollector()
+    eng = DiffusionServingEngine(runner, params, max_slots=2,
+                                 num_steps=STEPS, guidance_scale=4.0,
+                                 collector=coll)
+    eng.run(_staggered_trace())
+    h = eng.harvest_metrics()
+    kept = h["counters"][obs_metrics.TOKENS_KEPT]
+    merged = h["counters"][obs_metrics.TOKENS_MERGED]
+    # r=0.5: exactly half the grid survives on every active row-step
+    assert kept == merged > 0
+    ratio = h["per_slot"][obs_metrics.SLOT_MERGE_RATIO]
+    steps = h["per_slot"][obs_metrics.SLOT_ACTIVE_STEPS]
+    # counters only see ACTIVE rows: slot-steps x CFG pair x kept grid
+    assert kept == float(np.sum(np.asarray(steps))) * 2 \
+        * runner.reducer.reduced_tokens
+    np.testing.assert_allclose(np.asarray(ratio),
+                               0.5 * np.asarray(steps), atol=1e-5)
+    # merge-off engines carry no token metrics at all (pytree unchanged)
+    off = DiffusionServingEngine(
+        CachedDiT(model, FastCacheConfig(), policy="fastcache"), params,
+        max_slots=2, num_steps=STEPS, collector=MetricsCollector())
+    assert obs_metrics.TOKENS_KEPT not in off.metrics["counters"]
+
+
 def test_plan_exceeding_table_width_is_rejected(dit):
     cfg, model, params = dit
     eng = _engine(model, params, "nocache")        # max_steps == STEPS

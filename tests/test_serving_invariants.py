@@ -202,6 +202,81 @@ def test_sharded_diffusion_steady_state_with_audit_plane(dit):
     assert harvested["counters"][obs_metrics.AUDIT_SLOT_STEPS] > 0
 
 
+def _merge_fc():
+    return FastCacheConfig(merge_enabled=True, merge_ratio=0.5,
+                           merge_window=8)
+
+
+def test_diffusion_steady_state_with_token_merge(dit):
+    """Token-compression acceptance bar: with the merge stage on (r=0.5)
+    plus live metrics AND audit planes, the steady-state window stays
+    compile- and transfer-free — the reducer's saliency/merge/unmerge all
+    run statically shaped inside the jitted serve_step.  The post-window
+    harvest proves the token counters actually advanced."""
+    cfg, model, params = dit
+    runner = CachedDiT(model, _merge_fc(), policy="fastcache")
+    assert runner.reducer is not None
+    collector = MetricsCollector(labels={"policy": "fastcache"})
+    eng = DiffusionServingEngine(runner, params, max_slots=2,
+                                 num_steps=12, guidance_scale=4.0,
+                                 collector=collector, audit_fraction=0.5)
+    warm = DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0,
+                            num_steps=4)
+    if not eng.add_request(warm):
+        raise AssertionError("warm-up admission must land in a free slot")
+    done = []
+    while not done:
+        done += eng.step()
+    for r in (DiffusionRequest(rid=1, label=2, seed=11, arrival_step=0),
+              DiffusionRequest(rid=2, label=3, seed=12, arrival_step=0)):
+        if not eng.add_request(r):
+            raise AssertionError("resident admission must land")
+    eng.step()  # settle: one post-admission step outside the window
+
+    with steady_state_guard(eng._step, eng._reset, eng._admit):
+        for _ in range(8):
+            assert eng.step() == []
+
+    harvested = eng.harvest_metrics()
+    kept = harvested["counters"][obs_metrics.TOKENS_KEPT]
+    assert kept == harvested["counters"][obs_metrics.TOKENS_MERGED] > 0
+    assert 0 < harvested["counters"][obs_metrics.AUDIT_STEPS] \
+        < eng.model_steps
+
+
+def test_sharded_diffusion_steady_state_with_token_merge(dit):
+    """Same bar on the sharded engine (1x1 mesh): merge stage + metrics +
+    audit, zero recompiles and zero host fetches across the window."""
+    from repro.serving import ShardedDiffusionEngine, make_serving_mesh
+    cfg, model, params = dit
+    runner = CachedDiT(model, _merge_fc(), policy="fastcache")
+    collector = MetricsCollector(labels={"policy": "fastcache"})
+    eng = ShardedDiffusionEngine(runner, params, max_slots=2,
+                                 num_steps=12, guidance_scale=4.0,
+                                 mesh=make_serving_mesh(1, 1),
+                                 collector=collector, audit_fraction=0.5)
+    warm = DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0,
+                            num_steps=4)
+    if not eng.add_request(warm):
+        raise AssertionError("warm-up admission must land in a free slot")
+    done = []
+    while not done:
+        done += eng.step()
+    for r in (DiffusionRequest(rid=1, label=2, seed=11, arrival_step=0),
+              DiffusionRequest(rid=2, label=3, seed=12, arrival_step=0)):
+        if not eng.add_request(r):
+            raise AssertionError("resident admission must land")
+    eng.step()  # settle: one post-admission step outside the window
+
+    with steady_state_guard(eng._step, eng._reset, eng._admit):
+        for _ in range(8):
+            assert eng.step() == []
+
+    harvested = eng.harvest_metrics()
+    assert harvested["counters"][obs_metrics.TOKENS_KEPT] > 0
+    assert harvested["counters"][obs_metrics.AUDIT_STEPS] > 0
+
+
 def test_ar_engine_steady_state_with_collector():
     """Host-plane metrics on the AR engine (per-step token fetch is by
     design there): a live collector must not add recompiles."""

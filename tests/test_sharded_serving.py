@@ -235,6 +235,44 @@ def test_sharded_no_cfg_fast_path_matches_base(dit):
         np.testing.assert_array_equal(a[rid], b[rid], err_msg=f"rid={rid}")
 
 
+def test_sharded_merge_1x1_matches_base_and_solo(dit):
+    """Token compression rides the sharded runtime unchanged: merge-on
+    (r=0.5) sharded serving is bitwise-equal to the single-device merge-on
+    engine — including the reducer's per-slot saliency rows in the state
+    pytree — and every finished request matches its merge-on solo replay,
+    mid-flight admission included."""
+    cfg, model, params = dit
+    fc = FastCacheConfig(merge_enabled=True, merge_ratio=0.5,
+                         merge_window=8)
+    mk = lambda: CachedDiT(model, fc, policy="fastcache")
+    assert mk().reducer is not None
+    base = DiffusionServingEngine(mk(), params, max_slots=4,
+                                  num_steps=STEPS)
+    sh = ShardedDiffusionEngine(mk(), params, max_slots=4, num_steps=STEPS,
+                                mesh=make_serving_mesh(1, 1))
+    assert "tokred" in sh.state
+    _assert_same_serving(base, sh)
+    done = sh.run(_staggered_trace())
+    assert_solo_replay_parity(sh, model, params, "fastcache", done, fc=fc)
+
+
+@multi_device
+def test_sharded_merge_parity_data4(dit):
+    """Merge-on parity on the real (data=4) mesh: the reducer's
+    prev_full/have_prev rows shard over `data` with the other slot state
+    and the served latents still match the single-device engine bitwise."""
+    cfg, model, params = dit
+    fc = FastCacheConfig(merge_enabled=True, merge_ratio=0.5,
+                         merge_window=8)
+    mk = lambda: CachedDiT(model, fc, policy="fastcache")
+    base = DiffusionServingEngine(mk(), params, max_slots=4,
+                                  num_steps=STEPS)
+    sh = ShardedDiffusionEngine(mk(), params, max_slots=4, num_steps=STEPS,
+                                mesh=make_serving_mesh(4, 1))
+    assert sh.state["tokred"]["prev_full"].sharding.spec[0] == "data"
+    _assert_same_serving(base, sh)
+
+
 def test_async_admission_matches_sync(dit):
     cfg, model, params = dit
     a = _run_latents(_sharded(model, params, "fastcache", topo=(1, 1),

@@ -1,0 +1,182 @@
+"""Token-compression stage invariants: merge/unmerge round trips, static
+capacity semantics (overflow degrades speed, never shape), and the
+composability contract — every registered cache policy runs unchanged on
+the reduced grid with full-resolution outputs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import FastCacheConfig
+from repro.core import CachedDiT, POLICIES
+from repro.core import token_merge
+from repro.core.token_reduce import TokenReducer
+from repro.diffusion import sample
+from repro.models import build_model
+from tests.conftest import f32_cfg
+
+
+@pytest.fixture(scope="module")
+def dit():
+    cfg = f32_cfg(get_reduced("dit-b2"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # un-zero the adaLN-zero modulation and output head (as a trained
+    # model's would be) so eps depends on the hidden states the merge
+    # stage transforms — otherwise eps == 0 and every check is vacuous
+    k = jax.random.PRNGKey(7)
+    params["blocks"]["ada_w"] = 0.05 * jax.random.normal(
+        k, params["blocks"]["ada_w"].shape)
+    params["blocks"]["ada_b"] = 0.2 * jax.random.normal(
+        jax.random.fold_in(k, 1), params["blocks"]["ada_b"].shape)
+    params["final_w"] = (jax.random.normal(jax.random.fold_in(k, 2),
+                                           params["final_w"].shape)
+                         / cfg.d_model ** 0.5)
+    return cfg, model, params
+
+
+def _fc(ratio, window=8, **kw):
+    return FastCacheConfig(merge_enabled=True, merge_ratio=ratio,
+                           merge_window=window, **kw)
+
+
+# ---------------------------------------------------------------------------
+# merge/unmerge round-trip invariants (core/token_merge.py)
+# ---------------------------------------------------------------------------
+
+def test_ratio_one_merge_is_bitwise_identity(key):
+    """keep_ratio=1.0 short-circuits: the 'merged' tensor IS the input
+    (bitwise, not allclose) and unmerge restores it bitwise."""
+    h = jax.random.normal(key, (2, 32, 16))
+    merged, mm = token_merge.merge_tokens(h, h, window=8, keep_ratio=1.0,
+                                          k=3, lam=1.0)
+    np.testing.assert_array_equal(np.asarray(merged), np.asarray(h))
+    out = token_merge.unmerge_tokens(merged, mm, window=8, n_tokens=32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(h))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("ratio", [0.25, 0.5, 0.75])
+def test_unmerge_restores_shape_and_dtype(dtype, ratio, key):
+    b, n, d, w = 2, 32, 16, 8
+    h = jax.random.normal(key, (b, n, d)).astype(dtype)
+    hp = jax.random.normal(jax.random.fold_in(key, 1), (b, n, d)
+                           ).astype(dtype)
+    merged, mm = token_merge.merge_tokens(h, hp, window=w, keep_ratio=ratio,
+                                          k=3, lam=1.0)
+    m = token_merge.keep_count(w, ratio)
+    assert merged.shape == (b, n // w * m, d) and merged.dtype == h.dtype
+    out = token_merge.unmerge_tokens(merged, mm, window=w, n_tokens=n)
+    assert out.shape == h.shape and out.dtype == h.dtype
+    # every restored token is one of its window's cluster centers
+    mg = np.asarray(merged, np.float32).reshape(b, n // w, m, d)
+    got = np.asarray(out, np.float32).reshape(b, n // w, w, d)
+    for bi in range(b):
+        for wi in range(n // w):
+            for ti in range(w):
+                assert any(np.array_equal(got[bi, wi, ti], mg[bi, wi, ci])
+                           for ci in range(m))
+
+
+def test_merge_rejects_indivisible_window(key):
+    h = jax.random.normal(key, (1, 30, 8))
+    with pytest.raises(ValueError, match="divisible"):
+        token_merge.merge_tokens(h, h, window=8, keep_ratio=0.5, k=3,
+                                 lam=1.0)
+
+
+# ---------------------------------------------------------------------------
+# TokenReducer statics (core/token_reduce.py)
+# ---------------------------------------------------------------------------
+
+def test_capacity_overflow_deactivates_never_reshapes(dit):
+    """A ratio whose ceil(r*w) fills the window cannot shrink the grid:
+    the reducer goes statically inert (runner drops it) instead of
+    emitting a different shape — overflow degrades speed, never shape."""
+    cfg, model, params = dit
+    red = TokenReducer(model, _fc(0.99, window=8))
+    assert not red.active
+    assert red.reduced_tokens == model.num_tokens
+    runner = CachedDiT(model, _fc(0.99, window=8))
+    assert runner.reducer is None
+    assert runner.impl.n_tokens == model.num_tokens
+
+
+def test_reducer_statics_and_state_rows(dit):
+    cfg, model, params = dit
+    red = TokenReducer(model, _fc(0.5, window=8))
+    assert red.active and red.m == 4
+    assert red.reduced_tokens == model.num_tokens // 2
+    rows = red.init_rows(3)
+    assert rows["prev_full"].shape == (3, model.num_tokens, cfg.d_model)
+    assert not bool(rows["have_prev"].any())
+    _, warm = red.reduce(jnp.ones((3, model.num_tokens, cfg.d_model)), rows)
+    assert bool(warm["have_prev"].all())
+    cold = red.reset_rows(warm, jnp.array([1]))
+    assert [bool(v) for v in cold["have_prev"]] == [True, False, True]
+
+
+def test_reducer_rejects_bad_window_and_k(dit):
+    cfg, model, params = dit
+    with pytest.raises(ValueError, match="divisible"):
+        TokenReducer(model, _fc(0.5, window=5))
+    with pytest.raises(ValueError, match="out of range"):
+        TokenReducer(model, _fc(0.5, window=8, knn_k=8))
+
+
+# ---------------------------------------------------------------------------
+# CachedDiT composition: every policy, reduced grid, full-res outputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_every_policy_composes_with_merge(dit, policy):
+    cfg, model, params = dit
+    runner = CachedDiT(model, _fc(0.5, window=8), policy=policy)
+    assert runner.reducer is not None
+    assert runner.impl.n_tokens == model.num_tokens // 2
+    x, state = sample(runner, params, jax.random.PRNGKey(1), batch=2,
+                      num_steps=3, jit_step=False)
+    assert x.shape == (2, cfg.dit.image_size, cfg.dit.image_size,
+                      cfg.dit.in_channels)
+    stats = state["stats"]
+    steps = 3 * 2 * 2          # 3 steps x (cond+uncond rows) accumulated
+    assert float(jnp.sum(stats["tokens_kept"])) == \
+        runner.reducer.reduced_tokens * steps
+    assert float(jnp.sum(stats["tokens_merged"])) == \
+        (model.num_tokens - runner.reducer.reduced_tokens) * steps
+    # the per-trace MergeMap stash never leaks across steps
+    assert runner.reducer._mm is None
+
+
+def test_ratio_one_runner_is_bitwise_merge_off(dit):
+    cfg, model, params = dit
+    on = CachedDiT(model, _fc(1.0), policy="fastcache")
+    off = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    assert on.reducer is None
+    x1, _ = sample(on, params, jax.random.PRNGKey(2), batch=2, num_steps=3)
+    x0, _ = sample(off, params, jax.random.PRNGKey(2), batch=2, num_steps=3)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x0))
+
+
+def test_merge_actually_changes_output(dit):
+    """r < 1 must change the sampled latents (the stage is live, not
+    silently bypassed) on a model whose eps depends on the hiddens."""
+    cfg, model, params = dit
+    on = CachedDiT(model, _fc(0.5, window=8), policy="nocache")
+    off = CachedDiT(model, FastCacheConfig(), policy="nocache")
+    x1, _ = sample(on, params, jax.random.PRNGKey(2), batch=2, num_steps=3)
+    x0, _ = sample(off, params, jax.random.PRNGKey(2), batch=2, num_steps=3)
+    assert float(jnp.max(jnp.abs(x1 - x0))) > 0.0
+
+
+def test_audit_hidden_none_with_merge_on(dit):
+    """With merge on the cached stack lives on the reduced grid — the
+    audit plane must fall back to end-to-end eps error (audit_hidden is
+    None) instead of comparing mismatched-resolution stacks."""
+    cfg, model, params = dit
+    runner = CachedDiT(model, _fc(0.5, window=8), policy="fastcache")
+    state = runner.init_state(2)
+    assert runner.audit_hidden(state) is None
+    off = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    assert off.audit_hidden(off.init_state(2)) is not None
