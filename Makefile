@@ -1,7 +1,7 @@
 # One-command verify/bench entry points (the tier-1 command of ROADMAP.md).
 .PHONY: test test-fast test-serving test-sharded test-policies test-obs \
-	lint bench-smoke bench-serve bench bench-trajectory bench-check \
-	metrics-doc
+	test-slo lint bench-smoke bench-serve bench bench-trajectory \
+	bench-check metrics-doc
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -16,7 +16,7 @@ lint:
 # per-policy + observability suites (each has its own target/CI job)
 test-fast:
 	PYTHONPATH=src python -m pytest -x -q \
-		-m "not slow and not serving and not policies and not obs"
+		-m "not slow and not serving and not policies and not obs and not slo"
 
 # the continuous-batching engine suites (AR decode + diffusion)
 test-serving:
@@ -38,14 +38,19 @@ test-sharded:
 test-obs:
 	PYTHONPATH=src python -m pytest -x -q -m obs
 
+# the SLO control plane: priority/EDF scheduling, admission, preempt/resume
+# bitwise parity, degradation ladder, multi-replica routing
+test-slo:
+	PYTHONPATH=src python -m pytest -x -q -m slo
+
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.run --only batched_gate,decode_gate
 
 # append one per-policy perf-trajectory entry to the committed BENCH file
 # (re-runs on the same day with the same config replace, not duplicate)
 bench-trajectory:
-	PYTHONPATH=src python -m benchmarks.run --suite serving \
-		--bench-out BENCH_serving.json
+	PYTHONPATH=src python -m benchmarks.run \
+		--suite serving,serving_overload --bench-out BENCH_serving.json
 
 # CI perf-regression gate: fresh trajectory point vs the committed BENCH
 # baseline; fails on >25% model_step_ms regression for any policy

@@ -39,6 +39,10 @@ SUITES = {
                         "Sharded vs single-device diffusion serving across "
                         "(data, model) mesh topologies (8-virtual-device "
                         "CPU subprocess)"),
+    "serving_overload": ("benchmarks.serving_overload",
+                         "SLO control plane under a bursty overload trace: "
+                         "goodput vs p99 latency per cache-ratio shedding "
+                         "level, audit-measured quality cost"),
     "serving_hetero": ("benchmarks.serving_hetero",
                        "Heterogeneous sampling plans (mixed step budgets/"
                        "guidance) under Poisson arrivals: FIFO vs SJF, "
@@ -75,14 +79,20 @@ def main() -> None:
                 doc = mod.write_trajectory(args.bench_out)
                 entry = doc["entries"][-1]
                 extra = ""
+                if "metrics_overhead_pct" in entry:
+                    extra += (f", metrics overhead "
+                              f"{entry['metrics_overhead_pct']:+.2f}%")
                 if "audit_overhead_pct" in entry:
-                    extra = (f", audit overhead "
-                             f"{entry['audit_overhead_pct']:+.2f}%")
+                    extra += (f", audit overhead "
+                              f"{entry['audit_overhead_pct']:+.2f}%")
+                if "goodput_monotone" in entry:
+                    extra += (f", goodput monotone="
+                              f"{entry['goodput_monotone']}, quality "
+                              f"cost monotone="
+                              f"{entry['quality_cost_monotone']}")
                 print(f"{name}: wrote trajectory entry "
-                      f"({len(entry['points'])} points, "
-                      f"metrics overhead "
-                      f"{entry['metrics_overhead_pct']:+.2f}%"
-                      f"{extra}) -> {args.bench_out}", flush=True)
+                      f"({len(entry['points'])} points{extra}) "
+                      f"-> {args.bench_out}", flush=True)
             except Exception as e:  # noqa: BLE001
                 failures += 1
                 print(f"{name}: ERROR: {type(e).__name__}: {e}",

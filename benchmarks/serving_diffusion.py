@@ -46,7 +46,10 @@ from repro.serving import (DiffusionRequest, DiffusionServingEngine,
 def _fresh_trace(trace: List[DiffusionRequest]) -> List[DiffusionRequest]:
     """Engines mutate requests in place; each mode gets its own copies."""
     return [dataclasses.replace(r, latents=None, cache=None, admit_step=-1,
-                                finish_step=-1, done=False) for r in trace]
+                                finish_step=-1, done=False,
+                                queue_wait_steps=-1, reject_reason=None,
+                                preemptions=0, steps_done=0, snapshot=None)
+            for r in trace]
 
 
 def serve_once(model, params, trace, *, policy: str, slots: int, steps: int,
@@ -193,6 +196,7 @@ def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
                           num_classes=cfg.dit.num_classes)
     entry: Dict = {
         "date": time.strftime("%Y-%m-%d"),
+        "suite": "serving",
         "config": {"dit": dit, "requests": requests, "slots": slots,
                    "steps": steps, "guidance": guidance,
                    "poisson_rate": rate, "seed": seed, "repeats": repeats,
@@ -297,20 +301,24 @@ def trajectory(*, dit: str = "dit-b2", policies=None, requests: int = 6,
     return entry
 
 
-def _entry_key(entry: Dict) -> Tuple[str, str]:
-    """Dedupe identity for a trajectory entry: same day + same benchmark
-    config (canonical JSON) means a re-run, not a new point."""
-    return (entry.get("date", ""),
+def _entry_key(entry: Dict) -> Tuple[str, str, str]:
+    """Dedupe identity for a trajectory entry: same suite + same day +
+    same benchmark config (canonical JSON) means a re-run, not a new
+    point.  Entries written before suites shared the BENCH file carry no
+    ``suite`` field and default to ``serving``."""
+    return (entry.get("suite", "serving"), entry.get("date", ""),
             json.dumps(entry.get("config", {}), sort_keys=True))
 
 
-def write_trajectory(path: str, **kw) -> Dict:
-    """Append one ``trajectory()`` entry to the BENCH file at ``path``
-    (created if absent), preserving prior entries so the file accumulates
-    one point per PR.  Re-running on the same day with the same config
-    REPLACES that entry in place instead of appending a duplicate — the
-    trajectory stays one point per (date, config), so iterating on a PR
-    does not pad the committed history."""
+def append_entry(path: str, entry: Dict) -> Dict:
+    """Append one trajectory entry to the BENCH file at ``path`` (created
+    if absent), preserving prior entries so the file accumulates one
+    point per PR.  Re-running on the same day with the same (suite,
+    config) REPLACES that entry in place instead of appending a duplicate
+    — the trajectory stays one point per (suite, date, config), so
+    iterating on a PR does not pad the committed history.  Shared by
+    every suite that writes into the serving BENCH file (``serving``
+    here, ``serving_overload`` in benchmarks/serving_overload.py)."""
     doc = {"schema": 1, "suite": "serving", "entries": []}
     try:
         with open(path) as f:
@@ -320,17 +328,43 @@ def write_trajectory(path: str, **kw) -> Dict:
             doc = prev
     except (OSError, ValueError):
         pass
-    entry = trajectory(**kw)
     key = _entry_key(entry)
-    # drop any same-(date, config) predecessors, then append: the fresh
-    # entry is always entries[-1] and entries stay date-ordered (the key
-    # includes today's date, so only today's re-runs are replaced)
+    # drop any same-key predecessors, then append: the fresh entry is
+    # always entries[-1] among its suite and entries stay date-ordered
+    # (the key includes today's date, so only today's re-runs are
+    # replaced)
     doc["entries"] = [e for e in doc["entries"] if _entry_key(e) != key]
     doc["entries"].append(entry)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")
     return doc
+
+
+def config_kwargs(config: Dict) -> Dict:
+    """Map a committed entry's config record back to ``trajectory()``
+    keyword arguments (``poisson_rate`` -> ``rate``; ``mode`` is
+    implied)."""
+    kw = {k: config[k] for k in ("dit", "requests", "slots", "steps",
+                                 "guidance", "seed", "repeats",
+                                 "merge_ratio", "merge_window")
+          if k in config}
+    if "poisson_rate" in config:
+        kw["rate"] = config["poisson_rate"]
+    return kw
+
+
+def fresh_for_check(baseline: Dict) -> Dict:
+    """bench_check hook: measure a fresh trajectory point with the
+    committed baseline entry's config and policy set."""
+    policies = tuple(p["policy"] for p in baseline.get("points", []))
+    return trajectory(policies=policies or None,
+                      **config_kwargs(baseline.get("config", {})))
+
+
+def write_trajectory(path: str, **kw) -> Dict:
+    """Append one ``trajectory()`` entry to the BENCH file at ``path``."""
+    return append_entry(path, trajectory(**kw))
 
 
 def parse_topologies(spec: str) -> List[tuple]:

@@ -20,6 +20,21 @@ Protocol (all four methods must be jit-compatible):
       Re-arm the given sample rows (an int or index array — e.g. a serving
       slot's CFG cond/uncond pair) for a new request without disturbing
       batchmates.  Stats stay cumulative (engine-lifetime counters).
+  snapshot_rows(state, rows) -> dict
+      The preemption half of the contract: extract the given sample rows
+      into a same-treedef pytree (per-slot leaves row-sliced, replicated
+      leaves passed through) — what the serving engines checkpoint when a
+      half-denoised request is preempted.  The generic base implementation
+      walks the state with the sharding walker's ``_slot_axis`` rank rule,
+      so policies only override it when their state breaks that rule.
+  restore_rows(state, snap, rows) -> dict
+      Scatter a snapshot back into the given rows of a live state —
+      re-admission after requeue rarely lands in the donor slot, so
+      ``rows`` at restore time may differ from the snapshot's.  Must be
+      bitwise: ``restore_rows(state, snapshot_rows(state, rows), rows)``
+      is the identity (reprolint's policy-contract check enforces treedef/
+      shape/dtype preservation plus this round-trip).  Replicated leaves
+      keep the LIVE value — engine-global scalars are not rewound.
   step(params, state, x_in, c) -> (eps, state)
       One denoising-model evaluation: ``x_in`` (B, N, D) are the patch
       tokens, ``c`` the per-sample conditioning.  Every data-dependent
@@ -71,6 +86,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import statcache
+from repro.distributed.sharding import _slot_axis
 from repro.models.dit import DiTModel
 
 F32 = jnp.float32
@@ -151,6 +167,39 @@ class CachePolicy:
         like nocache/l2c)."""
         return dict(state)
 
+    def snapshot_rows(self, state: Dict, rows) -> Dict:
+        """Extract ``rows`` into a same-treedef snapshot (the preemption
+        checkpoint).  Generic: every leaf whose shape carries the sample
+        batch under the ``_slot_axis`` rank rule is row-sliced along that
+        axis; replicated leaves (the scalar ``steps``, global trackers)
+        pass through so the treedef — which the engines' jitted restore
+        programs are traced against — never changes shape."""
+        batch = self._state_batch(state)
+
+        def take(leaf):
+            axis = _slot_axis(jnp.shape(leaf), batch, self.L)
+            return leaf if axis is None else jnp.take(leaf, rows, axis=axis)
+
+        return jax.tree.map(take, state)
+
+    def restore_rows(self, state: Dict, snap: Dict, rows) -> Dict:
+        """Scatter a ``snapshot_rows`` pytree back into ``rows`` of a live
+        state.  Per-slot leaves are written bitwise; replicated leaves keep
+        the LIVE value (engine-global scalars like ``stats["steps"]`` are
+        not rewound to preemption time — they are engine-lifetime, not
+        request-scoped)."""
+        batch = self._state_batch(state)
+
+        def put(leaf, sleaf):
+            axis = _slot_axis(jnp.shape(leaf), batch, self.L)
+            if axis is None:
+                return leaf
+            if axis == 0:
+                return leaf.at[rows].set(sleaf)
+            return leaf.at[:, rows].set(sleaf)
+
+        return jax.tree.map(put, state, snap)
+
     def step(self, params, state: Dict, x_in: jax.Array, c
              ) -> Tuple[jax.Array, Dict]:
         raise NotImplementedError
@@ -178,6 +227,19 @@ class CachePolicy:
             out["tokens_kept"] = jnp.zeros((batch,), F32)
             out["tokens_merged"] = jnp.zeros((batch,), F32)
         return out
+
+    def _state_batch(self, state: Dict) -> int:
+        """The state's sample-row count, read off the mandatory ``stats``
+        block (its (B,) per-sample counters are part of the contract) —
+        the anchor the generic snapshot/restore walkers classify every
+        other leaf against."""
+        for k, v in state.get("stats", {}).items():
+            if k != "steps" and jnp.ndim(v) == 1:
+                return int(jnp.shape(v)[0])
+        raise ValueError(
+            f"policy {self.name or type(self).__name__!r}: state carries no "
+            "(B,) stats counter to infer the sample batch from — override "
+            "snapshot_rows/restore_rows or add a per-sample stats key")
 
     def _state_dtype(self) -> jnp.dtype:
         return jnp.dtype(self.model.cfg.dtype)

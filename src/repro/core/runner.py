@@ -130,6 +130,18 @@ class CachedDiT:
                 state[TOKRED_KEY], slot)
         return state
 
+    def snapshot_slot(self, state: Dict, rows) -> Dict:
+        """Extract ``rows`` into a same-treedef preemption checkpoint (see
+        ``CachePolicy.snapshot_rows``).  The generic row walker covers the
+        reducer's ``tokred`` rows too — they are batch-leading like any
+        per-slot leaf, so no reducer-specific handling is needed."""
+        return self.impl.snapshot_rows(state, rows)
+
+    def restore_slot(self, state: Dict, snap: Dict, rows) -> Dict:
+        """Scatter a ``snapshot_slot`` checkpoint back into ``rows`` of a
+        live state, bitwise; ``rows`` may differ from the donor slot's."""
+        return self.impl.restore_rows(state, snap, rows)
+
     def step(self, params, state: Dict, latents, t, labels
              ) -> Tuple[jax.Array, Dict]:
         """One denoising-model evaluation under the cache policy.

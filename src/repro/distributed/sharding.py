@@ -283,6 +283,38 @@ def serve_plan_shardings(plan, ctx: Optional[ShardingCtx] = None):
             for k, spec in serve_plan_specs(plan, ctx).items()}
 
 
+def serve_snapshot_specs(snap, ctx: Optional[ShardingCtx] = None):
+    """PartitionSpecs for a preemption snapshot — the pytree of one slot's
+    rows (cache-policy state rows, the slot's latents, its plan-table rows
+    and request-scoped accumulators) that the engines' ``_snapshot_impl``
+    extracts when a request is preempted: fully REPLICATED, every leaf.
+
+    Replication is deliberate, not a fallback: a snapshot must be
+    restorable into ANY slot of the engine (re-admission after requeue
+    rarely lands in the donor slot), and under a ``data``-sharded slot
+    batch different slots live on different mesh positions.  A snapshot
+    that kept its donor slot's shard would force a reshard inside the
+    restore program whenever the target slot lives elsewhere — replicating
+    the (single-slot-sized, tiny next to the resident batch) snapshot
+    instead makes ``_restore`` a plain scatter for every target slot, one
+    executable for all of them.  Works on concrete arrays and on the
+    ``jax.eval_shape`` structs the engines derive the snapshot layout
+    from."""
+    ctx = ctx or current_ctx()
+    ctx = _require_ctx(ctx, "serve_snapshot_specs")
+    return jax.tree.map(lambda v: P(*([None] * v.ndim)), snap)
+
+
+def serve_snapshot_shardings(snap, ctx: Optional[ShardingCtx] = None):
+    """NamedSharding tree for a preemption snapshot (see
+    ``serve_snapshot_specs``: everything replicated)."""
+    ctx = ctx or current_ctx()
+    ctx = _require_ctx(ctx, "serve_snapshot_shardings")
+    return jax.tree.map(lambda spec: NamedSharding(ctx.mesh, spec),
+                        serve_snapshot_specs(snap, ctx),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 def serve_metrics_specs(metrics, ctx: Optional[ShardingCtx] = None):
     """PartitionSpecs for the obs device-metrics pytree
     (``repro.obs.metrics.init_device_metrics``): the ``per_slot`` group's

@@ -13,7 +13,21 @@ heterogeneous: each request draws its own sampling plan (DDIM step budget,
 guidance scale) from the mix and one engine batch serves them side by side
 — the engine's plan tables are sized to the largest budget in the mix.
 ``--sched sjf`` switches the admission queue from FIFO to
-shortest-job-first (smallest step budget among arrived requests first).
+shortest-job-first (smallest step budget among arrived requests first);
+``--sched edf`` to earliest-deadline-first (needs ``--deadline-slack-mix``).
+
+SLO control plane (``src/repro/serving/slo/``): ``--priority-mix 0,1,1,2``
+and ``--deadline-slack-mix 12,20,32`` draw per-request priority classes
+and deadlines; ``--burst-rate 2.0 --burst-start 5 --burst-len 20``
+modulates the Poisson arrivals into a calm -> burst -> calm trace.
+``--slo`` serves through ``SLOScheduler`` — strict-priority queues,
+deadline-aware admission (``--on-miss reject|defer``), priority
+preemption with bitwise device-side snapshot/resume (``--no-preempt``
+disables), and, with ``--shed``, the watermark-hysteresis degradation
+controller walking the default shed-level ladder under queue pressure
+(``--shed-high``/``--shed-low`` watermarks, in ready-queue depth).  The
+summary gains per-class latency/deadline/queue-wait breakdowns and
+admission-rejection reasons.
 
 ``--no-cfg`` opts a guidance==1.0-only deployment into the static no-CFG
 fast path: single-row slots, no materialized uncond half — the model batch
@@ -62,8 +76,11 @@ from repro.launch.mesh import make_serving_mesh
 from repro.obs import (MetricsCollector, TraceRecorder, load_calibration,
                        validate_trace)
 from repro.obs import audit as obs_audit
-from repro.serving import (DiffusionServingEngine, ShardedDiffusionEngine,
-                           poisson_trace, summarize_by_steps)
+from repro.serving import (SCHED_POLICIES, AdmissionController,
+                           DegradationController, DiffusionServingEngine,
+                           ShardedDiffusionEngine, SLOScheduler,
+                           piecewise_rate, poisson_trace,
+                           summarize_by_class, summarize_by_steps)
 
 
 def percentile(xs, p):
@@ -95,9 +112,47 @@ def main() -> None:
     ap.add_argument("--guidance-mix", default="",
                     help="comma list of guidance scales; each request "
                          "draws its own (e.g. 1.0,4.0)")
-    ap.add_argument("--sched", default="fifo", choices=("fifo", "sjf"),
-                    help="admission order among arrived requests: FIFO or "
-                         "shortest-job-first")
+    ap.add_argument("--sched", default="fifo", choices=SCHED_POLICIES,
+                    help="admission order among arrived requests (within "
+                         "a priority class): FIFO, shortest-job-first, or "
+                         "earliest-deadline-first")
+    ap.add_argument("--priority-mix", default="",
+                    help="comma list of priority classes requests draw "
+                         "from uniformly (0 = most critical; empty = all "
+                         "class 0)")
+    ap.add_argument("--deadline-slack-mix", default="",
+                    help="comma list of deadline slacks (engine steps "
+                         "past arrival) requests draw from uniformly "
+                         "(empty = no deadlines)")
+    ap.add_argument("--burst-rate", type=float, default=0.0,
+                    help="burst arrival rate; with --burst-len > 0 the "
+                         "trace is calm (--rate) -> burst -> calm")
+    ap.add_argument("--burst-start", type=int, default=0,
+                    help="engine step the burst begins at")
+    ap.add_argument("--burst-len", type=int, default=0,
+                    help="burst duration in engine steps (0 = no burst)")
+    ap.add_argument("--slo", action="store_true",
+                    help="serve through the SLO control plane "
+                         "(SLOScheduler): strict-priority queues, "
+                         "deadline-aware admission, priority preemption "
+                         "with device-side snapshot/resume")
+    ap.add_argument("--on-miss", default="reject",
+                    choices=("reject", "defer"),
+                    help="--slo: what deadline-aware admission does with "
+                         "a request predicted to miss: reject it, or "
+                         "defer and re-test later")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="--slo: disable priority preemption")
+    ap.add_argument("--shed", action="store_true",
+                    help="--slo: enable the graceful-degradation "
+                         "controller (default shed-level ladder, "
+                         "watermark hysteresis on ready-queue depth)")
+    ap.add_argument("--shed-high", type=int, default=8,
+                    help="--shed: queue depth escalating one shed level "
+                         "when sustained")
+    ap.add_argument("--shed-low", type=int, default=2,
+                    help="--shed: queue depth de-escalating one shed "
+                         "level when sustained")
     ap.add_argument("--no-cfg", action="store_true",
                     help="static no-CFG fast path for guidance==1.0-only "
                          "deployments: single-row slots, no materialized "
@@ -213,14 +268,48 @@ def main() -> None:
                                         collector=collector, tracer=tracer,
                                         audit_fraction=args.audit_fraction,
                                         audit_seed=args.audit_seed)
+    priority_mix = [int(v) for v in args.priority_mix.split(",")
+                    if v.strip()]
+    slack_mix = [int(v) for v in args.deadline_slack_mix.split(",")
+                 if v.strip()]
+    rate_fn = None
+    if args.burst_len > 0:
+        if args.burst_rate <= 0.0:
+            raise SystemExit("--burst-len needs --burst-rate > 0")
+        rate_fn = piecewise_rate([(args.burst_start, args.rate),
+                                  (args.burst_start + args.burst_len,
+                                   args.burst_rate),
+                                  (10 ** 9, args.rate)])
     trace = poisson_trace(args.requests, args.rate, seed=args.seed,
                           num_classes=cfg.dit.num_classes,
                           steps_mix=steps_mix or None,
-                          guidance_mix=guidance_mix or None)
-    t0 = time.perf_counter()
-    done = engine.run(trace, lockstep=args.lockstep,
-                      sched_policy=args.sched)
-    dt = time.perf_counter() - t0
+                          guidance_mix=guidance_mix or None,
+                          rate_fn=rate_fn,
+                          priority_mix=priority_mix or None,
+                          deadline_slack_mix=slack_mix or None)
+    rejected = []
+    if args.slo:
+        if args.lockstep:
+            raise SystemExit("--slo drives continuous admission; drop "
+                             "--lockstep")
+        admission = AdmissionController(engine, on_miss=args.on_miss,
+                                        collector=collector)
+        controller = DegradationController(
+            high_watermark=args.shed_high, low_watermark=args.shed_low,
+            collector=collector) if args.shed else None
+        slo = SLOScheduler(engine, sched_policy=args.sched,
+                           admission=admission, controller=controller,
+                           preempt=not args.no_preempt,
+                           collector=collector)
+        t0 = time.perf_counter()
+        done = slo.run(trace)
+        dt = time.perf_counter() - t0
+        rejected = slo.rejected
+    else:
+        t0 = time.perf_counter()
+        done = engine.run(trace, lockstep=args.lockstep,
+                          sched_policy=args.sched)
+        dt = time.perf_counter() - t0
 
     lats = [r.latency_steps for r in done]
     summary = {
@@ -240,12 +329,28 @@ def main() -> None:
         "requests_per_s": len(done) / dt if dt else 0.0,
         "latency_steps_p50": percentile(lats, 50),
         "latency_steps_p95": percentile(lats, 95),
-        "latency_by_steps": summarize_by_steps(done),
+        "latency_by_steps": summarize_by_steps(done + rejected),
+        "by_class": summarize_by_class(done + rejected),
         "cache": engine.cache_stats(),
         "token_merge": {"ratio": args.token_merge_ratio,
                         "window": args.token_merge_window,
                         "active": runner.reducer is not None},
     }
+    if args.slo:
+        met = sum(1 for r in done
+                  if r.deadline_step is None
+                  or r.finish_step <= r.deadline_step)
+        summary["slo"] = {
+            "on_miss": args.on_miss,
+            "preempt": not args.no_preempt,
+            "shed": bool(args.shed),
+            "shed_level": (controller.level.name if controller is not None
+                           else None),
+            "rejected": len(rejected),
+            "deadline_met": met,
+            "goodput": met / len(trace) if trace else 0.0,
+            "preemptions": sum(r.preemptions for r in done),
+        }
     if collector is not None:
         collector.set_gauge("run_wall_seconds", dt)
         if args.metrics_out:

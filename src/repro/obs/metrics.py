@@ -136,6 +136,28 @@ SLOT_ACTIVE_STEPS = counter(
     "slot_active_steps", "per-slot steps carrying a live request "
     "(device-resident (S,) counter, sharded over the mesh data axis)")
 
+# -- SLO control plane (serving/slo/): host-plane only — preemption,
+# admission and deadline accounting happen in host bookkeeping between
+# engine steps, so none of these join the device pytree (DEVICE_* below
+# is unchanged and steady state stays transfer-free with the plane on).
+# Per-class queue depth and the current shed level are unregistered
+# gauges (``MetricsCollector.set_gauge``): ``queue_depth_class_<c>`` and
+# ``shed_level``.
+
+PREEMPTIONS = counter(
+    "preemptions_total", "in-flight requests checkpointed out of a slot "
+    "(device-side row snapshot) and requeued")
+RESUMES = counter(
+    "resumes_total", "preempted requests re-admitted from their snapshot")
+REJECTIONS = counter(
+    "admission_rejections_total", "requests refused admission "
+    "(deadline-unattainable or expired)")
+DEADLINE_MISSES = counter(
+    "deadline_misses_total", "requests finished after their deadline_step")
+QUEUE_DEPTH = histogram(
+    "queue_depth_ready", "eligible requests waiting at each control-plane "
+    "tick", buckets=(0, 1, 2, 4, 8, 16, 32, 64, 128))
+
 # -- token-compression plane (core/token_reduce.py) ------------------------
 
 TOKENS_MERGED = counter(

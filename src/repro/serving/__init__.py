@@ -2,7 +2,11 @@ from repro.serving.diffusion_engine import DiffusionServingEngine  # noqa: F401
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
 from repro.serving.scheduler import (SCHED_POLICIES,  # noqa: F401
                                      DiffusionRequest, RequestQueue,
-                                     SamplingPlan, poisson_trace,
+                                     SamplingPlan, piecewise_rate,
+                                     poisson_trace, summarize_by_class,
                                      summarize_by_steps)
 from repro.serving.sharded_engine import (ShardedDiffusionEngine,  # noqa: F401
                                           make_serving_mesh)
+from repro.serving.slo import (AdmissionController,  # noqa: F401
+                               CompletionPredictor, DegradationController,
+                               ReplicaRouter, ShedLevel, SLOScheduler)

@@ -198,6 +198,14 @@ class DiffusionServingEngine:
                              donate_argnums=(1, 2, 7, 8, 9))
         self._reset = jax.jit(self.runner.reset_slot, donate_argnums=(0,))
         self._admit = jax.jit(self._admit_impl, donate_argnums=(0, 1, 2, 3))
+        # preemption pair (serving/slo/): _snapshot extracts one slot's rows
+        # into fresh buffers (NOT donated — the live state keeps serving),
+        # _restore scatters a snapshot back with the same donation set as
+        # _admit.  Both take the slot index as a traced scalar, so one
+        # executable serves every slot.
+        self._snapshot = jax.jit(self._snapshot_impl)
+        self._restore = jax.jit(self._restore_impl,
+                                donate_argnums=(0, 1, 2, 3))
 
     def _zero_acc(self) -> Dict[str, jax.Array]:
         return {k: jnp.zeros((), F32) for k in self._acc_keys}
@@ -315,6 +323,42 @@ class DiffusionServingEngine:
         slot_acc = {k: v.at[slot].set(0.0) for k, v in slot_acc.items()}
         return state, x, plan, slot_acc
 
+    def _snapshot_impl(self, state, x, plan, slot_acc, rows, slot):
+        """Preemption checkpoint for one slot, extracted device-side in a
+        single dispatch: the slot's rows of the policy state pytree
+        (``snapshot_slot`` — includes ``tokred`` rows when the merge stage
+        is on), its latents, its plan-table rows and its request-scoped
+        accumulators.  Everything a re-admission needs to resume the
+        request bitwise — crucially the ``slot_acc`` row rides along so
+        the request's cache counters survive the requeue instead of being
+        re-zeroed by ``_admit``."""
+        return {
+            "state": self.runner.snapshot_slot(state, rows),
+            "x": jnp.take(x, slot, axis=0),
+            "ts": jnp.take(plan["ts"], slot, axis=0),
+            "ts_prev": jnp.take(plan["ts_prev"], slot, axis=0),
+            "guidance": jnp.take(plan["guidance"], slot, axis=0),
+            "slot_acc": {k: jnp.take(v, slot, axis=0)
+                         for k, v in slot_acc.items()},
+        }
+
+    def _restore_impl(self, state, x, plan, slot_acc, snap, rows, slot):
+        """The donated mirror of ``_admit_impl`` for resumed requests:
+        scatter a ``_snapshot_impl`` checkpoint into (possibly different)
+        slot ``slot`` — restore the policy-state rows bitwise, land the
+        half-denoised latents, the plan rows and the preserved counter
+        row.  One device program, bitwise-invisible to resident slots."""
+        state = self.runner.restore_slot(state, snap["state"], rows)
+        x = x.at[slot].set(snap["x"])
+        plan = {
+            "ts": plan["ts"].at[slot].set(snap["ts"]),
+            "ts_prev": plan["ts_prev"].at[slot].set(snap["ts_prev"]),
+            "guidance": plan["guidance"].at[slot].set(snap["guidance"]),
+        }
+        slot_acc = {k: v.at[slot].set(snap["slot_acc"][k])
+                    for k, v in slot_acc.items()}
+        return state, x, plan, slot_acc
+
     # -- host orchestration ---------------------------------------------
 
     def _slot_rows(self, s: int) -> jnp.ndarray:
@@ -384,11 +428,16 @@ class DiffusionServingEngine:
         """Admit one request into a free slot (mid-flight is fine): seed its
         latents, land its plan rows and fully reset the slot's gate/cache
         state — one donated device call, bitwise-invisible to resident
-        slots."""
+        slots.  A request carrying a preemption snapshot resumes instead:
+        its checkpointed rows are scattered into the slot bitwise (any free
+        slot, not just the donor), its step index picks up at
+        ``steps_done``, and its cache accumulators carry over."""
         free = self.free_slots()
         if not free:
             return False
         s = free[0]
+        if req.snapshot is not None:
+            return self._resume_request(req, s)
         plan = self.resolve_plan(req)
         ts_row, prev_row = plan.rows(self.max_steps, self.num_train_steps)
         self.state, self.x, self.plan, self.slot_acc = self._admit(
@@ -401,15 +450,65 @@ class DiffusionServingEngine:
         self.slot_budget[s] = plan.num_steps
         self.slot_label[s] = req.label
         req.admit_step = self.clock
+        req.queue_wait_steps = max(self.clock - req.arrival_step, 0)
         if self.collector is not None:
             self.collector.inc(obs_metrics.ADMISSIONS)
             self.collector.observe(obs_metrics.QUEUE_WAIT,
-                                   max(self.clock - req.arrival_step, 0))
+                                   req.queue_wait_steps)
         if self.tracer is not None:
             self.tracer.admit(req.rid, s, label=req.label,
                               num_steps=plan.num_steps,
                               engine_step=self.clock)
         return True
+
+    def _resume_request(self, req: DiffusionRequest, s: int) -> bool:
+        """Re-admit a preempted request from its device-side snapshot into
+        free slot ``s``.  The snapshot is consumed; the request's plan was
+        resolved at first admission, so no re-resolution (and no shedding
+        re-scaling) happens here — the resumed run must replay the original
+        plan bitwise."""
+        snap, req.snapshot = req.snapshot, None
+        self.state, self.x, self.plan, self.slot_acc = self._restore(
+            self.state, self.x, self.plan, self.slot_acc, snap,
+            self._slot_rows(s), jnp.asarray(s, jnp.int32))
+        self.slots[s] = req
+        self.slot_step[s] = req.steps_done
+        self.slot_budget[s] = req.num_steps
+        self.slot_label[s] = req.label
+        if self.collector is not None:
+            self.collector.inc(obs_metrics.RESUMES)
+        if self.tracer is not None:
+            self.tracer.admit(req.rid, s, label=req.label,
+                              num_steps=req.num_steps,
+                              engine_step=self.clock)
+        return True
+
+    def preempt(self, s: int) -> DiffusionRequest:
+        """Checkpoint slot ``s``'s in-flight request out of the engine: a
+        device-side row snapshot (policy-state rows incl. ``tokred``,
+        latents, plan rows, request-scoped accumulators) lands on the
+        request, the slot frees immediately, and the caller requeues the
+        request for later ``add_request`` re-admission — which resumes it
+        bitwise.  No host round-trip: the snapshot stays in device
+        buffers."""
+        req = self.slots[s]
+        if req is None:
+            raise ValueError(f"preempt: slot {s} holds no request")
+        req.snapshot = self._snapshot(self.state, self.x, self.plan,
+                                      self.slot_acc, self._slot_rows(s),
+                                      jnp.asarray(s, jnp.int32))
+        req.steps_done = int(self.slot_step[s])
+        req.preemptions += 1
+        self.slots[s] = None
+        self.slot_step[s] = -1
+        # same convention as completion-free: a freed slot never carries
+        # stale gate/cache state
+        self.state = self._reset(self.state, self._slot_rows(s))
+        if self.collector is not None:
+            self.collector.inc(obs_metrics.PREEMPTIONS)
+        if self.tracer is not None:
+            self.tracer.finish(req.rid, engine_step=self.clock)
+        return req
 
     def step(self) -> List[DiffusionRequest]:
         """One engine step: advance all active slots one denoising step.
@@ -459,10 +558,20 @@ class DiffusionServingEngine:
                 req = self.slots[s]
                 req.finish_step = self.clock
                 req.done = True
+                if req.cache is not None:
+                    # control-plane accounting rides the harvested counters
+                    # (plain host floats — the sharded engine's deferred
+                    # materialization passes them through unchanged)
+                    req.cache["queue_wait_steps"] = float(
+                        max(req.queue_wait_steps, 0))
+                    req.cache["preemptions"] = float(req.preemptions)
                 if self.collector is not None:
                     self.collector.inc(obs_metrics.REQUESTS_FINISHED)
                     self.collector.observe(obs_metrics.REQUEST_LATENCY,
                                            req.finish_step - req.arrival_step)
+                    if (req.deadline_step is not None
+                            and req.finish_step > req.deadline_step):
+                        self.collector.inc(obs_metrics.DEADLINE_MISSES)
                 if self.tracer is not None:
                     self.tracer.finish(req.rid, engine_step=self.clock)
                 finished.append(req)
@@ -518,7 +627,16 @@ class DiffusionServingEngine:
                 self.harvest_metrics()
         if self.collector is not None:
             self.harvest_metrics()      # run end: the standing sync point
+        self.finalize_requests(finished)
         return finished
+
+    def finalize_requests(self, finished: List[DiffusionRequest]) -> None:
+        """End-of-drive hook for whoever owns the loop (``run`` here, the
+        SLO control plane's ``SLOScheduler.run``/``ReplicaRouter.run``
+        otherwise): materialize anything a finished request still holds as
+        device references.  No-op for this engine (``_harvest`` is already
+        synchronous); the async sharded engine overrides it with its
+        single end-of-run sync."""
 
     # -- stats ----------------------------------------------------------
 

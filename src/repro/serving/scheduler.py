@@ -1,7 +1,10 @@
 """Request scheduling for the diffusion serving engine: per-request
 ``SamplingPlan``s (heterogeneous DDIM step counts + guidance scales), an
-arrival-gated queue with pluggable scheduling policies (FIFO and
-shortest-job-first), plus Poisson arrival-trace generation for benchmarks.
+arrival-gated queue with pluggable scheduling policies (FIFO,
+shortest-job-first, and earliest-deadline-first under strict priority
+classes), plus Poisson arrival-trace generation — optionally
+rate-modulated (bursty/diurnal) with priority and deadline mixes — for
+benchmarks and the SLO control plane (``serving/slo/``).
 
 Time is measured in *engine steps* (one ``serve_step`` = one clock tick):
 arrival traces, admission decisions and request latencies all live on that
@@ -21,11 +24,11 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-SCHED_POLICIES = ("fifo", "sjf")
+SCHED_POLICIES = ("fifo", "sjf", "edf")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,12 +95,28 @@ class DiffusionRequest:
     # sampling plan (None = engine default, resolved at admission)
     num_steps: Optional[int] = None
     guidance_scale: Optional[float] = None
+    # SLO metadata (serving/slo/): scheduling class (0 = highest priority;
+    # the queue serves classes strictly in order) and an absolute deadline
+    # on the engine-step clock (None = best-effort, never rejected by the
+    # deadline admission test)
+    priority: int = 0
+    deadline_step: Optional[int] = None
     # filled by the engine
     latents: Optional[np.ndarray] = None
     cache: Optional[Dict] = None      # request-scoped cache counters
     admit_step: int = -1
     finish_step: int = -1
     done: bool = False
+    # filled by the control plane: first-admission queue wait (engine
+    # steps), why admission refused the request (None = admitted), how
+    # often it was preempted, and — across a preempt/requeue cycle — the
+    # denoising progress + device-side row snapshot the engine resumes
+    # from (consumed at re-admission)
+    queue_wait_steps: int = -1
+    reject_reason: Optional[str] = None
+    preemptions: int = 0
+    steps_done: int = 0
+    snapshot: Optional[Dict] = dataclasses.field(default=None, repr=False)
 
     @property
     def latency_steps(self) -> int:
@@ -120,7 +139,16 @@ class RequestQueue:
       request overtakes an earlier arrival;
     - ``"sjf"``: shortest job first — smallest ``num_steps`` budget among
       the eligible requests (requests without an explicit plan sort as
-      longest), ties broken deterministically by ``(arrival_step, rid)``.
+      longest), ties broken deterministically by ``(arrival_step, rid)``;
+    - ``"edf"``: earliest deadline first — smallest ``deadline_step``
+      (best-effort requests without one sort last), ties broken by
+      ``(arrival_step, rid)``.
+
+    Priority classes are strict and orthogonal to the policy: eligible
+    requests are kept in one ready heap *per* ``req.priority``, and
+    ``peek/pop_arrived`` always serve the lowest-numbered non-empty class
+    — the policy only orders requests *within* a class.  Requests default
+    to class 0, so single-class workloads behave exactly as before.
 
     Internally: not-yet-arrived requests live in a list kept sorted
     *descending* by ``(arrival_step, rid)`` (``push`` is a single
@@ -140,7 +168,7 @@ class RequestQueue:
         # heap entries are (key..., seq, req): the monotonic seq breaks any
         # residual tie (e.g. a retry sharing its original's (arrival, rid))
         # before comparison ever reaches the non-orderable request object
-        self._ready: List[Tuple] = []
+        self._ready: Dict[int, List[Tuple]] = {}
         self._seq = 0
 
     def _ready_key(self, req: DiffusionRequest) -> Tuple:
@@ -148,6 +176,10 @@ class RequestQueue:
             steps = (req.num_steps if req.num_steps is not None
                      else float("inf"))
             return (steps, req.arrival_step, req.rid)
+        if self.policy == "edf":
+            deadline = (req.deadline_step if req.deadline_step is not None
+                        else float("inf"))
+            return (deadline, req.arrival_step, req.rid)
         return (req.arrival_step, req.rid)
 
     def push(self, req: DiffusionRequest) -> None:
@@ -158,23 +190,44 @@ class RequestQueue:
     def _drain(self, now: int) -> None:
         while self._pending and self._pending[-1].arrival_step <= now:
             req = self._pending.pop()
-            heapq.heappush(self._ready,
+            heapq.heappush(self._ready.setdefault(req.priority, []),
                            self._ready_key(req) + (self._seq, req))
             self._seq += 1
 
+    def _first_class(self) -> Optional[int]:
+        ready = [c for c, heap in self._ready.items() if heap]
+        return min(ready) if ready else None
+
     def peek_arrived(self, now: int) -> Optional[DiffusionRequest]:
         self._drain(now)
-        return self._ready[0][-1] if self._ready else None
+        cls = self._first_class()
+        return self._ready[cls][0][-1] if cls is not None else None
 
     def pop_arrived(self, now: int) -> Optional[DiffusionRequest]:
         self._drain(now)
-        return heapq.heappop(self._ready)[-1] if self._ready else None
+        cls = self._first_class()
+        return (heapq.heappop(self._ready[cls])[-1]
+                if cls is not None else None)
+
+    def ready_depth(self, now: int) -> int:
+        """How many eligible requests are waiting right now — the queue
+        pressure signal the degradation controller watches."""
+        self._drain(now)
+        return sum(len(heap) for heap in self._ready.values())
+
+    def depth_by_class(self, now: int) -> Dict[int, int]:
+        """Eligible-request count per priority class (non-empty classes
+        only), for the per-class queue-depth gauges."""
+        self._drain(now)
+        return {cls: len(heap)
+                for cls, heap in sorted(self._ready.items()) if heap}
 
     def __len__(self) -> int:
-        return len(self._pending) + len(self._ready)
+        return (len(self._pending)
+                + sum(len(heap) for heap in self._ready.values()))
 
     def __bool__(self) -> bool:
-        return bool(self._pending) or bool(self._ready)
+        return bool(self._pending) or any(self._ready.values())
 
 
 def _safe_percentile(values: np.ndarray, q: float,
@@ -195,37 +248,115 @@ def summarize_by_steps(done: List[DiffusionRequest]) -> Dict[str, Dict]:
     group carries them (``req.cache``).  Shared by the serving launcher's
     summary and the heterogeneous-workload benchmark.
 
-    Robust to truncated traces: unfinished requests (no ``finish_step``)
-    and requests with an unresolved plan (``num_steps`` still ``None``)
-    are excluded from the latency percentiles — a group left with no
-    finished request reports its count with ``-1.0`` percentiles rather
-    than tripping ``np.percentile`` on an empty array."""
+    Robust to truncated traces and admission rejections: unfinished
+    requests (no ``finish_step``) and requests with an unresolved plan
+    (``num_steps`` still ``None`` — e.g. rejected before admission ever
+    resolved it) are excluded from the latency percentiles, and the cache
+    aggregation reads counters tolerantly (``.get``) from the requests
+    that carry them — a group holding never-admitted requests reports
+    counts with ``-1.0`` percentiles rather than tripping
+    ``np.percentile`` on an empty array or ``KeyError`` on an empty cache
+    dict.  Rejected requests without a plan land in a ``"rejected"``
+    group so the trace total is conserved."""
     out: Dict[str, Dict] = {}
     budgets = sorted({r.num_steps for r in done
                       if r.num_steps is not None})
     for n in budgets:
         grp = [r for r in done if r.num_steps == n]
-        lats = np.array([r.latency_steps for r in grp
-                         if r.latency_steps >= 0], np.float64)
-        row = {"requests": len(grp),
-               "finished": int(lats.size),
-               "latency_steps_p50": _safe_percentile(lats, 50),
-               "latency_steps_p95": _safe_percentile(lats, 95)}
-        if grp and all(r.cache is not None for r in grp):
-            skipped = sum(r.cache["blocks_skipped"] for r in grp)
-            computed = sum(r.cache["blocks_computed"] for r in grp)
-            tot = skipped + computed
-            row["cache_ratio"] = skipped / tot if tot else 0.0
-            row["steps_reused"] = sum(r.cache["steps_reused"] for r in grp)
-        out[str(n)] = row
+        out[str(n)] = _summarize_group(grp)
+    unplanned = [r for r in done if r.num_steps is None]
+    if unplanned:
+        out["rejected"] = _summarize_group(unplanned)
     return out
+
+
+def _summarize_group(grp: List[DiffusionRequest]) -> Dict:
+    """Count/latency/cache row for one request group (a step budget in
+    ``summarize_by_steps``, a priority class in ``summarize_by_class``)."""
+    lats = np.array([r.latency_steps for r in grp
+                     if r.latency_steps >= 0], np.float64)
+    row = {"requests": len(grp),
+           "finished": int(lats.size),
+           "latency_steps_p50": _safe_percentile(lats, 50),
+           "latency_steps_p95": _safe_percentile(lats, 95)}
+    rejected = sum(1 for r in grp if r.reject_reason is not None)
+    if rejected:
+        row["rejected"] = rejected
+    cached = [r for r in grp if r.cache]
+    if cached:
+        skipped = sum(r.cache.get("blocks_skipped", 0.0) for r in cached)
+        computed = sum(r.cache.get("blocks_computed", 0.0) for r in cached)
+        tot = skipped + computed
+        row["cache_ratio"] = skipped / tot if tot else 0.0
+        row["steps_reused"] = sum(r.cache.get("steps_reused", 0.0)
+                                  for r in cached)
+    return row
+
+
+def summarize_by_class(done: List[DiffusionRequest]) -> Dict[str, Dict]:
+    """Group requests by priority class: the per-class SLO report the
+    control plane and the overload benchmark read.  Beyond the shared
+    count/latency/cache row this adds queue-wait percentiles, preemption
+    totals, deadline hit/miss counts (among finished requests that carry
+    a deadline) and a breakdown of admission-rejection reasons.  Tolerant
+    of rejected (never-admitted) requests in every field."""
+    out: Dict[str, Dict] = {}
+    for cls in sorted({r.priority for r in done}):
+        grp = [r for r in done if r.priority == cls]
+        row = _summarize_group(grp)
+        waits = np.array([r.queue_wait_steps for r in grp
+                          if r.queue_wait_steps >= 0], np.float64)
+        row["queue_wait_p50"] = _safe_percentile(waits, 50)
+        row["queue_wait_p95"] = _safe_percentile(waits, 95)
+        row["preemptions"] = int(sum(r.preemptions for r in grp))
+        with_deadline = [r for r in grp
+                         if r.deadline_step is not None
+                         and r.finish_step >= 0]
+        if with_deadline:
+            met = sum(1 for r in with_deadline
+                      if r.finish_step <= r.deadline_step)
+            row["deadline_met"] = met
+            row["deadline_missed"] = len(with_deadline) - met
+        reasons: Dict[str, int] = {}
+        for r in grp:
+            if r.reject_reason is not None:
+                reasons[r.reject_reason] = reasons.get(r.reject_reason,
+                                                       0) + 1
+        if reasons:
+            row["reject_reasons"] = reasons
+        out[str(cls)] = row
+    return out
+
+
+def piecewise_rate(segments: Sequence[Tuple[float, float]]
+                   ) -> Callable[[float], float]:
+    """``[(until_step, rate), ...] -> rate_fn`` for ``poisson_trace``:
+    the arrival rate is ``rate`` while ``t < until_step`` of the first
+    matching segment; past the last boundary the final segment's rate
+    holds forever.  The standard way to write a bursty or diurnal trace —
+    e.g. ``piecewise_rate([(20, 0.1), (60, 2.0), (1e9, 0.1)])`` is a
+    burst between steps 20 and 60."""
+    segs = sorted((float(until), float(r)) for until, r in segments)
+    if not segs:
+        raise ValueError("piecewise_rate: need at least one segment")
+
+    def rate_fn(t: float) -> float:
+        for until, r in segs:
+            if t < until:
+                return r
+        return segs[-1][1]
+
+    return rate_fn
 
 
 def poisson_trace(num_requests: int, rate: float, *,
                   seed: Optional[int] = None, key=None,
                   num_classes: int,
                   steps_mix: Optional[Sequence[int]] = None,
-                  guidance_mix: Optional[Sequence[float]] = None
+                  guidance_mix: Optional[Sequence[float]] = None,
+                  rate_fn: Optional[Callable[[float], float]] = None,
+                  priority_mix: Optional[Sequence[int]] = None,
+                  deadline_slack_mix: Optional[Sequence[int]] = None
                   ) -> List[DiffusionRequest]:
     """Poisson arrival process: exponential inter-arrival times with mean
     ``1 / rate`` (requests per engine step), floored onto the step clock.
@@ -241,7 +372,20 @@ def poisson_trace(num_requests: int, rate: float, *,
     past the class-embedding table).  ``steps_mix``/``guidance_mix`` make
     the trace heterogeneous: each request's plan is drawn uniformly from
     the mix (``None`` leaves the plan fields unset, i.e. engine defaults).
-    """
+
+    ``rate_fn`` switches the process to a rate-modulated (inhomogeneous)
+    Poisson stream — bursty or diurnal load: each inter-arrival gap is a
+    unit exponential scaled by ``1 / rate_fn(t)`` at the current arrival
+    time (``piecewise_rate`` builds the common step-function case), and
+    the positional ``rate`` is ignored.  ``priority_mix`` draws each
+    request's scheduling class uniformly from the mix;
+    ``deadline_slack_mix`` draws a *relative* slack (engine steps) and
+    stores the absolute ``deadline_step = arrival_step + slack``.
+
+    Determinism is layered: for any fixed kwarg set the trace is a pure
+    function of the seed, and the new knobs only consume random draws when
+    passed — a legacy call (no ``rate_fn``/mixes) replays its historical
+    stream bitwise."""
     if (seed is None) == (key is None):
         raise TypeError(
             "poisson_trace: pass exactly one of seed= (int) or key= "
@@ -251,15 +395,34 @@ def poisson_trace(num_requests: int, rate: float, *,
         seed = int(jax.random.randint(key, (), 0,
                                       np.iinfo(np.int32).max))
     rng = np.random.default_rng(seed)
-    gaps = rng.exponential(scale=1.0 / max(rate, 1e-9), size=num_requests)
-    arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)
-    return [DiffusionRequest(
-                rid=i,
-                label=int(rng.integers(0, num_classes)),
-                seed=int(1000 + i),
-                arrival_step=int(arrivals[i]),
-                num_steps=(int(rng.choice(np.asarray(steps_mix)))
-                           if steps_mix else None),
-                guidance_scale=(float(rng.choice(np.asarray(guidance_mix)))
-                                if guidance_mix else None))
-            for i in range(num_requests)]
+    if rate_fn is None:
+        gaps = rng.exponential(scale=1.0 / max(rate, 1e-9),
+                               size=num_requests)
+        arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)
+    else:
+        # time-rescaled inhomogeneous process: unit-exponential gaps
+        # stretched by the instantaneous rate at the running arrival time
+        t = 0.0
+        arrivals = np.empty((num_requests,), np.int64)
+        for i in range(num_requests):
+            t += rng.exponential() / max(float(rate_fn(t)), 1e-9)
+            arrivals[i] = int(np.floor(t))
+    out = []
+    for i in range(num_requests):
+        label = int(rng.integers(0, num_classes))
+        num_steps = (int(rng.choice(np.asarray(steps_mix)))
+                     if steps_mix else None)
+        guidance = (float(rng.choice(np.asarray(guidance_mix)))
+                    if guidance_mix else None)
+        priority = (int(rng.choice(np.asarray(priority_mix)))
+                    if priority_mix is not None else 0)
+        deadline = None
+        if deadline_slack_mix is not None:
+            slack = int(rng.choice(np.asarray(deadline_slack_mix)))
+            deadline = int(arrivals[i]) + slack
+        out.append(DiffusionRequest(
+            rid=i, label=label, seed=int(1000 + i),
+            arrival_step=int(arrivals[i]), num_steps=num_steps,
+            guidance_scale=guidance, priority=priority,
+            deadline_step=deadline))
+    return out

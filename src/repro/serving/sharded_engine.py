@@ -64,6 +64,7 @@ from repro.distributed.sharding import (ShardingCtx, make_rules,
                                         param_shardings,
                                         serve_metrics_shardings,
                                         serve_plan_shardings,
+                                        serve_snapshot_shardings,
                                         serve_state_shardings, spec_for,
                                         use_sharding)
 from repro.serving.diffusion_engine import DiffusionServingEngine
@@ -209,6 +210,41 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
                            self._slot_acc_sh),
             donate_argnums=(0, 1, 2, 3))
 
+        # preemption pair (serving/slo/): snapshots come out fully
+        # REPLICATED (serve_snapshot_shardings — a snapshot must be
+        # restorable into any slot, and under a data-sharded slot batch
+        # different slots live on different mesh positions; replicating
+        # the single-slot-sized checkpoint makes _restore a plain scatter
+        # for every target slot).  The layout is derived structurally via
+        # eval_shape so any policy's state snapshot places without edits.
+        def snapshot_fn(state, x, plan, slot_acc, rows, slot):
+            with use_sharding(mesh, rules):
+                return self._snapshot_impl(state, x, plan, slot_acc, rows,
+                                           slot)
+
+        def restore_fn(state, x, plan, slot_acc, snap, rows, slot):
+            with use_sharding(mesh, rules):
+                return self._restore_impl(state, x, plan, slot_acc, snap,
+                                          rows, slot)
+
+        snap_struct = jax.eval_shape(
+            self._snapshot_impl, self.state, self.x, self.plan,
+            self.slot_acc, jnp.zeros((self.rows_per_slot,), jnp.int32),
+            jnp.zeros((), jnp.int32))
+        self._snap_sh = serve_snapshot_shardings(snap_struct, ctx)
+        self._snapshot = jax.jit(
+            snapshot_fn,
+            in_shardings=(self._state_sh, self._x_sh, self._plan_sh,
+                          self._slot_acc_sh, rep, rep),
+            out_shardings=self._snap_sh)
+        self._restore = jax.jit(
+            restore_fn,
+            in_shardings=(self._state_sh, self._x_sh, self._plan_sh,
+                          self._slot_acc_sh, self._snap_sh, rep, rep),
+            out_shardings=(self._state_sh, self._x_sh, self._plan_sh,
+                           self._slot_acc_sh),
+            donate_argnums=(0, 1, 2, 3))
+
     # -- async admission / harvest --------------------------------------
 
     def _staged_noise(self, req: DiffusionRequest) -> jax.Array:
@@ -235,22 +271,18 @@ class ShardedDiffusionEngine(DiffusionServingEngine):
             self.slots[s].cache = {k: v[s]
                                    for k, v in self.slot_acc.items()}
 
-    def run(self, requests: Union[List[DiffusionRequest], RequestQueue],
-            *, lockstep: bool = False, sched_policy: str = "fifo",
-            max_engine_steps: int = 100_000) -> List[DiffusionRequest]:
-        finished = super().run(requests, lockstep=lockstep,
-                               sched_policy=sched_policy,
-                               max_engine_steps=max_engine_steps)
-        if self.async_admission:
-            # the run's single sync point: fetch all deferred latents and
-            # request-scoped cache counters
-            for r in finished:
-                if isinstance(r.latents, jax.Array):
-                    r.latents = np.asarray(r.latents).copy()
-                if r.cache is not None:
-                    r.cache = {k: float(np.asarray(v))
-                               for k, v in r.cache.items()}
-        return finished
+    def finalize_requests(self, finished: List[DiffusionRequest]) -> None:
+        # the drive loop's single sync point (run end — both engine.run
+        # and the SLO control plane's loops call it): fetch all deferred
+        # latents and request-scoped cache counters
+        if not self.async_admission:
+            return
+        for r in finished:
+            if isinstance(r.latents, jax.Array):
+                r.latents = np.asarray(r.latents).copy()
+            if r.cache is not None:
+                r.cache = {k: float(np.asarray(v))
+                           for k, v in r.cache.items()}
 
     # -- numerics self-check --------------------------------------------
 

@@ -1,0 +1,34 @@
+"""SLO-aware serving control plane, layered over the diffusion engines.
+
+Host-side only — every decision here (admission, preemption, shedding,
+routing) is made from host bookkeeping between engine steps, and the only
+device work it triggers goes through the engines' existing jitted entry
+points (``_admit``, ``_reset``) plus the preemption pair
+(``_snapshot``/``_restore``).  Steady state with the plane enabled is
+therefore exactly as compile- and transfer-free as without it, which
+``tests/test_serving_invariants.py`` pins.
+
+The pieces compose bottom-up:
+
+- ``admission``: ``CompletionPredictor`` (finish-step prediction from the
+  per-slot plan tables + a measured ``model_step_ms`` EMA) and
+  ``AdmissionController`` (reject/defer requests whose predicted
+  completion misses their deadline);
+- ``controller``: ``ShedLevel`` ladders + ``DegradationController``
+  (graceful degradation under sustained queue pressure: shrink step
+  budgets per priority class; the chi^2 ``alpha`` knob on each level
+  documents the cache-threshold half, applied per-engine at construction
+  since gate thresholds are trace-time constants);
+- ``plane``: ``SLOScheduler`` — the per-engine tick loop (observe
+  pressure -> shed -> preempt for priority -> admit -> step);
+- ``router``: ``ReplicaRouter`` — join-shortest-queue + class affinity
+  across N engine instances.
+"""
+from repro.serving.slo.admission import (AdmissionController,  # noqa: F401
+                                         CompletionPredictor,
+                                         REASON_EXPIRED,
+                                         REASON_UNATTAINABLE)
+from repro.serving.slo.controller import (DEFAULT_SHED_LEVELS,  # noqa: F401
+                                          DegradationController, ShedLevel)
+from repro.serving.slo.plane import SLOScheduler  # noqa: F401
+from repro.serving.slo.router import ReplicaRouter  # noqa: F401

@@ -1,0 +1,127 @@
+"""``SLOScheduler``: the per-engine control-plane tick loop.
+
+One ``tick()`` is: observe queue pressure (degradation controller +
+per-class depth gauges) -> preempt for priority (a waiting
+higher-priority request evicts the lowest-priority resident with the
+most remaining work, via the engine's device-side snapshot/requeue) ->
+deadline-aware admission (``AdmissionController``) -> one engine step
+(timed, feeding the predictor's ``model_step_ms`` EMA).
+
+Everything above the engine call is host bookkeeping; with an empty
+queue a tick degenerates to exactly ``engine.step()``, which is why
+steady state with the control plane enabled stays compile- and
+transfer-free (pinned in ``tests/test_serving_invariants.py``).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Union
+
+from repro.serving.scheduler import DiffusionRequest, RequestQueue
+from repro.serving.slo.admission import AdmissionController
+from repro.serving.slo.controller import DegradationController
+
+
+class SLOScheduler:
+    """Drive one engine (single-device or sharded) under the SLO control
+    plane.  ``run()`` is the drop-in replacement for ``engine.run()``;
+    ``tick()`` is the composable unit the ``ReplicaRouter`` drives."""
+
+    def __init__(self, engine, *, sched_policy: str = "edf",
+                 admission: Optional[AdmissionController] = None,
+                 controller: Optional[DegradationController] = None,
+                 preempt: bool = True, preempt_min_remaining: int = 2,
+                 collector=None):
+        self.engine = engine
+        self.sched_policy = sched_policy
+        self.collector = (collector if collector is not None
+                          else engine.collector)
+        self.admission = (admission if admission is not None
+                          else AdmissionController(
+                              engine, collector=self.collector))
+        self.controller = controller
+        self.preempt_enabled = preempt
+        # never evict a resident about to finish: the snapshot/requeue
+        # round trip would cost more slot-steps than it frees
+        self.preempt_min_remaining = int(preempt_min_remaining)
+
+    @property
+    def rejected(self) -> List[DiffusionRequest]:
+        return self.admission.rejected
+
+    # -- preemption policy ----------------------------------------------
+
+    def _maybe_preempt(self, queue: RequestQueue) -> None:
+        """Evict a low-priority resident when a strictly-higher-priority
+        request waits with no free slot.  Victim choice: numerically
+        largest priority among residents below the head's class, most
+        remaining work as tie-break (the cheapest progress to set aside).
+        The victim requeues with its device-side snapshot and resumes
+        bitwise later; resumed requests themselves never trigger another
+        preemption (they wait for a natural free slot, so two requests
+        can't ping-pong evicting each other)."""
+        eng = self.engine
+        if not self.preempt_enabled or eng.free_slots():
+            return
+        head = queue.peek_arrived(eng.clock)
+        if head is None or head.snapshot is not None:
+            return
+        victims = []
+        for s in range(eng.S):
+            req = eng.slots[s]
+            if req is None or req.priority <= head.priority:
+                continue
+            remaining = int(eng.slot_budget[s]) - int(eng.slot_step[s])
+            if remaining < self.preempt_min_remaining:
+                continue
+            victims.append((req.priority, remaining, s))
+        if not victims:
+            return
+        _, _, s = max(victims)
+        queue.push(eng.preempt(s))
+
+    # -- tick / run ------------------------------------------------------
+
+    def tick(self, queue: RequestQueue) -> List[DiffusionRequest]:
+        """One control-plane tick + one engine step.  Returns the
+        requests that finished on this step."""
+        eng = self.engine
+        if self.controller is not None:
+            self.controller.observe(queue.ready_depth(eng.clock))
+        if self.collector is not None:
+            for cls, depth in queue.depth_by_class(eng.clock).items():
+                self.collector.set_gauge(f"queue_depth_class_{cls}",
+                                         float(depth))
+        self._maybe_preempt(queue)
+        self.admission.admit_ready(queue, shed=self.controller)
+        t0 = time.perf_counter()
+        finished = eng.step()
+        self.admission.predictor.observe_step_ms(
+            (time.perf_counter() - t0) * 1e3)
+        return finished
+
+    def run(self, requests: Union[List[DiffusionRequest], RequestQueue],
+            *, max_engine_steps: int = 100_000
+            ) -> List[DiffusionRequest]:
+        """Drive a whole trace under the control plane.  Returns finished
+        requests; admission-rejected ones accumulate on ``.rejected``
+        (never admitted, so they carry ``reject_reason`` but no latents).
+        """
+        eng = self.engine
+        queue = (requests if isinstance(requests, RequestQueue)
+                 else RequestQueue(list(requests),
+                                   policy=self.sched_policy))
+        finished: List[DiffusionRequest] = []
+        window = (self.collector.window_steps
+                  if self.collector is not None else None)
+        while (queue or self.admission.pending_deferred
+               or any(r is not None for r in eng.slots)):
+            if eng.clock >= max_engine_steps:
+                break
+            finished.extend(self.tick(queue))
+            if window and eng.clock % window == 0:
+                eng.harvest_metrics()
+        if self.collector is not None:
+            eng.harvest_metrics()
+        eng.finalize_requests(finished)
+        return finished

@@ -149,6 +149,57 @@ def test_runtime_policy_validation_catches_bad_policy():
         del policies_base._REGISTRY["_lintprobe"]
 
 
+def test_runtime_policy_validation_catches_bad_preemption_contract():
+    """The snapshot/restore half of the runtime contract: a policy whose
+    snapshot drops a key (treedef change) or whose restore silently
+    perturbs a row leaf (round trip not the bitwise identity) must be
+    flagged — either failure corrupts preempted requests on resume."""
+    import jax.numpy as jnp
+    from repro.core.policies import base as policies_base
+    from tools.reprolint.checks.policy_contract import validate_registry
+
+    @policies_base.register("_lintprobe_snapdrop")
+    class _Drop(policies_base.CachePolicy):
+        def init_state(self, batch):
+            return {"payload": jnp.zeros((batch, 4), jnp.float32),
+                    "stats": self.init_stats(batch)}
+
+        def step(self, params, state, x_in, c):
+            return x_in, state
+
+        def snapshot_rows(self, state, rows):
+            snap = dict(super().snapshot_rows(state, rows))
+            del snap["payload"]          # treedef no longer matches
+            return snap
+
+    @policies_base.register("_lintprobe_corrupt")
+    class _Corrupt(policies_base.CachePolicy):
+        def init_state(self, batch):
+            return {"payload": jnp.zeros((batch, 4), jnp.float32),
+                    "stats": self.init_stats(batch)}
+
+        def step(self, params, state, x_in, c):
+            return x_in, state
+
+        def restore_rows(self, state, snap, rows):
+            out = dict(super().restore_rows(state, snap, rows))
+            out["payload"] = out["payload"] + 1.0    # silent corruption
+            return out
+
+    try:
+        diags = validate_registry(str(REPO / "src"))
+        drop = [d for d in diags if "_lintprobe_snapdrop" in d.message]
+        corrupt = [d for d in diags if "_lintprobe_corrupt" in d.message]
+        assert any("snapshot_rows changed the state treedef" in d.message
+                   for d in drop), " | ".join(d.message for d in drop)
+        assert any("bitwise identity" in d.message
+                   and "payload" in d.message for d in corrupt), \
+            " | ".join(d.message for d in corrupt)
+    finally:
+        del policies_base._REGISTRY["_lintprobe_snapdrop"]
+        del policies_base._REGISTRY["_lintprobe_corrupt"]
+
+
 def test_cli_exit_codes():
     env = dict(os.environ, PYTHONPATH="src")
     bad = subprocess.run(

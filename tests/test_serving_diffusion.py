@@ -480,8 +480,10 @@ def test_summarize_by_steps_tolerates_empty_and_unfinished_groups():
     """Regression: truncated traces used to trip ``np.percentile`` on an
     empty array.  Empty input -> {}; a group whose every request was cut
     off unfinished reports its count with -1.0 sentinel percentiles; and
-    requests with an unresolved plan (num_steps=None) are excluded instead
-    of materializing a 'None' group."""
+    requests with an unresolved plan (num_steps=None — admission refused
+    them before the engine ever resolved it) land in a ``"rejected"``
+    group so the trace total is conserved, instead of materializing a
+    'None' group or vanishing."""
     assert summarize_by_steps([]) == {}
 
     cut = DiffusionRequest(rid=0, label=0, arrival_step=0, num_steps=8)
@@ -489,7 +491,9 @@ def test_summarize_by_steps_tolerates_empty_and_unfinished_groups():
     ok.finish_step = 10
     unresolved = DiffusionRequest(rid=2, label=0, arrival_step=0)
     out = summarize_by_steps([cut, ok, unresolved])
-    assert set(out) == {"4", "8"}
+    assert set(out) == {"4", "8", "rejected"}
+    assert out["rejected"]["requests"] == 1
+    assert out["rejected"]["finished"] == 0
     assert out["8"] == {"requests": 1, "finished": 0,
                         "latency_steps_p50": -1.0,
                         "latency_steps_p95": -1.0}

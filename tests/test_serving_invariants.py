@@ -277,6 +277,62 @@ def test_sharded_diffusion_steady_state_with_token_merge(dit):
     assert harvested["counters"][obs_metrics.AUDIT_STEPS] > 0
 
 
+def test_diffusion_steady_state_with_slo_plane(dit):
+    """Acceptance bar for the SLO control plane: once every executable is
+    warm — including one full preempt/resume cycle — a control-plane tick
+    (pressure observation, shedding hysteresis, preemption scan,
+    deadline admission, engine step) is exactly as compile- and
+    transfer-free as a bare ``engine.step()``, and the preemption pair
+    itself (``_snapshot``/``_restore``) stays compile- and fetch-free
+    when exercised INSIDE the guarded window: the snapshot is device
+    buffers end to end."""
+    from repro.serving import DegradationController, RequestQueue, \
+        SLOScheduler
+
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    eng = DiffusionServingEngine(runner, params, max_slots=2,
+                                 num_steps=16, guidance_scale=4.0)
+    sched = SLOScheduler(eng, sched_policy="edf",
+                         controller=DegradationController())
+    queue = RequestQueue(policy="edf")
+
+    # warm _admit/_step/_reset with a short request driven through ticks
+    queue.push(DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0,
+                                num_steps=4))
+    done = []
+    while not done:
+        done += sched.tick(queue)
+
+    # warm _snapshot/_restore with one preempt/resume cycle
+    residents = [DiffusionRequest(rid=1, label=2, seed=11, arrival_step=0,
+                                  num_steps=16),
+                 DiffusionRequest(rid=2, label=3, seed=12, arrival_step=0,
+                                  num_steps=16)]
+    for r in residents:
+        queue.push(r)
+    sched.tick(queue)                    # admits both, steps once
+    queue.push(eng.preempt(0))
+    sched.tick(queue)                    # resumes from the snapshot
+
+    # 16-step budgets with <=4 steps consumed: an 8-tick window sees no
+    # completions, so every tick must be pure warm device compute — even
+    # the one that preempts a resident and the one that resumes it.
+    with steady_state_guard(eng._step, eng._reset, eng._admit,
+                            eng._snapshot, eng._restore):
+        for i in range(8):
+            finished = sched.tick(queue)
+            assert finished == [], \
+                f"no request should finish inside the window: {finished}"
+            if i == 2:
+                queue.push(eng.preempt(1))
+
+    while len(done) < 3:
+        done += sched.tick(queue)
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert sum(r.preemptions for r in done) == 2
+
+
 def test_ar_engine_steady_state_with_collector():
     """Host-plane metrics on the AR engine (per-step token fetch is by
     design there): a live collector must not add recompiles."""

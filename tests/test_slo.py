@@ -1,0 +1,379 @@
+"""SLO control-plane suite (`make test-slo`).
+
+Pins the serving-under-load contract end to end: priority classes + EDF
+ordering on the request queue, rate-modulated (bursty) trace generation,
+deadline-aware admission (reject and defer), preempt/resume BITWISE
+parity on both engines (the device-side row snapshot must make an
+interrupted request indistinguishable from an uninterrupted one),
+degradation-ladder hysteresis, and the multi-replica router.
+
+The parity tests reuse ``assert_solo_replay_parity``: a request that was
+preempted mid-flight, parked on the queue, and resumed into a (possibly
+different) slot must still match its solo ``sample()`` replay bitwise —
+the strongest statement that nothing about the snapshot/restore round
+trip or the co-resident traffic leaked into its denoising trajectory.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import FastCacheConfig
+from repro.core import CachedDiT
+from repro.models import build_model
+from repro.serving import (AdmissionController, DegradationController,
+                           DiffusionRequest, DiffusionServingEngine,
+                           ReplicaRouter, RequestQueue,
+                           ShardedDiffusionEngine, ShedLevel, SLOScheduler,
+                           make_serving_mesh, piecewise_rate, poisson_trace,
+                           summarize_by_class, summarize_by_steps)
+from repro.serving.slo import REASON_EXPIRED, REASON_UNATTAINABLE
+from tests.conftest import assert_solo_replay_parity, f32_cfg
+
+pytestmark = pytest.mark.slo
+
+STEPS = 8
+
+
+@pytest.fixture(scope="module")
+def dit():
+    cfg = f32_cfg(get_reduced("dit-b2"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, *, slots=2, fc=None, policy="fastcache"):
+    runner = CachedDiT(model, fc or FastCacheConfig(), policy=policy)
+    return DiffusionServingEngine(runner, params, max_slots=slots,
+                                  num_steps=STEPS, guidance_scale=4.0)
+
+
+def _drain(eng, done, target):
+    guard = 0
+    while len(done) < target:
+        done += eng.step()
+        guard += 1
+        if guard > 500:
+            raise AssertionError(f"engine stalled: {len(done)}/{target}")
+    return done
+
+
+# -------------------------------------------------------------------------
+# trace generation: piecewise rates, bursty mode, priority/deadline mixes
+# -------------------------------------------------------------------------
+
+def test_piecewise_rate_boundaries():
+    fn = piecewise_rate([(5, 0.5), (10, 2.0), (1e9, 0.25)])
+    assert fn(0.0) == 0.5
+    assert fn(4.999) == 0.5
+    assert fn(5.0) == 2.0      # boundaries belong to the NEXT segment
+    assert fn(9.0) == 2.0
+    assert fn(10.0) == 0.25
+    assert fn(1e6) == 0.25
+
+
+def test_poisson_trace_deterministic_and_legacy_fields():
+    a = poisson_trace(12, 0.5, seed=7, num_classes=10)
+    b = poisson_trace(12, 0.5, seed=7, num_classes=10)
+    assert [(r.arrival_step, r.label, r.seed) for r in a] \
+        == [(r.arrival_step, r.label, r.seed) for r in b]
+    # a legacy call (no SLO knobs) leaves the SLO metadata at defaults
+    assert all(r.priority == 0 and r.deadline_step is None for r in a)
+
+    mix = poisson_trace(12, 0.5, seed=7, num_classes=10,
+                        priority_mix=[0, 1, 1, 2],
+                        deadline_slack_mix=[12, 20, 32])
+    assert {r.priority for r in mix} <= {0, 1, 2}
+    for r in mix:
+        assert r.deadline_step is not None
+        assert r.deadline_step - r.arrival_step in (12, 20, 32)
+    # the new knobs draw EXTRA randomness; arrivals replay the legacy
+    # stream bitwise (same rng consumption order up to each request)
+    assert [r.arrival_step for r in mix] == [r.arrival_step for r in a]
+
+
+def test_bursty_trace_compresses_arrivals():
+    base, burst = 0.1, 2.0
+    fn = piecewise_rate([(10, base), (30, burst), (1e9, base)])
+    tr = poisson_trace(24, 0.0, seed=3, num_classes=10, rate_fn=fn)
+    assert [r.arrival_step for r in tr] \
+        == [r.arrival_step for r in poisson_trace(24, 0.0, seed=3,
+                                                  num_classes=10,
+                                                  rate_fn=fn)]
+    arrivals = np.array([r.arrival_step for r in tr])
+    in_burst = ((arrivals >= 10) & (arrivals < 30)).sum()
+    # 20 steps at 2.0 req/step dominate the stream: most arrivals land
+    # inside the burst window even though it covers a sliver of the axis
+    assert in_burst >= len(tr) // 2
+    assert (np.diff(arrivals) >= 0).all()
+
+
+# -------------------------------------------------------------------------
+# queue ordering: EDF within a class, strict priority across classes
+# -------------------------------------------------------------------------
+
+def _req(rid, *, arrival=0, priority=0, deadline=None, steps=None):
+    return DiffusionRequest(rid=rid, label=1, seed=rid, arrival_step=arrival,
+                            num_steps=steps, priority=priority,
+                            deadline_step=deadline)
+
+
+def test_edf_orders_by_deadline_and_parks_best_effort_last():
+    q = RequestQueue([_req(0, deadline=30), _req(1, deadline=10),
+                      _req(2), _req(3, deadline=20)], policy="edf")
+    order = [q.pop_arrived(0).rid for _ in range(4)]
+    assert order == [1, 3, 0, 2]     # best-effort (no deadline) drains last
+
+
+def test_priority_classes_are_strict():
+    q = RequestQueue([_req(0, priority=2, deadline=5),
+                      _req(1, priority=0, deadline=50),
+                      _req(2, priority=1, deadline=1)], policy="edf")
+    order = [q.pop_arrived(0).rid for _ in range(3)]
+    # class 0 first even though its deadline is the loosest
+    assert order == [1, 2, 0]
+    # not-yet-arrived requests stay invisible to pop/peek/depth
+    q2 = RequestQueue([_req(5, arrival=10)], policy="edf")
+    assert q2.pop_arrived(0) is None
+    assert q2.ready_depth(0) == 0
+    assert q2.ready_depth(10) == 1
+
+
+# -------------------------------------------------------------------------
+# summaries must account for rejected requests as a first-class outcome
+# -------------------------------------------------------------------------
+
+def test_summaries_with_rejections():
+    done = _req(0, steps=8)
+    done.finish_step, done.queue_wait_steps = 12, 2
+    rej = _req(1, priority=1, deadline=4)    # plan never resolved
+    rej.reject_reason = REASON_UNATTAINABLE
+    by_steps = summarize_by_steps([done, rej])
+    assert by_steps["rejected"]["requests"] == 1
+    assert by_steps["8"]["requests"] == 1
+    by_class = summarize_by_class([done, rej])
+    assert by_class["0"]["finished"] == 1
+    assert by_class["1"]["finished"] == 0
+    assert by_class["1"]["reject_reasons"] == {REASON_UNATTAINABLE: 1}
+
+
+# -------------------------------------------------------------------------
+# degradation ladder: validation + watermark/patience hysteresis
+# -------------------------------------------------------------------------
+
+def test_shed_level_validation():
+    with pytest.raises(ValueError):
+        ShedLevel("bad", steps_scale=0.0)
+    with pytest.raises(ValueError):
+        ShedLevel("bad", steps_scale=1.5)
+    with pytest.raises(ValueError):
+        ShedLevel("bad", capacity_scale=0.0)
+    with pytest.raises(ValueError):
+        DegradationController(())
+    with pytest.raises(ValueError):
+        DegradationController(high_watermark=2, low_watermark=2)
+
+
+def test_degradation_hysteresis_walk():
+    ctl = DegradationController(
+        (ShedLevel("nominal"), ShedLevel("shed-1", steps_scale=0.5)),
+        high_watermark=4, low_watermark=1, patience=3)
+    for _ in range(2):
+        ctl.observe(10)
+    assert ctl.level.name == "nominal"   # patience not yet reached
+    ctl.observe(2)                       # mid-band tick resets the streak
+    for _ in range(2):
+        ctl.observe(10)
+    assert ctl.level.name == "nominal"
+    ctl.observe(10)
+    assert ctl.level.name == "shed-1"    # 3 sustained high ticks escalate
+    for _ in range(3):
+        ctl.observe(0)
+    assert ctl.level.name == "nominal"   # 3 sustained low ticks recover
+
+
+def test_scale_request_protects_priority_classes():
+    ctl = DegradationController(
+        (ShedLevel("shed", steps_scale=0.5, min_priority=1),),
+        min_steps=2)
+    protected = _req(0, priority=0, steps=8)
+    ctl.scale_request(protected, default_steps=STEPS)
+    assert protected.num_steps == 8
+    shed = _req(1, priority=1, steps=8)
+    ctl.scale_request(shed, default_steps=STEPS)
+    assert shed.num_steps == 4
+    floored = _req(2, priority=2, steps=3)
+    ctl.scale_request(floored, default_steps=STEPS)
+    assert floored.num_steps == 2        # min_steps floor
+
+
+# -------------------------------------------------------------------------
+# preempt/resume bitwise parity (the tentpole contract)
+# -------------------------------------------------------------------------
+
+def _preempt_resume_run(eng):
+    """Admit two requests, preempt one mid-flight next to its resident,
+    let time pass, resume it, and run everything to completion."""
+    a = DiffusionRequest(rid=0, label=1, seed=10, arrival_step=0,
+                         num_steps=STEPS, guidance_scale=4.0)
+    b = DiffusionRequest(rid=1, label=2, seed=11, arrival_step=0,
+                         num_steps=STEPS, guidance_scale=4.0)
+    assert eng.add_request(a) and eng.add_request(b)
+    done = []
+    for _ in range(3):
+        done += eng.step()
+    victim_slot = eng.slots.index(b)
+    victim = eng.preempt(victim_slot)
+    assert victim is b and b.steps_done == 3 and b.preemptions == 1
+    assert eng.slots[victim_slot] is None
+    for _ in range(2):                   # resident keeps running solo
+        done += eng.step()
+    assert eng.add_request(b)            # consumes the snapshot, resumes
+    assert b.snapshot is None
+    done = _drain(eng, done, 2)
+    assert sorted(r.rid for r in done) == [0, 1]
+    eng.finalize_requests(done)
+    return done
+
+
+def test_preempt_resume_solo_replay_parity(dit):
+    cfg, model, params = dit
+    eng = _engine(model, params)
+    done = _preempt_resume_run(eng)
+    assert_solo_replay_parity(eng, model, params, "fastcache", done)
+
+
+def test_preempt_resume_parity_with_token_merge(dit):
+    """Merge-on: the snapshot must carry the reducer's ``tokred`` rows too
+    — a resumed request's merge bookkeeping picks up exactly where the
+    preempted run left it."""
+    cfg, model, params = dit
+    fc = FastCacheConfig(merge_enabled=True, merge_ratio=0.5,
+                         merge_window=8)
+    eng = _engine(model, params, fc=fc)
+    done = _preempt_resume_run(eng)
+    assert_solo_replay_parity(eng, model, params, "fastcache", done, fc=fc)
+
+
+def test_preempt_resume_parity_sharded(dit):
+    """Same contract on the sharded engine: the snapshot is a pytree of
+    PLACED device buffers and the restore lands it back under the same
+    shardings (1x1 mesh here — CPU XLA miscompiles model>1 collectives,
+    which the engine's numerics self-check refuses)."""
+    cfg, model, params = dit
+    runner = CachedDiT(model, FastCacheConfig(), policy="fastcache")
+    eng = ShardedDiffusionEngine(runner, params, max_slots=2,
+                                 num_steps=STEPS, guidance_scale=4.0,
+                                 mesh=make_serving_mesh(1, 1))
+    done = _preempt_resume_run(eng)
+    assert_solo_replay_parity(eng, model, params, "fastcache", done)
+
+
+# -------------------------------------------------------------------------
+# deadline-aware admission: reject and defer
+# -------------------------------------------------------------------------
+
+def test_admission_rejects_expired_and_unattainable(dit):
+    cfg, model, params = dit
+    eng = _engine(model, params, slots=1)
+    adm = AdmissionController(eng, on_miss="reject")
+    queue = RequestQueue([
+        _req(0, steps=STEPS, deadline=9),            # fills the only slot
+        _req(1, steps=STEPS, deadline=10),           # finish ~16 > 10
+        _req(2, steps=STEPS, deadline=1),            # hopeless even solo
+    ], policy="edf")
+    admitted = adm.admit_ready(queue)
+    assert [r.rid for r in admitted] == [0]
+    reasons = {r.rid: r.reject_reason for r in adm.rejected}
+    assert reasons == {2: REASON_EXPIRED, 1: REASON_UNATTAINABLE}
+    assert len(queue) == 0
+
+
+def test_admission_defer_parks_without_touching_arrival(dit):
+    cfg, model, params = dit
+    eng = _engine(model, params, slots=1)
+    adm = AdmissionController(eng, on_miss="defer", defer_steps=2,
+                              max_defers=1)
+    blocker = _req(0, steps=STEPS, deadline=8)   # EDF-first, feasible
+    hopeful = _req(1, steps=STEPS, deadline=10)
+    queue = RequestQueue([blocker, hopeful], policy="edf")
+    adm.admit_ready(queue)
+    assert adm.pending_deferred == 1 and not adm.rejected
+    assert hopeful.arrival_step == 0     # latency accounting untouched
+    eng.step()                           # clock reaches the retry step
+    eng.step()
+    adm.admit_ready(queue)               # defer budget exhausted -> reject
+    assert adm.pending_deferred == 0
+    assert [r.rid for r in adm.rejected] == [1]
+    assert hopeful.reject_reason == REASON_UNATTAINABLE
+
+
+# -------------------------------------------------------------------------
+# SLOScheduler end to end: shedding + priority preemption + parity
+# -------------------------------------------------------------------------
+
+def test_slo_scheduler_priority_preemption_end_to_end(dit):
+    cfg, model, params = dit
+    eng = _engine(model, params, slots=2)
+    trace = [
+        DiffusionRequest(rid=0, label=1, seed=20, arrival_step=0,
+                         num_steps=STEPS, guidance_scale=4.0, priority=2),
+        DiffusionRequest(rid=1, label=2, seed=21, arrival_step=0,
+                         num_steps=STEPS, guidance_scale=4.0, priority=2),
+        DiffusionRequest(rid=2, label=3, seed=22, arrival_step=2,
+                         num_steps=4, guidance_scale=4.0, priority=0,
+                         deadline_step=12),
+    ]
+    sched = SLOScheduler(eng, sched_policy="edf")
+    done = sched.run(trace)
+    assert sorted(r.rid for r in done) == [0, 1, 2] and not sched.rejected
+    assert sum(r.preemptions for r in done) >= 1
+    urgent = next(r for r in done if r.rid == 2)
+    assert urgent.preemptions == 0       # the preemptOR, not a victim
+    assert urgent.finish_step <= urgent.deadline_step
+    assert all(r.queue_wait_steps >= 0 for r in done)
+    # the interrupted low-priority runs still replay solo bitwise
+    assert_solo_replay_parity(eng, model, params, "fastcache", done)
+
+
+# -------------------------------------------------------------------------
+# multi-replica router
+# -------------------------------------------------------------------------
+
+def test_router_validation():
+    with pytest.raises(ValueError):
+        ReplicaRouter([])
+    with pytest.raises(TypeError):
+        ReplicaRouter([object()])
+
+
+def test_router_jsq_and_affinity_end_to_end(dit):
+    cfg, model, params = dit
+    scheds = [SLOScheduler(_engine(model, params, slots=1),
+                           sched_policy="edf") for _ in range(2)]
+    router = ReplicaRouter(scheds, affinity={0: 1})
+    trace = [
+        DiffusionRequest(rid=0, label=1, seed=30, arrival_step=0,
+                         num_steps=4, guidance_scale=4.0, priority=1),
+        DiffusionRequest(rid=1, label=2, seed=31, arrival_step=0,
+                         num_steps=4, guidance_scale=4.0, priority=1),
+        DiffusionRequest(rid=2, label=3, seed=32, arrival_step=1,
+                         num_steps=4, guidance_scale=4.0, priority=0),
+        DiffusionRequest(rid=3, label=4, seed=33, arrival_step=1,
+                         num_steps=4, guidance_scale=4.0, priority=0),
+    ]
+    with pytest.raises(TypeError):
+        router.run(RequestQueue(trace, policy="edf"))
+    done = router.run(trace)
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+    # JSQ spreads the simultaneous best-effort pair across both replicas
+    assert {router.dispatched[0], router.dispatched[1]} == {0, 1}
+    # class 0 is pinned to replica 1 and neither replica is overloaded
+    # enough to break the soft affinity
+    assert router.dispatched[2] == 1 and router.dispatched[3] == 1
+    for sched in scheds:
+        mine = [r for r in done if router.dispatched[r.rid]
+                == scheds.index(sched)]
+        assert_solo_replay_parity(sched.engine, model, params,
+                                  "fastcache", mine)

@@ -21,7 +21,12 @@ Runtime half (imports the scanned package; skipped under ``--static-only``):
   * ``state["stats"]`` exists, every vector key is a per-sample ``(B,)``
     float, and the scalar ``steps`` key is present;
   * ``reset_rows`` preserves the treedef and every leaf's shape/dtype
-    (the engines feed it back through donated jit buffers).
+    (the engines feed it back through donated jit buffers);
+  * ``snapshot_rows``/``restore_rows`` (the preemption contract) likewise
+    preserve the state treedef and every leaf's shape/dtype through a
+    restore, and a same-state round trip is the bitwise identity — a
+    policy that breaks this silently corrupts preempted requests on
+    resume.
 
 The batch size is chosen to collide with no model dimension, so "has the
 batch dim" is unambiguous.
@@ -112,6 +117,7 @@ def validate_registry(root: Optional[str] = None) -> List[Diagnostic]:
     try:
         import jax
         import jax.numpy as jnp
+        import numpy as np
         from repro.configs import get_reduced
         from repro.configs.base import FastCacheConfig
         from repro.core.policies import base as policies_base
@@ -211,6 +217,56 @@ def validate_registry(root: Optional[str] = None) -> List[Diagnostic]:
                                  f"policy {name!r}: reset_rows changed "
                                  f"leaf {jax.tree_util.keystr(p0)} "
                                  f"shape/dtype"))
+        # preemption contract: snapshot_rows/restore_rows must hand the
+        # engines a restore that is treedef/shape/dtype-identical to the
+        # live state (donated jit buffers again), and restoring a
+        # snapshot into the very state it was taken from must be the
+        # bitwise identity (replicated leaves keep the live value; row
+        # leaves get their own rows written back)
+        rows = jnp.array([0, 2])
+        try:
+            snap = runner.snapshot_slot(state, rows)
+        except Exception as e:
+            diags.append(Diagnostic(*where, CHECK,
+                         f"policy {name!r}: snapshot_rows raised "
+                         f"{type(e).__name__}: {e}"))
+            continue
+        if jax.tree_util.tree_structure(snap) != td0:
+            diags.append(Diagnostic(*where, CHECK,
+                         f"policy {name!r}: snapshot_rows changed the "
+                         f"state treedef — restore_rows consumes the "
+                         f"snapshot leaf-for-leaf, and the engines' "
+                         f"jitted restore programs are traced against "
+                         f"the state treedef"))
+            continue
+        try:
+            restored = runner.restore_slot(state, snap, rows)
+        except Exception as e:
+            diags.append(Diagnostic(*where, CHECK,
+                         f"policy {name!r}: restore_rows raised "
+                         f"{type(e).__name__}: {e}"))
+            continue
+        if jax.tree_util.tree_structure(restored) != td0:
+            diags.append(Diagnostic(*where, CHECK,
+                         f"policy {name!r}: restore_rows changed the "
+                         f"state treedef — the engines feed it back "
+                         f"through donated jit buffers"))
+            continue
+        for (p0, l0), (_, l1) in zip(
+                leaves, jax.tree_util.tree_leaves_with_path(restored)):
+            if (getattr(l0, "shape", None) != getattr(l1, "shape", None)
+                    or getattr(l0, "dtype", None)
+                    != getattr(l1, "dtype", None)):
+                diags.append(Diagnostic(*where, CHECK,
+                             f"policy {name!r}: restore_rows changed "
+                             f"leaf {jax.tree_util.keystr(p0)} "
+                             f"shape/dtype"))
+            elif not np.array_equal(np.asarray(l0), np.asarray(l1)):
+                diags.append(Diagnostic(*where, CHECK,
+                             f"policy {name!r}: snapshot/restore round "
+                             f"trip is not the bitwise identity on leaf "
+                             f"{jax.tree_util.keystr(p0)} — preempted "
+                             f"requests would resume corrupted"))
     return diags
 
 
